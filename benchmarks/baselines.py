@@ -1,0 +1,80 @@
+"""Comparison systems: Clover-sim, pDPM-Direct-sim, FUSEE-CR, FUSEE-NC.
+
+Clover (semi-disaggregated, §2.2): clients read KV data one-sided but ALL
+index updates and allocations go through a monolithic metadata server.  The
+model executes the same per-op RTT schedule the paper describes (SEARCH:
+cached index + 1 READ; UPDATE/INSERT: write + metadata-server RPC) and caps
+throughput at the metadata server's core budget — Fig. 2's bottleneck.
+
+pDPM-Direct (fully client-managed, lock-based): every write takes a remote
+spin lock (CAS), updates index + data, unlocks.  Under Zipf contention the
+hot keys serialize: we model an M/D/1-style serialization of the hot-key
+mass (the measured contention model; Fig. 3/13's collapse) on top of the
+same RTT accounting.
+
+FUSEE-CR / FUSEE-NC run on the real simulator (replication_mode='cr',
+enable_cache=False).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+from .common import PAPER, WorkloadStats, zipf_keys
+
+
+# ------------------------------------------------------------- Clover-sim --
+def clover_tput(*, n_clients: int, mix: Dict[str, float], md_cores: float,
+                value_bytes: int = 1024, n_mns: int = 2,
+                coroutines: int = 8) -> Dict[str, float]:
+    """Throughput model for Clover with ``md_cores`` metadata-server cores."""
+    # RTTs per op (paper §2.2 workflow; index cached client-side)
+    rtt = {"search": 1, "update": 2, "insert": 2, "delete": 2}
+    md_ops = {"search": 0.0,      # metadata cached on clients
+              "update": 1.0, "insert": 1.0, "delete": 1.0}
+    avg_rtt = sum(rtt[k] * w for k, w in mix.items())
+    avg_md = sum(md_ops[k] * w for k, w in mix.items())
+    lat_s = avg_rtt * PAPER.rtt_us * 1e-6 + avg_md * PAPER.rpc_rtt_us * 1e-6
+    client_cap = n_clients * coroutines / lat_s
+    md_cap = (md_cores * PAPER.mdserver_ops_per_core_s / avg_md
+              if avg_md > 0 else np.inf)
+    bytes_per_op = value_bytes + 64
+    nic_cap = n_mns * (PAPER.link_gbps * 1e9 / 8) / bytes_per_op
+    overall = min(client_cap, md_cap, nic_cap)
+    return {"mops": overall / 1e6, "latency_us": lat_s * 1e6,
+            "md_cap_mops": md_cap / 1e6, "client_cap_mops": client_cap / 1e6}
+
+
+# -------------------------------------------------------- pDPM-Direct-sim --
+def pdpm_tput(*, n_clients: int, mix: Dict[str, float],
+              n_keys: int = 100_000, theta: float = 0.99,
+              value_bytes: int = 1024, n_mns: int = 2,
+              coroutines: int = 8) -> Dict[str, float]:
+    """Lock-based fully-disaggregated baseline with Zipf lock contention."""
+    # lock + read-modify-write + unlock; lock hold = 4 RTTs of work
+    rtt = {"search": 2, "update": 6, "insert": 6, "delete": 5}
+    hold_rtts = 4.0
+    avg_rtt = sum(rtt[k] * w for k, w in mix.items())
+    write_frac = sum(w for k, w in mix.items() if k != "search")
+    lat0 = avg_rtt * PAPER.rtt_us * 1e-6
+    demand = n_clients * coroutines / lat0          # offered load, ops/s
+    # serialization cap: hottest key's writes hold its lock exclusively
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    p = ranks ** (-theta)
+    p /= p.sum()
+    hot_mass = p[0]                                  # Zipf(0.99): ~7-10%
+    lock_rate = 1.0 / (hold_rtts * PAPER.rtt_us * 1e-6)
+    # writes to the hottest key cannot exceed lock_rate
+    cap_serial = (lock_rate / (hot_mass * write_frac)
+                  if write_frac > 0 else np.inf)
+    # retries amplify traffic as demand approaches the cap
+    util = min(demand / cap_serial, 0.999) if np.isfinite(cap_serial) else 0
+    retry_blowup = 1.0 / max(1.0 - util, 1e-3) if write_frac else 1.0
+    lat_s = lat0 * (1 + util * retry_blowup * write_frac)
+    client_cap = n_clients * coroutines / lat_s
+    nic_cap = n_mns * (PAPER.link_gbps * 1e9 / 8) / (value_bytes + 96)
+    overall = min(client_cap, cap_serial if write_frac else np.inf, nic_cap)
+    return {"mops": overall / 1e6, "latency_us": lat_s * 1e6,
+            "serial_cap_mops": cap_serial / 1e6}

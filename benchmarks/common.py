@@ -1,0 +1,156 @@
+"""Shared benchmark machinery: the network cost model that turns the event
+simulator's *executed* RTT/byte/CPU tallies into seconds, and a workload
+runner driving the FUSEE cluster simulation.
+
+The simulator executes every verb of every KV op (core/sim.py), so RTT
+counts, per-MN byte traffic, and MN-CPU op counts are measured, not
+assumed; this module only applies the testbed constants of §6.1
+(2 us one-sided RTT, 56 Gbps RNICs, weak MN cores) to produce the
+throughput/latency figures the paper reports.
+
+Throughput composition (all rates in ops/s):
+    client-limited  n_clients / avg_op_latency      (closed-loop clients)
+    NIC-limited     per-MN bandwidth cap at the busiest MN
+    MN-CPU-limited  ALLOC RPCs at the weak MN cores (two-level alloc
+                    makes this negligible for FUSEE; not for MN-centric)
+    overall         min of the applicable caps
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.fusee_paper import FuseePaperConfig
+from repro.core.heap import DMConfig, DMPool
+from repro.core.master import Master
+from repro.core.client import FuseeClient
+from repro.core.sim import Scheduler
+
+PAPER = FuseePaperConfig()
+
+
+def zipf_keys(n_keys: int, theta: float, size: int, rng) -> np.ndarray:
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    p = ranks ** (-theta)
+    p /= p.sum()
+    return rng.choice(n_keys, size=size, p=p)
+
+
+@dataclass
+class WorkloadStats:
+    n_ops: int
+    rtts_by_kind: Dict[str, float]       # avg critical-path RTTs per op
+    bg_rtts_by_kind: Dict[str, float]
+    mix: Dict[str, float]
+    mn_bytes_per_op: np.ndarray          # bytes at each MN / op
+    alloc_rpcs_per_op: float
+    invalid_fetches: int = 0
+    wall_s: float = 0.0
+
+
+def run_workload(*, n_clients: int, n_mns: int, replication: int = 2,
+                 mix: Dict[str, float], n_ops: int = 2000,
+                 n_keys: int = 512, theta: float = 0.99,
+                 value_words: int = 16, seed: int = 0,
+                 enable_cache: bool = True, cache_threshold: float = 0.5,
+                 replication_mode: str = "snapshot",
+                 preload: int = 256) -> WorkloadStats:
+    """Run a mixed workload on the event simulator; return measured stats."""
+    t0 = time.perf_counter()
+    cfg = DMConfig(num_mns=n_mns, replication=replication,
+                   region_words=1 << 15, regions_per_mn=16)
+    pool = DMPool(cfg, num_clients=n_clients, seed=seed)
+    master = Master(pool)
+    clients = [FuseeClient(i, pool, enable_cache=enable_cache,
+                           cache_threshold=cache_threshold,
+                           replication_mode=replication_mode, seed=seed)
+               for i in range(n_clients)]
+    sched = Scheduler(pool, master, seed=seed)
+    for c in clients:
+        sched.add_client(c)
+    rng = np.random.default_rng(seed)
+
+    # preload keys so SEARCH/UPDATE have targets
+    for k in range(preload):
+        rec = sched.submit(clients[k % n_clients].cid, "insert", k,
+                           [k] * value_words)
+        sched.run_round_robin()
+    pool.mn_bytes[:] = 0
+    base_cpu = sum(m.cpu_ops for m in pool.mns)
+
+    kinds = list(mix.keys())
+    probs = np.array([mix[k] for k in kinds], float)
+    probs /= probs.sum()
+    ops_left = n_ops
+    plan: Dict[int, List] = {c.cid: [] for c in clients}
+    for i in range(n_ops):
+        kind = kinds[int(rng.choice(len(kinds), p=probs))]
+        key = int(zipf_keys(n_keys, theta, 1, rng)[0]) % preload \
+            if kind != "insert" else preload + i
+        val = [i] * value_words if kind in ("insert", "update") else None
+        plan[clients[i % n_clients].cid].append((kind, key, val))
+
+    # closed-loop: every client always has one op in flight
+    done_records = []
+    active = {}
+    while True:
+        for cid, ops in plan.items():
+            if cid not in sched.running and ops:
+                kind, key, val = ops.pop(0)
+                active[cid] = sched.submit(cid, kind, key, val)
+        if not sched.running:
+            break
+        cids = list(sched.running.keys())
+        cid = cids[int(rng.integers(len(cids)))]
+        sched.step(cid, pick=int(rng.integers(4)))
+
+    recs = [r for r in sched.history if r.result is not None][preload:]
+    rtts, bg, cnt = {}, {}, {}
+    for r in recs:
+        rtts[r.kind] = rtts.get(r.kind, 0) + r.rtts
+        bg[r.kind] = bg.get(r.kind, 0) + r.bg_rtts
+        cnt[r.kind] = cnt.get(r.kind, 0) + 1
+    n = max(len(recs), 1)
+    alloc_rpcs = sum(m.cpu_ops for m in pool.mns) - base_cpu
+    return WorkloadStats(
+        n_ops=len(recs),
+        rtts_by_kind={k: rtts[k] / cnt[k] for k in rtts},
+        bg_rtts_by_kind={k: bg[k] / cnt[k] for k in bg},
+        mix={k: cnt[k] / n for k in cnt},
+        mn_bytes_per_op=pool.mn_bytes / n,
+        alloc_rpcs_per_op=alloc_rpcs / n,
+        wall_s=time.perf_counter() - t0,
+    )
+
+
+def throughput_mops(stats: WorkloadStats, *, n_clients: int,
+                    coroutines: int = 8,
+                    paper: FuseePaperConfig = PAPER) -> Dict[str, float]:
+    """Compose the measured tallies into an overall ops/s figure."""
+    avg_rtts = sum(stats.rtts_by_kind[k] * stats.mix[k]
+                   for k in stats.rtts_by_kind)
+    lat_s = avg_rtts * paper.rtt_us * 1e-6
+    client_cap = n_clients * coroutines / lat_s          # closed loop
+    nic_cap = np.inf
+    busiest = stats.mn_bytes_per_op.max()
+    if busiest > 0:
+        nic_cap = (paper.link_gbps * 1e9 / 8) / busiest
+    cpu_cap = np.inf
+    if stats.alloc_rpcs_per_op > 0:
+        cpu_cap = paper.mn_alloc_ops_per_s / stats.alloc_rpcs_per_op
+    overall = min(client_cap, nic_cap, cpu_cap)
+    return {"mops": overall / 1e6, "latency_us": avg_rtts * paper.rtt_us,
+            "client_cap_mops": client_cap / 1e6,
+            "nic_cap_mops": nic_cap / 1e6, "cpu_cap_mops": cpu_cap / 1e6,
+            "avg_rtts": avg_rtts}
+
+
+YCSB = {
+    "A": {"search": 0.5, "update": 0.5},
+    "B": {"search": 0.95, "update": 0.05},
+    "C": {"search": 1.0},
+    "D": {"search": 0.95, "insert": 0.05},
+}

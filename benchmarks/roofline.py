@@ -1,0 +1,62 @@
+"""§Roofline table: read the dry-run artifacts and print the three terms per
+(arch x shape x mesh), plus MODEL_FLOPS / HLO_FLOPs usefulness ratios."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_artifacts(art_dir: str = "artifacts") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(f) as fh:
+            d = json.load(fh)
+        if "roofline" not in d:
+            continue
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "step": d.get("step", "?"),
+            "t_compute_s": r["t_compute"], "t_memory_s": r["t_memory"],
+            "t_collective_s": r["t_collective"],
+            "bottleneck": r["bottleneck"],
+            "gb_per_dev": d["memory"]["per_device_bytes"] / 1e9,
+            "fits_16g": d["memory"]["fits_v5e_16g"],
+            "useful_ratio": d.get("useful_flops_ratio"),
+            "mfu_bound": (r["t_compute"] * d.get("useful_flops_ratio", 0)
+                          / max(r["t_bound"], 1e-30)),
+        })
+    return rows
+
+
+def run(art_dir: str = "artifacts") -> List[Dict]:
+    rows = load_artifacts(art_dir)
+    if not rows:
+        return [{"bench": "roofline",
+                 "note": "no artifacts; run repro.launch.dryrun --all first"}]
+    for r in rows:
+        r["bench"] = "roofline"
+    return rows
+
+
+def print_table(rows: List[Dict]):
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':6s} {'bottleneck':10s} "
+           f"{'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} {'GB/dev':>7s} "
+           f"{'fit':>4s} {'useful':>7s} {'MFU*':>6s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r.get("arch", ""), r.get("shape", ""),
+                                         r.get("mesh", ""))):
+        if "arch" not in r:
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{r['bottleneck']:10s} {r['t_compute_s']:9.2e} "
+              f"{r['t_memory_s']:9.2e} {r['t_collective_s']:9.2e} "
+              f"{r['gb_per_dev']:7.2f} {str(r['fits_16g'])[:4]:>4s} "
+              f"{r['useful_ratio']:7.3f} {r['mfu_bound']:6.3f}")
+
+
+if __name__ == "__main__":
+    print_table(run())

@@ -1,0 +1,119 @@
+"""Benchmark driver: one function per paper table/figure + roofline +
+serving.  Prints ``name,us_per_call,derived`` CSV rows per bench and writes
+the full row dump to bench_results.json.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig13] [--skip-serving]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-serving", action="store_true")
+    ap.add_argument("--out", default="bench_results.json")
+    args = ap.parse_args(argv)
+
+    from . import figures, roofline
+    benches = [(f.__name__, f) for f in figures.ALL_FIGURES]
+    benches.append(("roofline", roofline.run))
+    if not args.skip_serving:
+        from . import serving_bench
+        benches.append(("serving", serving_bench.run))
+
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+            dt = (time.perf_counter() - t0) * 1e6
+            derived = summarize(name, rows)
+            print(f"{name},{dt:.0f},{derived}", flush=True)
+            all_rows.extend(rows)
+        except Exception as e:  # pragma: no cover
+            print(f"{name},FAIL,{e!r}")
+            raise
+    with open(args.out, "w") as f:
+        json.dump(all_rows, f, indent=1, default=float)
+    validate_claims(all_rows)
+
+
+def summarize(name: str, rows) -> str:
+    if not rows:
+        return "no-rows"
+    if name == "fig13_ycsb_scale":
+        f = {(r["ycsb"], r["clients"], r["system"]): r["mops"] for r in rows}
+        sp_c = f[("A", 128, "fusee")] / max(f[("A", 128, "clover")], 1e-9)
+        sp_p = f[("A", 128, "fusee")] / max(f[("A", 128, "pdpm")], 1e-9)
+        return (f"YCSB-A@128: fusee={f[('A', 128, 'fusee')]:.2f}Mops "
+                f"{sp_c:.1f}x-clover {sp_p:.1f}x-pdpm")
+    if name == "tab1_recovery":
+        t = {r["step"]: r for r in rows}
+        return (f"total={t['total']['ms']:.1f}ms "
+                f"reconnect={t['reconnect_mr']['pct']:.0f}% "
+                f"traverse={t['traverse_log']['pct']:.1f}%")
+    if name == "fig1819_replication":
+        lat = {(r["r"], r["system"], r.get("op")): r.get("latency_us")
+               for r in rows if r["bench"] == "fig19"}
+        return (f"UPDATE r=1: fusee={lat.get((1, 'fusee', 'update'), 0):.1f}us"
+                f" r=5: fusee={lat.get((5, 'fusee', 'update'), 0):.1f}us"
+                f" cr={lat.get((5, 'fusee-cr', 'update'), 0):.1f}us")
+    if name == "roofline" and "arch" in rows[0]:
+        worst = min(rows, key=lambda r: r.get("mfu_bound", 1))
+        return (f"{len(rows)} cells; worst MFU-bound "
+                f"{worst['arch']}/{worst['shape']}={worst['mfu_bound']:.3f}")
+    return f"{len(rows)} rows"
+
+
+def validate_claims(rows):
+    """§Paper-claims quick checks (full narrative in EXPERIMENTS.md)."""
+    checks = []
+    f13 = {(r.get("ycsb"), r.get("clients"), r.get("system")): r["mops"]
+           for r in rows if r.get("bench") == "fig13"}
+    if f13:
+        sp = f13[("A", 128, "fusee")] / max(f13[("A", 128, "clover")], 1e-9)
+        checks.append(("fusee >= 4x clover @128 clients (paper: 4.9x)",
+                       sp >= 4.0, f"{sp:.1f}x"))
+        spp = f13[("A", 128, "fusee")] / max(f13[("A", 128, "pdpm")], 1e-9)
+        checks.append(("fusee >> pdpm @128 clients (paper: 117x)",
+                       spp >= 20.0, f"{spp:.0f}x"))
+    f19 = [(r["r"], r["system"], r["latency_us"]) for r in rows
+           if r.get("bench") == "fig19" and r.get("op") == "update"]
+    if f19:
+        fus = {r: l for r, s, l in f19 if s == "fusee"}
+        cr = {r: l for r, s, l in f19 if s == "fusee-cr"}
+        flat = fus[5] / fus[1]
+        lin = cr[5] / cr[1]
+        checks.append(("SNAPSHOT latency ~flat in r; CR grows linearly",
+                       flat < 1.8 and lin > 2.0,
+                       f"fusee x{flat:.2f}, cr x{lin:.2f} from r=1->5"))
+    t1 = {r["step"]: r for r in rows if r.get("bench") == "tab1"}
+    if t1:
+        checks.append(("recovery dominated by reconnect (paper: 92%)",
+                       t1["reconnect_mr"]["pct"] > 80,
+                       f"{t1['reconnect_mr']['pct']:.0f}%"))
+    f17 = {r["alloc"]: r["mops"] for r in rows
+           if r.get("bench") == "fig17" and r.get("ycsb") == "A"}
+    if f17:
+        drop = 1 - f17["mn-centric"] / f17["two-level"]
+        checks.append(("MN-centric alloc collapses under YCSB-A (paper: -90.9%)",
+                       drop > 0.5, f"-{100 * drop:.0f}%"))
+    print("\n== paper-claims validation ==")
+    ok = True
+    for name, passed, detail in checks:
+        print(f"  [{'PASS' if passed else 'FAIL'}] {name}: {detail}")
+        ok &= passed
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Serving-path benchmarks: FUSEE pool ops batched on-device, prefix-cache
+effect in the engine, and the race_lookup kernel vs its oracle."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def bench_pool_ops() -> List[Dict]:
+    from repro.serving import KVPool, PoolConfig
+    rows = []
+    pool = KVPool(PoolConfig(n_pages=8192, n_buckets=2048,
+                             slots_per_bucket=8, replicas=3))
+    keys = np.arange(1, 4001).astype(np.int32)
+    pages = pool.alloc_pages(0, len(keys))
+    pool.write_pages(0, pages, keys, opcode=1)
+    t0 = time.perf_counter()
+    ok = pool.insert_batch(0, keys, pages)
+    t_ins = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(5):
+        ptr, found = pool.search(keys)
+    t_s = (time.perf_counter() - t0) / 5
+    rows.append({"bench": "serving_pool", "op": "insert_batch",
+                 "n": len(keys), "wall_s": t_ins,
+                 "success": float(ok.mean()),
+                 "epochs": pool.stats["epochs"]})
+    rows.append({"bench": "serving_pool", "op": "search_batch",
+                 "n": len(keys), "wall_s": t_s,
+                 "hit": float(found.mean()),
+                 "mops_host": len(keys) / t_s / 1e6})
+    return rows
+
+
+def bench_race_kernel() -> List[Dict]:
+    from repro.kernels import race_lookup, race_lookup_ref
+    rows = []
+    nb, spb = 2048, 8
+    rng = np.random.default_rng(0)
+    index = jnp.asarray(rng.integers(0, 2**31 - 1, (nb, spb)), jnp.int32)
+    keys = jnp.asarray(rng.integers(1, 2**31 - 1, 4096), jnp.int32)
+    for name, fn in (("kernel_interpret",
+                      lambda: race_lookup(keys, index)),
+                     ("ref_jnp", lambda: race_lookup(keys, index,
+                                                     use_kernel=False))):
+        out = fn()
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(fn())
+        rows.append({"bench": "race_lookup", "impl": name, "n_keys": 4096,
+                     "us_per_call": (time.perf_counter() - t0) / 3 * 1e6})
+    return rows
+
+
+def bench_engine_prefix() -> List[Dict]:
+    from repro.configs import base as C
+    from repro.models import build
+    from repro.serving import PoolConfig, Request, ServeEngine
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    r = C.reduced(C.get("llama3-8b"))
+    m = build(r, mesh)
+    params = m.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, r.vocab, 128).astype(np.int32)
+    rows = []
+    for label, make_prompt in (
+            ("shared_prefix", lambda i: np.concatenate(
+                [shared, rng.integers(0, r.vocab, 16).astype(np.int32)])),
+            ("disjoint", lambda i: rng.integers(0, r.vocab, 144)
+             .astype(np.int32))):
+        eng = ServeEngine(m, params, max_batch=4, max_len=256,
+                          pool_cfg=PoolConfig(n_pages=1024, n_buckets=256,
+                                              slots_per_bucket=8))
+        for i in range(8):
+            eng.submit(Request(rid=i, prompt=make_prompt(i), max_new=4))
+        t0 = time.perf_counter()
+        done = eng.run(max_ticks=200)
+        rows.append({"bench": "engine", "workload": label,
+                     "finished": len(done), "ticks": eng.steps,
+                     "wall_s": time.perf_counter() - t0,
+                     "prefix_hits": sum(q.prefix_hits for q in done),
+                     "pool_epochs": eng.pool.stats["epochs"]})
+    return rows
+
+
+def run() -> List[Dict]:
+    return bench_pool_ops() + bench_race_kernel() + bench_engine_prefix()

@@ -1,0 +1,58 @@
+"""Quickstart: the FUSEE KV store end-to-end in 60 seconds.
+
+1. the paper-faithful event-level store (SNAPSHOT + two-level alloc +
+   embedded log) — insert/search/update/delete + crash recovery;
+2. the serving-side pool: batched device-resident index ops.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import DMConfig, FuseeCluster
+from repro.serving import KVPool, PoolConfig
+
+
+def main():
+    print("== 1. event-level FUSEE store (paper protocol, verb by verb) ==")
+    cluster = FuseeCluster(DMConfig(num_mns=4, replication=3), num_clients=2)
+    kv = cluster.store(0)
+    kv2 = cluster.store(1)
+    r = kv.insert(42, [1, 2, 3])
+    print(f" INSERT k=42           -> {r.status}, {r.rtts} RTTs "
+          f"(first op: +2 one-time block-grant/list-head RTTs; steady = 4)")
+    r = kv2.search(42)
+    print(f" SEARCH k=42 (other)   -> {r.status} value={r.value} "
+          f"{r.rtts} RTTs")
+    r = kv.update(42, [9, 9])
+    print(f" UPDATE k=42           -> {r.status}, rule={r.rule}, "
+          f"{r.rtts} RTTs")
+    r = kv.delete(42)
+    print(f" DELETE k=42           -> {r.status}, {r.rtts} RTTs")
+
+    print("\n crash client 0 mid-flight, recover from the embedded log:")
+    for k in range(8):
+        kv.insert(100 + k, [k])
+    cluster.crash_client(0)
+    stats = cluster.recover_client(0, reassign_to_cid=1)
+    print(f" recovery: used={stats.used_objects} "
+          f"reclaimed={stats.reclaimed_objects} "
+          f"redone={stats.redone_ops} (reconnect {stats.reconnect_ms}ms)")
+    print(f" data survives: k=104 -> {cluster.store(1).get(104)}")
+
+    print("\n== 2. serving pool (batched, device-resident, jitted) ==")
+    pool = KVPool(PoolConfig(n_pages=1024, n_buckets=256,
+                             slots_per_bucket=8, replicas=3))
+    keys = np.arange(1, 257).astype(np.int32)
+    pages = pool.alloc_pages(cid=0, n=len(keys))
+    pool.write_pages(0, pages, keys, opcode=1)
+    ok = pool.insert_batch(0, keys, pages)
+    ptr, found = pool.search(keys)
+    print(f" batched INSERT x{len(keys)}: success={ok.mean():.2f} "
+          f"in {pool.stats['epochs']} SNAPSHOT epoch(s)")
+    print(f" batched SEARCH x{len(keys)}: hits={found.mean():.2f} "
+          f"(race_lookup kernel)")
+    print(f" index replicas converged: {pool.check_replicas_converged()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Sharded, atomic, async checkpointing with elastic restore."""
+from .checkpoint import (CheckpointManager, load_checkpoint,  # noqa: F401
+                         save_checkpoint)

@@ -1,0 +1,193 @@
+"""Sharded checkpointing: npz-per-leaf-group + JSON manifest.
+
+Design (what a 1000-node deployment needs, scaled to this repo):
+
+* **Sharded write**: every leaf is saved independently (chunked by leading
+  axis into ``shards`` files) so N hosts can each write their slice; here a
+  thread pool stands in for the host fleet.
+* **Atomic commit**: writes go to ``step_XXXX.tmp/``; a manifest (pytree
+  structure, shapes, dtypes, shard layout, step, data-pipeline cursor) is
+  written last and the directory is atomically renamed.  A crash mid-save
+  leaves the previous checkpoint intact; ``latest()`` only ever sees
+  committed directories.
+* **Async save**: ``save_async`` snapshots device arrays to host (blocking
+  only for D2H) and writes in a background thread — the train loop continues.
+* **Elastic restore**: the manifest stores *logical* arrays; ``load`` reads
+  and reassembles full arrays then re-shards onto the *current* mesh, so a
+  job can restart on a different topology (e.g. 256 -> 512 chips) — the
+  dry-run's multi-pod mesh can load a single-pod checkpoint.
+* **Integrity**: per-file crc32 recorded in the manifest and verified on
+  load (bit-rot / torn-write detection).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _leaf_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((name, leaf))
+    return out
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, *, extra: Dict = None,
+                    shards: int = 4, workers: int = 8) -> str:
+    """Synchronous sharded save with atomic commit.  Returns final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+    leaves = _leaf_paths(host_tree)
+    manifest: Dict[str, Any] = {"step": step, "extra": extra or {},
+                                "leaves": {}}
+
+    def write_leaf(item):
+        name, arr = item
+        arr = np.asarray(arr)
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or "bfloat16" in logical_dtype:
+            # numpy cannot round-trip ml_dtypes (bf16 etc.): store the raw
+            # bits as uint16 and record the logical dtype in the manifest
+            arr = arr.view(np.uint16)
+        fname = name.replace("/", "__")
+        entries = []
+        if arr.ndim >= 1 and arr.shape[0] >= shards and arr.nbytes > 1 << 20:
+            chunks = np.array_split(arr, shards, axis=0)
+            for i, ch in enumerate(chunks):
+                f = f"{fname}.shard{i}.npy"
+                np.save(os.path.join(tmp, f), ch)
+                entries.append({"file": f, "crc": _crc(ch),
+                                "rows": int(ch.shape[0])})
+        else:
+            f = f"{fname}.npy"
+            np.save(os.path.join(tmp, f), arr)
+            entries.append({"file": f, "crc": _crc(arr),
+                            "rows": int(arr.shape[0]) if arr.ndim else -1})
+        return name, {"shape": list(arr.shape), "dtype": logical_dtype,
+                      "shards": entries}
+
+    with ThreadPoolExecutor(max_workers=workers) as ex:
+        for name, meta in ex.map(write_leaf, leaves):
+            manifest["leaves"][name] = meta
+
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def load_checkpoint(ckpt_dir: str, tree_like, *, step: Optional[int] = None,
+                    mesh=None, specs=None, verify: bool = True):
+    """Load (latest or specific step) and re-shard onto ``mesh``+``specs``.
+
+    ``tree_like``: a pytree with the target structure (abstract ok).
+    Returns (tree, step, extra).
+    """
+    path = (os.path.join(ckpt_dir, f"step_{step:08d}") if step is not None
+            else latest(ckpt_dir))
+    assert path is not None, f"no checkpoint in {ckpt_dir}"
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    names = dict(_leaf_paths(tree_like))
+
+    def read_leaf(name):
+        meta = manifest["leaves"][name]
+        parts = []
+        for e in meta["shards"]:
+            arr = np.load(os.path.join(path, e["file"]))
+            if verify and _crc(arr) != e["crc"]:
+                raise IOError(f"checksum mismatch in {e['file']}")
+            parts.append(arr)
+        full = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+        if "bfloat16" in meta["dtype"] and full.dtype == np.uint16:
+            import ml_dtypes
+            full = full.view(ml_dtypes.bfloat16)
+        assert list(full.shape) == meta["shape"], (name, full.shape)
+        return full
+
+    flat_names = [n for n, _ in _leaf_paths(tree_like)]
+    with ThreadPoolExecutor(max_workers=8) as ex:
+        arrays = list(ex.map(read_leaf, flat_names))
+
+    treedef = jax.tree_util.tree_structure(tree_like)
+    loaded = jax.tree_util.tree_unflatten(treedef, arrays)
+    # restore dtypes (npz preserves them; bf16 survives via ml_dtypes)
+    loaded = jax.tree.map(
+        lambda ref, arr: jnp.asarray(arr, dtype=ref.dtype), tree_like, loaded)
+    if mesh is not None and specs is not None:
+        from jax.sharding import NamedSharding
+        loaded = jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+            loaded, specs)
+    return loaded, manifest["step"], manifest.get("extra", {})
+
+
+def latest(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp")
+                   and os.path.exists(os.path.join(ckpt_dir, d, MANIFEST)))
+    return os.path.join(ckpt_dir, steps[-1]) if steps else None
+
+
+class CheckpointManager:
+    """Async saves + retention.  ``save_async`` returns immediately after the
+    device->host snapshot; the write happens on a background thread."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._pending: Optional[threading.Thread] = None
+        self.saved_steps: List[int] = []
+
+    def save_async(self, step: int, tree, extra: Dict = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)  # D2H snapshot
+
+        def work():
+            save_checkpoint(self.ckpt_dir, step, host_tree, extra=extra)
+            self._gc()
+
+        self._pending = threading.Thread(target=work, daemon=True)
+        self._pending.start()
+        self.saved_steps.append(step)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.ckpt_dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, d), ignore_errors=True)
+
+    def latest(self) -> Optional[str]:
+        return latest(self.ckpt_dir)

@@ -1,0 +1,10 @@
+"""Assigned-architecture configs (``--arch <id>``) + the paper's own config."""
+from .base import (ALL_SHAPES, ArchConfig, DECODE_32K, LONG_500K, MoEConfig,
+                   PREFILL_32K, SSMConfig, ShapeSpec, TRAIN_4K, all_archs,
+                   cells, get, reduced, register)
+from .fusee_paper import FuseePaperConfig
+
+__all__ = ["ArchConfig", "ShapeSpec", "MoEConfig", "SSMConfig", "get",
+           "all_archs", "cells", "reduced", "register", "TRAIN_4K",
+           "PREFILL_32K", "DECODE_32K", "LONG_500K", "ALL_SHAPES",
+           "FuseePaperConfig"]

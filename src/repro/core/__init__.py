@@ -1,0 +1,9 @@
+"""FUSEE core: the paper's contribution (SNAPSHOT replication, two-level
+memory management, embedded operation logs, failure recovery) plus the
+event-level disaggregated-memory simulation substrate."""
+from .events import EXISTS, FULL, NOT_FOUND, OK, OpResult  # noqa: F401
+from .heap import DMConfig, DMPool, INDEX_REGION, META_REGION  # noqa: F401
+from .client import FuseeClient  # noqa: F401
+from .master import Master  # noqa: F401
+from .sim import Scheduler, run_ops_concurrently  # noqa: F401
+from .store import FuseeCluster, KVStore  # noqa: F401

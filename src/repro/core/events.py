@@ -1,0 +1,67 @@
+"""Verb / phase vocabulary shared by the client state machines, the master,
+and the scheduler (sim.py).
+
+A client op is a Python generator that yields ``Phase`` objects.  One phase is
+one doorbell-batched verb group = **1 network RTT** (§4.6 RDMA optimizations:
+doorbell batching + selective signaling make each phase a single round trip).
+The scheduler executes the verbs of a phase one at a time, interleaved with
+other clients' verbs (preserving per-(client, MN) FIFO), then resumes the
+generator with the result list.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+
+@dataclass
+class Verb:
+    kind: str                 # 'read' | 'write' | 'cas' | 'faa' | 'alloc' | 'free'
+    region: int = 0
+    replica: int = 0
+    off: int = 0
+    n: int = 0                # read length (words)
+    words: Optional[list] = None
+    exp: int = 0
+    new: int = 0
+    delta: int = 0
+    mn: int = -1              # alloc/free RPC target
+
+    def target_mn(self, pool) -> int:
+        if self.kind in ("alloc", "free"):
+            return self.mn
+        reps = pool.placement.get(self.region)
+        if reps is None or self.replica >= len(reps):
+            return -1
+        return reps[self.replica]
+
+
+@dataclass
+class Phase:
+    verbs: List[Verb]
+    label: str = ""
+    background: bool = False   # off the op's latency critical path (§4.4 frees,
+                               # loser used-bit resets) but still bandwidth-counted
+
+
+@dataclass
+class MasterCall:
+    """Client->master RPC (Alg 4 fail_query etc.). Costs rpc_rtts round trips."""
+    kind: str                  # 'fail_query' | 'refresh' | 'init' | 'fail_report'
+    payload: Any = None
+
+
+# Op result statuses
+OK = "OK"
+NOT_FOUND = "NOT_FOUND"
+EXISTS = "EXISTS"
+FULL = "FULL"
+
+
+@dataclass
+class OpResult:
+    status: str
+    value: Optional[list] = None
+    rtts: int = 0              # critical-path RTTs actually spent
+    bg_rtts: int = 0           # background round trips
+    rule: Optional[str] = None # winning SNAPSHOT rule, for Fig-9/RTT accounting

@@ -1,0 +1,244 @@
+"""The disaggregated-memory pool: passive memory nodes + one-sided verbs.
+
+This is the event-level (NumPy) substrate used by the protocol simulator,
+tests, and the paper benchmarks.  It models exactly what the paper's MNs
+provide (§2.1): READ / WRITE / CAS / FAA at 8-byte-word atomicity, plus the
+compute-light ALLOC/FREE RPC handled by the MN's 1-2 weak cores.
+
+Faithfulness notes
+------------------
+* A verb addressed to a crashed MN returns ``FAIL`` (layout.FAIL) — the
+  crash-stop model of §5.1.
+* Verbs are atomic at word granularity; multi-word READ/WRITE are *not*
+  atomic as a group unless executed within one scheduler tick.  The scheduler
+  (sim.py) interleaves verbs from different clients arbitrarily while
+  preserving per-(client, MN) FIFO order, which is the RDMA QP ordering the
+  paper's used-bit argument relies on.
+* Memory is organized as 2GB-analogue *regions*, consistent-hashed onto r MNs
+  (FaRM-style, §4.4).  A 48-bit pointer names (region, offset) so one pointer
+  resolves to all r physical replicas.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import layout as L
+
+
+@dataclass
+class DMConfig:
+    num_mns: int = 4
+    replication: int = 2            # r: data + index replication factor
+    region_words: int = 1 << 14     # scaled-down 2 GB region
+    block_words: int = 1 << 9       # scaled-down 16 MB block
+    regions_per_mn: int = 8         # primary regions initially owned per MN
+    index_buckets: int = 256        # RACE: combined-bucket count (power of 2)
+    slots_per_bucket: int = 7
+    size_classes: int = 6
+    # network model constants live in netmodel.py; kept out of the pool.
+
+    @property
+    def blocks_per_region(self) -> int:
+        # one BAT word per block, bitmap ahead of each block's payload
+        return self.region_words // (self.block_words + 1)
+
+    @property
+    def bat_words(self) -> int:
+        return self.blocks_per_region
+
+    @property
+    def bitmap_words(self) -> int:
+        max_objs = self.block_words // L.MIN_OBJ_WORDS
+        return (max_objs + 63) // 64
+
+    @property
+    def block_payload_words(self) -> int:
+        return self.block_words - self.bitmap_words
+
+    @property
+    def index_words(self) -> int:
+        return self.index_buckets * self.slots_per_bucket
+
+
+INDEX_REGION = 0   # replicated hash-index region
+META_REGION = 1    # per-client metadata (per-size-class list heads)
+FIRST_DATA_REGION = 2
+
+META_WORDS_PER_CLIENT = 64  # sc list heads + scratch
+
+
+class MemoryNode:
+    """A passive memory node.  Owns replica copies of regions."""
+
+    def __init__(self, mid: int, cfg: DMConfig):
+        self.mid = mid
+        self.cfg = cfg
+        self.alive = True
+        self.regions: Dict[int, np.ndarray] = {}
+        # MN-side coarse allocation cursor per primary region (compute-light)
+        self.alloc_cursor: Dict[int, int] = {}
+        self.cpu_ops = 0  # number of MN-CPU operations served (for netmodel)
+
+    def host_region(self, region_id: int):
+        self.regions[region_id] = np.zeros(self.cfg.region_words, dtype=np.uint64)
+
+    def drop_region(self, region_id: int):
+        self.regions.pop(region_id, None)
+
+
+class DMPool:
+    """The full memory pool + placement. Verbs are synchronous and atomic."""
+
+    def __init__(self, cfg: DMConfig, num_clients: int = 64, seed: int = 0):
+        self.cfg = cfg
+        self.num_clients = num_clients
+        self.mns = [MemoryNode(i, cfg) for i in range(cfg.num_mns)]
+        self.epoch = 0
+        # region -> ordered list of MN ids (replica 0 = primary)
+        self.placement: Dict[int, List[int]] = {}
+        self._place_initial(seed)
+        # traffic accounting (bytes in+out per MN) for the network model
+        self.mn_bytes = np.zeros(cfg.num_mns, dtype=np.int64)
+
+    # ---------------- placement -------------------------------------------
+    def _ring_replicas(self, region_id: int) -> List[int]:
+        """Consistent hashing: region -> r successive MNs on the hash ring."""
+        alive = [m.mid for m in self.mns]
+        start = L.hash64(region_id, seed=3) % len(alive)
+        r = min(self.cfg.replication, len(alive))
+        return [alive[(start + i) % len(alive)] for i in range(r)]
+
+    def _place_initial(self, seed: int):
+        cfg = self.cfg
+        total_regions = FIRST_DATA_REGION + cfg.num_mns * cfg.regions_per_mn
+        for g in range(total_regions):
+            reps = self._ring_replicas(g)
+            self.placement[g] = reps
+            for mid in reps:
+                self.mns[mid].host_region(g)
+        self.num_regions = total_regions
+
+    def replicas(self, region_id: int) -> List[int]:
+        return self.placement[region_id]
+
+    def primary_mn(self, region_id: int) -> int:
+        return self.placement[region_id][0]
+
+    def data_regions_of_mn(self, mid: int) -> List[int]:
+        return [g for g in range(FIRST_DATA_REGION, self.num_regions)
+                if self.placement[g][0] == mid]
+
+    # ---------------- verbs -------------------------------------------------
+    def _mem(self, region: int, replica: int) -> Optional[np.ndarray]:
+        reps = self.placement.get(region)
+        if reps is None or replica >= len(reps):
+            return None
+        mn = self.mns[reps[replica]]
+        if not mn.alive:
+            return None
+        return mn.regions.get(region)
+
+    def read(self, region: int, replica: int, off: int, n: int):
+        mem = self._mem(region, replica)
+        if mem is None:
+            return None  # FAIL
+        self.mn_bytes[self.placement[region][replica]] += n * L.WORD
+        return mem[off:off + n].copy()
+
+    def write(self, region: int, replica: int, off: int, words) -> bool:
+        mem = self._mem(region, replica)
+        if mem is None:
+            return False
+        w = np.asarray([int(x) & 0xFFFF_FFFF_FFFF_FFFF for x in words], dtype=np.uint64)
+        mem[off:off + len(w)] = w
+        self.mn_bytes[self.placement[region][replica]] += len(w) * L.WORD
+        return True
+
+    def cas(self, region: int, replica: int, off: int, exp: int, new: int):
+        """Atomic compare-and-swap; returns the *old* value (RDMA semantics)."""
+        mem = self._mem(region, replica)
+        if mem is None:
+            return None
+        old = np.uint64(mem[off])
+        if int(old) == int(exp) & 0xFFFF_FFFF_FFFF_FFFF:
+            mem[off] = np.uint64(int(new) & 0xFFFF_FFFF_FFFF_FFFF)
+        self.mn_bytes[self.placement[region][replica]] += 2 * L.WORD
+        return old
+
+    def faa(self, region: int, replica: int, off: int, delta: int):
+        mem = self._mem(region, replica)
+        if mem is None:
+            return None
+        old = int(mem[off])
+        mem[off] = np.uint64((old + int(delta)) & 0xFFFF_FFFF_FFFF_FFFF)
+        self.mn_bytes[self.placement[region][replica]] += 2 * L.WORD
+        return np.uint64(old)
+
+    # ---------------- MN-side coarse allocation (ALLOC RPC, §4.4) ----------
+    def alloc_block(self, mid: int, cid: int):
+        """MN-side handler: grab a free block from one of this MN's primary
+        regions, record CID in the BAT of *all* region replicas, return
+        (region_id, block_idx).  Compute-light: a cursor bump + r BAT writes.
+        """
+        mn = self.mns[mid]
+        if not mn.alive:
+            return None
+        cfg = self.cfg
+        for g in self.data_regions_of_mn(mid):
+            cur = mn.alloc_cursor.get(g, 0)
+            while cur < cfg.blocks_per_region:
+                bat = mn.regions[g]
+                if int(bat[cur]) == 0:
+                    for rep_idx, rep_mid in enumerate(self.placement[g]):
+                        rep = self.mns[rep_mid]
+                        if rep.alive and g in rep.regions:
+                            rep.regions[g][cur] = np.uint64(cid + 1)
+                    mn.alloc_cursor[g] = cur + 1
+                    mn.cpu_ops += 1
+                    return g, cur
+                cur += 1
+            mn.alloc_cursor[g] = cur
+        return None  # MN out of memory
+
+    def free_block(self, mid: int, region: int, block_idx: int):
+        mn = self.mns[mid]
+        if not mn.alive:
+            return False
+        for rep_mid in self.placement[region]:
+            rep = self.mns[rep_mid]
+            if rep.alive and region in rep.regions:
+                rep.regions[region][block_idx] = np.uint64(0)
+        mn.cpu_ops += 1
+        return True
+
+    # ---------------- block geometry ---------------------------------------
+    def block_base(self, block_idx: int) -> int:
+        """Word offset of a block's payload (bitmap comes first)."""
+        cfg = self.cfg
+        return cfg.bat_words + block_idx * cfg.block_words + cfg.bitmap_words
+
+    def bitmap_base(self, block_idx: int) -> int:
+        cfg = self.cfg
+        return cfg.bat_words + block_idx * cfg.block_words
+
+    # ---------------- failure injection ------------------------------------
+    def crash_mn(self, mid: int):
+        self.mns[mid].alive = False
+
+    def recover_mn_placement(self, region: int, new_replicas: List[int]):
+        """Master-side: re-home a region on a new replica set (copies bytes)."""
+        src = None
+        for mid in self.placement[region]:
+            mn = self.mns[mid]
+            if mn.alive and region in mn.regions:
+                src = mn.regions[region]
+                break
+        assert src is not None, "region lost: more than r-1 MN failures"
+        for mid in new_replicas:
+            mn = self.mns[mid]
+            if region not in mn.regions:
+                mn.regions[region] = src.copy()
+        self.placement[region] = list(new_replicas)

@@ -1,0 +1,343 @@
+"""The FUSEE master (§5): a fault-tolerant cluster-management process.
+
+The master is off every critical path; it only (1) initializes clients/MNs,
+(2) recovers from MN crashes (Alg. 3 — representative-last-writer slot
+repair + region re-homing), and (3) recovers crashed clients from their
+embedded operation logs (§5.3: memory re-management + index repair).
+
+Simplification vs. the paper (documented in DESIGN.md): the master itself is
+assumed replicated/fault-tolerant (as in the paper) and its recovery
+procedures execute atomically at one scheduler tick; client<->master RPCs are
+charged `rpc_rtts` round trips by the network model.  The *client-side*
+protocol under failures (Alg. 4) is fully interleaved and schedule-driven.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import layout as L
+from . import race
+from .client import MASTER_COMMIT_MARK, FuseeClient
+from .events import OK, OpResult
+from .heap import (FIRST_DATA_REGION, INDEX_REGION, META_REGION,
+                   META_WORDS_PER_CLIENT, DMPool)
+
+
+@dataclass
+class RecoveryStats:
+    reconnect_ms: float = 0.0
+    get_metadata_rtts: int = 0
+    traverse_log_rtts: int = 0
+    recover_requests_rtts: int = 0
+    construct_free_list_rtts: int = 0
+    redone_ops: int = 0
+    fixed_primaries: int = 0
+    reclaimed_objects: int = 0
+    used_objects: int = 0
+
+
+class Master:
+    def __init__(self, pool: DMPool, *, reconnect_ms: float = 163.1):
+        self.pool = pool
+        self.reconnect_ms = reconnect_ms
+        self.handled_mn_crashes: set = set()
+        self.clients: Dict[int, FuseeClient] = {}
+
+    def register(self, client: FuseeClient):
+        self.clients[client.cid] = client
+
+    # ------------------------------------------------------------------ MN
+    def detect_dead_mns(self) -> List[int]:
+        return [m.mid for m in self.pool.mns
+                if not m.alive and m.mid not in self.handled_mn_crashes]
+
+    def maybe_recover_mns(self) -> bool:
+        dead = self.detect_dead_mns()
+        if not dead:
+            return False
+        # disconnection phase: notify clients (lease expiry)
+        for c in self.clients.values():
+            if not c.crashed:
+                c.notified_prepare = True
+        for mid in dead:
+            self._recover_mn(mid)
+            self.handled_mn_crashes.add(mid)
+        # commit membership change
+        self.pool.epoch += 1
+        for c in self.clients.values():
+            if not c.crashed:
+                c.epoch = self.pool.epoch
+                c.notified_prepare = False
+        return True
+
+    def _recover_mn(self, mid: int):
+        pool = self.pool
+        # 1. slot repair on the index (Alg 3, modification phase): for every
+        #    slot where alive replicas disagree, adopt an alive *backup* value
+        #    (backups are never older than the primary under SNAPSHOT).
+        reps = pool.placement[INDEX_REGION]
+        alive = [(i, r) for i, r in enumerate(reps) if pool.mns[r].alive]
+        if alive:
+            arrays = [pool.mns[r].regions[INDEX_REGION] for _, r in alive]
+            n = pool.cfg.index_words
+            for off in range(n):
+                vals = [int(a[off]) for a in arrays]
+                if all(v == vals[0] for v in vals):
+                    continue
+                backup_vals = [int(a[off]) for (i, _), a in zip(alive, arrays) if i > 0]
+                chosen = backup_vals[0] if backup_vals else vals[0]
+                for a in arrays:
+                    a[off] = np.uint64(chosen)
+                self._commit_log_of(chosen)
+        # 2. region re-homing: every region with a replica on the dead MN gets
+        #    a fresh replica on the next alive ring successor; the first alive
+        #    replica becomes primary.
+        alive_mids = [m.mid for m in pool.mns if m.alive]
+        for g, reps in list(pool.placement.items()):
+            if mid not in reps:
+                continue
+            survivors = [r for r in reps if pool.mns[r].alive]
+            assert survivors, f"region {g} lost (>= r simultaneous MN failures)"
+            candidates = [m for m in alive_mids if m not in survivors]
+            new_reps = survivors + candidates[:len(reps) - len(survivors)]
+            pool.recover_mn_placement(g, new_reps)
+
+    def _commit_log_of(self, slot_val: int):
+        """Write MASTER_COMMIT_MARK into the old_value field of the object the
+        chosen slot value points to, so client recovery never redoes it."""
+        if slot_val == 0:
+            return
+        ptr = L.slot_ptr(slot_val)
+        sc = L.slot_size_class(slot_val)
+        region, off = L.ptr_region(ptr), L.ptr_offset(ptr)
+        n = L.size_class_words(sc)
+        crc = L.crc8([MASTER_COMMIT_MARK])
+        for rep_mid in self.pool.placement.get(region, []):
+            mn = self.pool.mns[rep_mid]
+            if mn.alive and region in mn.regions:
+                mem = mn.regions[region]
+                mem[off + n - 3] = np.uint64(MASTER_COMMIT_MARK)
+                mid_w = int(mem[off + n - 2])
+                mem[off + n - 2] = np.uint64(int(L.pack_log_mid(
+                    L.log_mid_next(mid_w), L.log_mid_opcode(mid_w), crc)))
+
+    # ------------------------------------------------------------- queries
+    def fail_query(self, slot_off: int, **_) -> Optional[int]:
+        """Alg 4 line 35: return the decided value for a slot (post-repair)."""
+        self.maybe_recover_mns()
+        v = self.pool.read(INDEX_REGION, 0, slot_off, 1)
+        assert v is not None, "primary index replica unavailable after recovery"
+        return int(v[0])
+
+    def bucket_query(self, off: int):
+        self.maybe_recover_mns()
+        v = self.pool.read(INDEX_REGION, 0, off, self.pool.cfg.slots_per_bucket)
+        return list(v)
+
+    # ------------------------------------------------------------- clients
+    def recover_client(self, cid: int, *, reassign_to: Optional[FuseeClient] = None
+                       ) -> RecoveryStats:
+        """§5.3: memory re-management + index repair from the embedded log.
+
+        Returns stats mirroring Table 1.  If ``reassign_to`` is given, the
+        crashed client's blocks/free-lists are handed to that client
+        (elastic replacement); otherwise they stay master-managed.
+        """
+        pool = self.pool
+        st = RecoveryStats(reconnect_ms=self.reconnect_ms)
+        self.maybe_recover_mns()
+
+        # -- step 1: find all blocks owned by cid via the BATs (MN-side scan)
+        owned: List[Tuple[int, int]] = []  # (region, block_idx)
+        for g in range(FIRST_DATA_REGION, pool.num_regions):
+            prim = pool.primary_mn(g)
+            mem = pool.mns[prim].regions.get(g)
+            if mem is None:
+                continue
+            for b in range(pool.cfg.blocks_per_region):
+                if int(mem[b]) == cid + 1:
+                    owned.append((g, b))
+        st.construct_free_list_rtts += max(1, len(owned) // 16)
+
+        # -- step 2: read per-size-class list heads (meta region)
+        base = cid * META_WORDS_PER_CLIENT
+        heads_raw = pool.read(META_REGION, 0, base, pool.cfg.size_classes)
+        heads = [int(h) for h in (heads_raw if heads_raw is not None else [])]
+        st.get_metadata_rtts += 1
+
+        # -- step 3: traverse per-size-class linked lists; gather log entries
+        tail_entries = []  # (ptr, sc, obj)
+        for sc, head in enumerate(heads):
+            if head == 0:
+                continue
+            ptr, hops, seen = head, 0, set()
+            last_used = None
+            while ptr != 0 and ptr not in seen and hops < 1 << 16:
+                seen.add(ptr)
+                hops += 1
+                region, off = L.ptr_region(ptr), L.ptr_offset(ptr)
+                raw = pool.read(region, 0, off, L.size_class_words(sc))
+                if raw is None:
+                    break
+                obj = L.parse_object(list(raw))
+                st.traverse_log_rtts += 1
+                if obj["used"]:
+                    last_used = (ptr, sc, obj)
+                    st.used_objects += 1
+                ptr = obj["next_ptr"]
+            if last_used is not None:
+                tail_entries.append(last_used)
+
+        # -- step 4: index repair (the at-most-one in-flight request per list)
+        for (ptr, sc, obj) in tail_entries:
+            st.recover_requests_rtts += 2
+            self._repair_entry(cid, ptr, sc, obj, st)
+
+        # -- step 5: memory re-management: scan blocks, rebuild free lists
+        free_lists: Dict[int, List[int]] = {}
+        for (g, b) in owned:
+            mem = pool.mns[pool.primary_mn(g)].regions[g]
+            bm_base = pool.bitmap_base(b)
+            blk_base = pool.block_base(b)
+            # size class of the block = inferred from first used object, else
+            # reclaim whole block at min granularity
+            sc = self._infer_block_sc(mem, blk_base)
+            scw = L.size_class_words(sc)
+            n_objs = pool.cfg.block_payload_words // scw
+            for i in range(n_objs):
+                off = blk_base + i * scw
+                bit_idx = (off - blk_base) // L.MIN_OBJ_WORDS
+                freed = bool(int(mem[bm_base + bit_idx // 64]) >> (bit_idx % 64) & 1)
+                tail = int(mem[off + scw - 1])
+                used = L.log_tail_used(tail)
+                if used and not freed:
+                    continue  # still-live object
+                free_lists.setdefault(sc, []).append(L.pack_ptr(g, off))
+                st.reclaimed_objects += 1
+            st.construct_free_list_rtts += 1
+            if reassign_to is not None:
+                # re-own the block: rewrite BAT entries to the new client
+                for rep_mid in pool.placement[g]:
+                    mn = pool.mns[rep_mid]
+                    if mn.alive and g in mn.regions:
+                        mn.regions[g][b] = np.uint64(reassign_to.cid + 1)
+
+        if reassign_to is not None:
+            for sc, ptrs in free_lists.items():
+                s = reassign_to._sc_state(sc)
+                for p in ptrs:
+                    s.free.append(p)
+                for (g, b) in owned:
+                    if (g, b) not in s.blocks:
+                        s.blocks.append((g, b))
+        return st
+
+    def _infer_block_sc(self, mem, blk_base: int) -> int:
+        for sc in range(self.pool.cfg.size_classes):
+            scw = L.size_class_words(sc)
+            tail = int(mem[blk_base + scw - 1])
+            if L.log_tail_used(tail):
+                return sc
+        return 0
+
+    def _repair_entry(self, cid: int, ptr: int, sc: int, obj, st: RecoveryStats):
+        """§5.3 index repair decision tree for one in-flight log entry."""
+        pool = self.pool
+        old_v = int(obj["old_value"])
+        crc_ok = obj["old_crc"] == L.crc8([old_v]) and old_v != 0
+        key = obj["key"]
+        v_new = int(L.pack_slot(L.fingerprint(key), sc, ptr))
+        if not obj["crc_ok"]:
+            # c0: crashed while writing the KV pair itself -> reclaim silently
+            self._reclaim_obj(ptr, sc)
+            return
+        if not crc_ok:
+            # c1 (or a non-returned loser): old value incomplete -> REDO the
+            # request on the client's behalf, via the normal SNAPSHOT path.
+            st.redone_ops += 1
+            self._redo(cid, key, obj, v_new, sc, ptr)
+            return
+        if old_v == MASTER_COMMIT_MARK:
+            return  # already committed by the master during MN recovery
+        # complete old value: the entry belongs to a round winner (c2/c3)
+        slot_off = self._find_slot_of(key, old_v, v_new)
+        if slot_off is None:
+            return
+        cur = pool.read(INDEX_REGION, 0, slot_off, 1)
+        if cur is not None and int(cur[0]) == old_v:
+            # c2: winner crashed after commit, before the primary CAS
+            for i in range(len(pool.placement[INDEX_REGION])):
+                pool.cas(INDEX_REGION, i, slot_off, old_v, v_new)
+            st.fixed_primaries += 1
+        # else c3: finished; nothing to do
+
+    def _find_slot_of(self, key: int, *vals) -> Optional[int]:
+        cfg = self.pool.cfg
+        for off in race.slot_offsets(key, cfg.index_buckets, cfg.slots_per_bucket):
+            cur = self.pool.read(INDEX_REGION, 0, off, 1)
+            if cur is not None and int(cur[0]) in [int(v) for v in vals]:
+                return off
+        return None
+
+    def _redo(self, cid: int, key: int, obj, v_new: int, sc: int, ptr: int):
+        """Re-execute the crashed request.  The KV object already exists, so
+        the redo is the index write only, run through the SNAPSHOT protocol
+        (the master acts as an ordinary writer, §5.4)."""
+        opcode = obj["opcode"]
+        target_v_new = 0 if opcode == L.OPCODE_DELETE else v_new
+        cfg = self.pool.cfg
+        # locate the slot: existing entry for key, else an empty slot
+        slot_off, v_old = None, 0
+        offs = race.slot_offsets(key, cfg.index_buckets, cfg.slots_per_bucket)
+        for off in offs:
+            cur = self.pool.read(INDEX_REGION, 0, off, 1)
+            if cur is None:
+                continue
+            w = int(cur[0])
+            if w != 0 and L.slot_fp(w) == L.fingerprint(key) and w != v_new:
+                raw = self.pool.read(L.ptr_region(L.slot_ptr(w)), 0,
+                                     L.ptr_offset(L.slot_ptr(w)),
+                                     L.size_class_words(L.slot_size_class(w)))
+                if raw is not None and L.parse_object(list(raw))["key"] == key:
+                    slot_off, v_old = off, w
+                    break
+            if w == v_new:
+                slot_off, v_old = off, w  # already applied
+                break
+        if slot_off is None:
+            if opcode == L.OPCODE_DELETE:
+                self._reclaim_obj(ptr, sc)
+                return
+            for off in offs:
+                cur = self.pool.read(INDEX_REGION, 0, off, 1)
+                if cur is not None and int(cur[0]) == 0:
+                    slot_off, v_old = off, 0
+                    break
+        if slot_off is None:
+            return
+        if v_old != int(target_v_new):
+            # atomic redo: CAS backups then primary (master is the only
+            # recovery writer for this client; concurrent client writers are
+            # handled by CAS atomicity exactly as in SNAPSHOT)
+            r = len(self.pool.placement[INDEX_REGION])
+            okb = all(int(self.pool.cas(INDEX_REGION, i, slot_off, v_old,
+                                        target_v_new)) == v_old
+                      for i in range(1, r)) if r > 1 else True
+            if okb:
+                self.pool.cas(INDEX_REGION, 0, slot_off, v_old, target_v_new)
+        # commit the log so the op is never redone twice
+        self._commit_log_of(v_new)
+        if opcode == L.OPCODE_DELETE:
+            self._reclaim_obj(ptr, sc)
+
+    def _reclaim_obj(self, ptr: int, sc: int):
+        region, off = L.ptr_region(ptr), L.ptr_offset(ptr)
+        scw = L.size_class_words(sc)
+        tail = int(L.pack_log_tail(0, used=False))
+        for rep_mid in self.pool.placement.get(region, []):
+            mn = self.pool.mns[rep_mid]
+            if mn.alive and region in mn.regions:
+                mn.regions[region][off + scw - 1] = np.uint64(tail)

@@ -1,0 +1,243 @@
+"""Event-level concurrency scheduler for the FUSEE protocol simulation.
+
+Clients are generators yielding ``Phase``s (doorbell-batched verb groups) and
+``MasterCall``s.  The scheduler executes *one verb per tick*, chosen by a
+schedule (hypothesis-controlled in tests, RNG-driven in benchmarks), while
+preserving per-(client, MN) FIFO ordering — the RDMA QP ordering guarantee
+the paper's embedded-log used-bit argument depends on (§4.5).
+
+Crash injection: ``crash_client`` freezes a client at an arbitrary verb
+boundary (partially executed phase = partially written doorbell batch);
+``crash_mn`` makes every verb touching that MN return FAIL (crash-stop §5.1).
+
+The scheduler also keeps the raw *history* (invocation/response ticks per op)
+consumed by the linearizability checker in tests, and the RTT / byte traffic
+tallies consumed by the network performance model (netmodel.py).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .client import FuseeClient
+from .events import MasterCall, OpResult, Phase, Verb
+from .heap import DMPool
+from .master import Master
+
+
+@dataclass
+class OpRecord:
+    cid: int
+    op_id: int
+    kind: str                  # 'search' | 'insert' | 'update' | 'delete'
+    key: int
+    value: Optional[list]
+    inv_tick: int
+    resp_tick: int = -1
+    result: Optional[OpResult] = None
+    rtts: int = 0
+    bg_rtts: int = 0
+
+
+@dataclass
+class _Running:
+    gen: Any
+    record: OpRecord
+    # outstanding verbs of the current phase, grouped per target MN (FIFO)
+    queues: Dict[int, List[Tuple[int, Verb]]] = field(default_factory=dict)
+    results: List[Any] = field(default_factory=list)
+    n_verbs: int = 0
+    phase: Optional[Phase] = None
+    master_call: Optional[MasterCall] = None
+    done: bool = False
+
+
+class Scheduler:
+    def __init__(self, pool: DMPool, master: Master, *, seed: int = 0):
+        self.pool = pool
+        self.master = master
+        self.rng = np.random.default_rng(seed)
+        self.tick = 0
+        self.running: Dict[int, _Running] = {}   # cid -> in-flight op
+        self.history: List[OpRecord] = []
+        self._op_counter = itertools.count()
+        self.clients: Dict[int, FuseeClient] = {}
+
+    # ------------------------------------------------------------- spawning
+    def add_client(self, client: FuseeClient):
+        self.clients[client.cid] = client
+        self.master.register(client)
+
+    def submit(self, cid: int, kind: str, key: int, value=None) -> OpRecord:
+        assert cid not in self.running, f"client {cid} already has an op in flight"
+        client = self.clients[cid]
+        assert not client.crashed
+        gen = {
+            "search": lambda: client.op_search(key),
+            "insert": lambda: client.op_insert(key, value),
+            "update": lambda: client.op_update(key, value),
+            "delete": lambda: client.op_delete(key),
+            "reclaim": lambda: client.op_reclaim(),
+        }[kind]()
+        rec = OpRecord(cid=cid, op_id=next(self._op_counter), kind=kind,
+                       key=key, value=value, inv_tick=self.tick)
+        self.history.append(rec)
+        run = _Running(gen=gen, record=rec)
+        self.running[cid] = run
+        self._advance(run, None)  # prime to the first phase
+        return rec
+
+    # ------------------------------------------------------------ execution
+    def _advance(self, run: _Running, send_value):
+        """Resume the generator until it yields the next phase or finishes."""
+        try:
+            item = run.gen.send(send_value)
+        except StopIteration as stop:
+            res: OpResult = stop.value
+            run.record.result = res
+            run.record.resp_tick = self.tick
+            run.done = True
+            self.running.pop(run.record.cid, None)
+            return
+        if isinstance(item, MasterCall):
+            run.master_call = item
+            run.phase = None
+            return
+        assert isinstance(item, Phase)
+        run.phase = item
+        run.queues = {}
+        run.results = [None] * len(item.verbs)
+        run.n_verbs = len(item.verbs)
+        if item.background:
+            run.record.bg_rtts += 1
+        else:
+            run.record.rtts += 1
+        if not item.verbs:   # empty phase = pure wait (1 RTT beat)
+            self._advance(run, [])
+            return
+        for idx, verb in enumerate(item.verbs):
+            mn = verb.target_mn(self.pool)
+            run.queues.setdefault(mn, []).append((idx, verb))
+
+    def eligible(self, cid: int) -> bool:
+        run = self.running.get(cid)
+        return run is not None and not run.done
+
+    def step(self, cid: int, pick: int = 0) -> bool:
+        """Execute one verb (or master call) of client ``cid``.
+
+        ``pick`` chooses among the client's per-MN FIFO queues, enabling the
+        schedule to explore cross-MN orderings within a doorbell batch.
+        Returns False if the client has nothing to do.
+        """
+        self.tick += 1
+        run = self.running.get(cid)
+        if run is None:
+            return False
+        if run.master_call is not None:
+            call = run.master_call
+            run.master_call = None
+            ans = self._master_dispatch(call)
+            self._advance(run, ans)
+            return True
+        if run.phase is None:
+            return False
+        keys = sorted(run.queues.keys())
+        if not keys:
+            return False
+        mn = keys[pick % len(keys)]
+        idx, verb = run.queues[mn].pop(0)
+        if not run.queues[mn]:
+            del run.queues[mn]
+        run.results[idx] = self._exec_verb(verb, cid)
+        run.n_verbs -= 1
+        if run.n_verbs == 0:
+            self._advance(run, run.results)
+        return True
+
+    def _exec_verb(self, v: Verb, cid: int):
+        p = self.pool
+        if v.kind == "read":
+            return p.read(v.region, v.replica, v.off, v.n)
+        if v.kind == "write":
+            ok = p.write(v.region, v.replica, v.off, v.words)
+            return True if ok else None
+        if v.kind == "cas":
+            return p.cas(v.region, v.replica, v.off, v.exp, v.new)
+        if v.kind == "faa":
+            return p.faa(v.region, v.replica, v.off, v.delta)
+        if v.kind == "alloc":
+            return p.alloc_block(v.mn, cid)
+        if v.kind == "free":
+            return p.free_block(v.mn, v.region, v.off)
+        raise ValueError(v.kind)
+
+    def _master_dispatch(self, call: MasterCall):
+        if call.kind == "fail_query":
+            return self.master.fail_query(**{k: v for k, v in call.payload.items()
+                                             if k == "slot_off"})
+        if call.kind == "bucket_query":
+            return self.master.bucket_query(call.payload["off"])
+        if call.kind == "fail_report":
+            self.master.maybe_recover_mns()
+            return None
+        raise ValueError(call.kind)
+
+    # ------------------------------------------------------------- failure
+    def crash_client(self, cid: int):
+        """Crash-stop at the current verb boundary: in-flight doorbell batch
+        stays partially executed (exactly the paper's failure model)."""
+        self.running.pop(cid, None)
+        self.clients[cid].crashed = True
+
+    def crash_mn(self, mid: int):
+        self.pool.crash_mn(mid)
+
+    # ------------------------------------------------------------- driving
+    def run_round_robin(self, max_ticks: int = 1_000_000):
+        """Drive all in-flight ops to completion, round-robin."""
+        ticks = 0
+        while self.running and ticks < max_ticks:
+            for cid in list(self.running.keys()):
+                if self.step(cid):
+                    ticks += 1
+        assert not self.running, "ops did not converge (possible livelock)"
+
+    def run_random(self, rng=None, max_ticks: int = 2_000_000):
+        rng = rng or self.rng
+        ticks = 0
+        while self.running and ticks < max_ticks:
+            cids = list(self.running.keys())
+            cid = cids[int(rng.integers(len(cids)))]
+            self.step(cid, pick=int(rng.integers(4)))
+            ticks += 1
+        assert not self.running, "ops did not converge (possible livelock)"
+
+    def run_schedule(self, schedule, max_extra: int = 500_000):
+        """Drive with an explicit (cid, pick) schedule; fall back to
+        round-robin once the schedule is exhausted (ensures completion)."""
+        for (cid, pick) in schedule:
+            if not self.running:
+                return
+            cids = sorted(self.running.keys())
+            self.step(cids[cid % len(cids)], pick=pick)
+        self.run_round_robin(max_ticks=max_extra)
+
+
+def run_ops_concurrently(pool: DMPool, master: Master, ops, *, seed=0,
+                         schedule=None) -> List[OpRecord]:
+    """Convenience: submit ``ops`` = [(client, kind, key, value)], run all."""
+    sched = Scheduler(pool, master, seed=seed)
+    for c in {c for (c, *_ ) in ops}:
+        sched.add_client(c)
+    recs = []
+    for (client, kind, key, value) in ops:
+        recs.append(sched.submit(client.cid, kind, key, value))
+    if schedule is not None:
+        sched.run_schedule(schedule)
+    else:
+        sched.run_random()
+    return recs

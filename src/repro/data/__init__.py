@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipeline."""
+from .pipeline import DataConfig, SyntheticLM, make_batch_specs  # noqa: F401

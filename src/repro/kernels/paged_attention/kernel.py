@@ -1,0 +1,89 @@
+"""Pallas TPU paged decode-attention kernel.
+
+One query token per sequence attends over the FUSEE block pool
+``(n_blocks, t_blk, B, KV, hd)`` — the same page-major layout the
+disaggregated KV store serves (pages = FUSEE objects; the leading axis is
+what shards over "memory nodes").
+
+Grid: (B * H, n_blocks).  The page axis is the *minor* grid dim, so the
+online-softmax state (m, l, acc) lives in VMEM scratch across page visits
+and the output is committed once on the last page — a single-pass
+flash-decode.  Page tiles (t_blk, hd) stream HBM->VMEM at MXU-aligned
+shapes; masking uses absolute positions derived from the page index, so
+partially-filled tail pages are handled without branching.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, t_blk, n_blocks, scale):
+    pg = pl.program_id(1)
+
+    @pl.when(pg == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32) * scale       # (1, hd)
+    k = k_ref[...].astype(jnp.float32)               # (t_blk, hd)
+    v = v_ref[...].astype(jnp.float32)
+    s = (k @ q.T)[:, 0]                              # (t_blk,)
+    pos = pg * t_blk + jax.lax.iota(jnp.int32, t_blk)
+    s = jnp.where(pos < vl_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.exp(s - m_new)                           # (t_blk,)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + (p[None, :] @ v)
+    m_ref[0] = m_new
+
+    @pl.when(pg == n_blocks - 1)
+    def _commit():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[0], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+def paged_attention_fwd(q, kc, vc, valid_len, *, interpret: bool = True):
+    """q: (B, H, hd); kc/vc: (nb, tb, B, KV, hd) -> (B, H, hd)."""
+    nb, tb, B, KV, hd = kc.shape
+    H = q.shape[1]
+    G = H // KV
+    scale = hd ** -0.5
+    vl = jnp.reshape(valid_len.astype(jnp.int32), (1,))
+    grid = (B * H, nb)
+
+    kernel = functools.partial(_decode_kernel, t_blk=tb, n_blocks=nb,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # valid_len
+            pl.BlockSpec((None, 1, hd), lambda bh, pg: (bh // H, bh % H, 0)),
+            pl.BlockSpec((None, tb, None, None, hd),
+                         lambda bh, pg: (pg, 0, bh // H, (bh % H) // G, 0)),
+            pl.BlockSpec((None, tb, None, None, hd),
+                         lambda bh, pg: (pg, 0, bh // H, (bh % H) // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, hd),
+                               lambda bh, pg: (bh // H, bh % H, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),       # m
+            pltpu.VMEM((1,), jnp.float32),       # l
+            pltpu.VMEM((1, hd), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(vl, q, kc, vc)

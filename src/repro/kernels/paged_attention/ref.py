@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for paged decode attention over the FUSEE block pool."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, kc, vc, valid_len):
+    """q: (B, H, hd); kc/vc: (nb, tb, B, KV, hd); valid_len: scalar int.
+
+    Attention of one query token per sequence over the block-paged cache,
+    masked to the first ``valid_len`` positions.  Returns (B, H, hd).
+    """
+    nb, tb, B, KV, hd = kc.shape
+    H = q.shape[1]
+    G = H // KV
+    qf = q.astype(jnp.float32)
+    k = kc.astype(jnp.float32).transpose(2, 3, 0, 1, 4).reshape(B, KV, nb * tb, hd)
+    v = vc.astype(jnp.float32).transpose(2, 3, 0, 1, 4).reshape(B, KV, nb * tb, hd)
+    k = jnp.repeat(k, G, axis=1)           # (B, H, T, hd)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhd,bhtd->bht", qf, k) * (hd ** -0.5)
+    mask = jnp.arange(nb * tb) < valid_len
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bht,bhtd->bhd", p, v)
+    return o.astype(q.dtype)

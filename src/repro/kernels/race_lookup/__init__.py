@@ -1,0 +1,3 @@
+from .ops import race_lookup  # noqa: F401
+from .ref import (bucket_pair, fingerprint, hash32,  # noqa: F401
+                  race_lookup_ref)

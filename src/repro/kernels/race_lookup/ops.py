@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the RACE index-probe kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import race_lookup_fwd
+from .ref import race_lookup_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_keys"))
+def race_lookup(keys, index, *, block_keys: int = 256, use_kernel: bool = True):
+    """Batched RACE probe: keys (N,) int32, index (n_buckets, spb) int32
+    -> (ptr (N,) int32, found (N,) bool)."""
+    if not use_kernel:
+        return race_lookup_ref(keys, index)
+    return race_lookup_fwd(keys, index, block_keys=block_keys,
+                           interpret=not _on_tpu())

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the batched RACE index probe.
+
+Shares the 32-bit hash/slot packing with the JAX serving pool
+(serving/slots_jax.py): a slot is ``fp:8 | ptr:24`` in a uint32-as-int32
+word; fp 0 is reserved for "empty"/mismatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MASK24 = (1 << 24) - 1
+
+
+def hash32(x, seed: int):
+    """xorshift-multiply hash on int32 lanes (exactly mirrored in-kernel)."""
+    import numpy as np
+    x = x.astype(jnp.uint32) + np.uint32(0x9E3779B9 * (seed + 1) & 0xFFFFFFFF)
+    x = (x ^ (x >> 16)) * np.uint32(0x85EBCA6B)
+    x = (x ^ (x >> 13)) * np.uint32(0xC2B2AE35)
+    return (x ^ (x >> 16)).astype(jnp.uint32)
+
+
+def fingerprint(keys):
+    fp = (hash32(keys, 7) >> 24).astype(jnp.int32)
+    return jnp.where(fp == 0, 1, fp)
+
+
+def bucket_pair(keys, n_buckets: int):
+    b1 = (hash32(keys, 1) % n_buckets).astype(jnp.int32)
+    b2 = (hash32(keys, 2) % n_buckets).astype(jnp.int32)
+    b2 = jnp.where(b2 == b1, (b1 + 1) % n_buckets, b2)
+    return b1, b2
+
+
+def race_lookup_ref(keys, index):
+    """keys: (N,) int32; index: (n_buckets, slots) int32 (fp:8|ptr:24).
+
+    Returns (ptr, found): ptr (N,) int32 (0 if miss), found (N,) bool.
+    First fp-matching slot wins, bucket-1 slots before bucket-2 slots.
+    """
+    nb, spb = index.shape
+    b1, b2 = bucket_pair(keys, nb)
+    fp = fingerprint(keys)
+    rows = jnp.stack([index[b1], index[b2]], axis=1).reshape(keys.shape[0],
+                                                             2 * spb)
+    slot_fp = (rows >> 24) & 0xFF
+    match = slot_fp == fp[:, None]
+    any_match = jnp.any(match, axis=1)
+    first = jnp.argmax(match, axis=1)
+    picked = jnp.take_along_axis(rows, first[:, None], axis=1)[:, 0]
+    ptr = jnp.where(any_match, picked & MASK24, 0)
+    return ptr.astype(jnp.int32), any_match

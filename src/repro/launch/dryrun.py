@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any other import: jax locks the device count on first
+#   initialization.  The dry-run (and ONLY the dry-run) needs 512 placeholder
+#   devices to build the production mesh.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes, prove memory fit, and extract the roofline
+terms from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/
+
+Per cell this produces (artifacts/<arch>__<shape>__<mesh>.json):
+    memory_analysis   bytes per device (argument/temp/output)
+    cost_analysis     XLA's per-device flops/bytes (body-once; see
+                      hlo_analysis for trip-count-corrected totals)
+    roofline          compute / memory / collective terms in seconds
+    collectives       per-kind wire bytes
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as C
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models import (batch_specs, build, input_specs, param_stats,
+                          pick_rules)
+from repro.models.sharding import MeshRules
+from repro.optim import OptConfig, Optimizer
+from repro.train.trainer import make_train_step, pick_microbatches
+
+V5E_HBM_PER_CHIP = 16e9
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def lower_cell(cfg: C.ArchConfig, shape: C.ShapeSpec, mesh,
+               rules: Optional[MeshRules] = None,
+               n_micro: Optional[int] = None):
+    """Lower + compile one cell; returns (compiled, model, meta)."""
+    rules = rules or pick_rules(cfg, shape, mesh)
+    model = build(cfg, mesh, rules)
+    specs = input_specs(model, shape)
+    bspecs = batch_specs(model, shape)
+    pspecs = model.param_specs()
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt = Optimizer(OptConfig(moments=cfg.opt_moments))
+        if n_micro is None:
+            n_micro = pick_microbatches(model, shape.global_batch,
+                                        shape.seq_len)
+        step = make_train_step(model, opt, n_micro=n_micro)
+        params_abs = model.abstract_params()
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        state_abs = {"params": params_abs, "opt": opt_abs}
+        state_specs = {"params": pspecs, "opt": opt.state_specs(pspecs)}
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(jax.tree.map(lambda s: _ns(mesh, s), state_specs,
+                                           is_leaf=_is_spec),
+                              jax.tree.map(lambda s: _ns(mesh, s), bspecs,
+                                           is_leaf=_is_spec)),
+                donate_argnums=0,
+            ).lower(state_abs, specs)
+            compiled = lowered.compile()
+        meta = {"step": "train_step", "n_micro": n_micro}
+    elif shape.kind == "prefill":
+        params_abs = model.abstract_params()
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"],
+                                 frames=batch.get("frames"))
+
+        with mesh:
+            lowered = jax.jit(
+                prefill_step,
+                in_shardings=(jax.tree.map(lambda s: _ns(mesh, s), pspecs,
+                                           is_leaf=_is_spec),
+                              jax.tree.map(lambda s: _ns(mesh, s), bspecs,
+                                           is_leaf=_is_spec)),
+            ).lower(params_abs, specs)
+            compiled = lowered.compile()
+        meta = {"step": "prefill"}
+    else:  # decode / long-decode: serve_step
+        params_abs = model.abstract_params()
+
+        def serve_step(params, cache, token):
+            return model.decode_step(params, cache, token)
+
+        with mesh:
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(jax.tree.map(lambda s: _ns(mesh, s), pspecs,
+                                           is_leaf=_is_spec),
+                              jax.tree.map(lambda s: _ns(mesh, s),
+                                           bspecs["cache"], is_leaf=_is_spec),
+                              _ns(mesh, bspecs["token"])),
+                donate_argnums=1,
+            ).lower(params_abs, specs["cache"], specs["token"])
+            compiled = lowered.compile()
+        meta = {"step": "serve_step"}
+    meta["compile_s"] = round(time.time() - t0, 1)
+    meta["fallbacks"] = [
+        (str(a), int(b) if b else None, list(c))
+        for a, b, c in model.resolver.fallbacks]
+    return compiled, model, meta
+
+
+def _is_spec(x):
+    return isinstance(x, P)
+
+
+def panel_hints(cfg: C.ArchConfig, shape: C.ShapeSpec):
+    """Trailing-dim pairs of tensors the Pallas kernels keep in VMEM
+    (attention score panels, SSD/mLSTM chunk masks) — see hlo_analysis."""
+    hints = set()
+    if shape.kind in ("train", "prefill"):
+        S = shape.seq_len
+        qc = min(cfg.attn_chunk_q, S)
+        while S % qc:
+            qc //= 2
+        hints |= {(qc, S), (S, qc)}
+        if cfg.enc_dec:
+            e = cfg.enc_seq
+            qe = min(cfg.attn_chunk_q, e)
+            while e % qe:
+                qe //= 2
+            hints |= {(qe, e), (e, qe), (qc, e), (e, qc)}
+        if cfg.ssm is not None:
+            c = min(cfg.ssm.chunk, S)
+            hints.add((c, c))
+    return sorted(hints)
+
+
+def analyze_cell(compiled, model, mesh, shape: C.ShapeSpec, meta: Dict
+                 ) -> Dict:
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    costs = H.analyze(compiled.as_text(),
+                      panel_dims=panel_hints(model.cfg, shape))
+    n_chips = mesh.devices.size
+    terms = H.roofline(costs, peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW,
+                       ici_bw=ICI_BW)
+    stats = param_stats(model)
+    # MODEL_FLOPS: 6*N*D for train (fwd+bwd), 2*N*D forward-only; decode D=new
+    # tokens.  N excludes embeddings (active params for MoE).
+    D = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                              else (shape.seq_len if shape.kind == "prefill"
+                                    else 1))
+    N = stats["active_non_embed"]
+    model_flops = (6 if shape.kind == "train" else 2) * N * D
+    useful = model_flops / max(costs.flops * n_chips, 1.0)
+    bytes_per_dev = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                     + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    # model-derived state floor: params (+cache) at declared dtypes under
+    # the resolved shardings — the honest TPU-side residency, free of the
+    # CPU backend's f32-normalization copies that inflate temp_bytes.
+    pspecs = model.param_specs()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def sharded_bytes(leaf, spec):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        denom = 1
+        for part in spec:
+            for ax in ((part,) if isinstance(part, str) else (part or ())):
+                denom *= sizes.get(ax, 1)
+        return n * leaf.dtype.itemsize / denom
+
+    state_floor = sum(jax.tree.leaves(jax.tree.map(
+        sharded_bytes, model.abstract_params(), pspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))))
+    return {
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "per_device_bytes": bytes_per_dev,
+            "param_floor_bytes": state_floor,
+            "fits_v5e_16g": bool(bytes_per_dev <= V5E_HBM_PER_CHIP),
+        },
+        "xla_cost_analysis": {k: ca.get(k) for k in
+                              ("flops", "bytes accessed") if k in ca},
+        "roofline": terms,
+        "collectives": {k: v for k, v in costs.coll_by_kind.items()},
+        "collective_counts": {k: v for k, v in costs.n_collectives.items()},
+        "top_collectives": dict(sorted(costs.coll_by_shape.items(),
+                                       key=lambda kv: -kv[1])[:8]),
+        "top_hbm": dict(sorted(costs.hbm_by_shape.items(),
+                               key=lambda kv: -kv[1])[:8]),
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful,
+        "params": stats,
+        "n_chips": n_chips,
+        **meta,
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             rules: Optional[MeshRules] = None,
+             n_micro: Optional[int] = None) -> Dict:
+    cfg = C.get(arch)
+    shape = {s.name: s for s in C.ALL_SHAPES}[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    compiled, model, meta = lower_cell(cfg, shape, mesh, rules, n_micro)
+    out = analyze_cell(compiled, model, mesh, shape, meta)
+    out.update({"arch": arch, "shape": shape_name, "mesh": mesh_kind})
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for cfg, shape in C.cells():
+            for mesh_kind in ("single", "multi"):
+                cells.append((cfg.arch_id, shape.name, mesh_kind))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape, args.mesh))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape, mesh_kind in cells:
+        tag = f"{arch}__{shape}__{mesh_kind}"
+        try:
+            res = run_cell(arch, shape, mesh_kind)
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(res, f, indent=1, default=float)
+            r = res["roofline"]
+            print(f"OK   {tag:60s} compile={res['compile_s']:6.1f}s "
+                  f"mem/dev={res['memory']['per_device_bytes']/1e9:7.2f}GB "
+                  f"bottleneck={r['bottleneck']:10s} "
+                  f"t=({r['t_compute']:.2e},{r['t_memory']:.2e},"
+                  f"{r['t_collective']:.2e})s", flush=True)
+        except Exception as e:
+            failures.append((tag, repr(e)))
+            print(f"FAIL {tag}: {e!r}", flush=True)
+            if not args.quiet:
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        sys.exit(1)
+    print(f"\nall {len(cells)} cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,534 @@
+"""Roofline-term extraction from compiled (post-SPMD) HLO.
+
+XLA's ``compiled.cost_analysis()`` on this backend (a) reports *per-device*
+numbers and (b) counts every ``while`` body ONCE regardless of trip count.
+This module re-derives totals by parsing ``compiled.as_text()``:
+
+* computations are parsed into op lists (shapes, operands, metadata);
+* ``while`` trip counts are recovered from the loop-condition comparison
+  constant (scan-lowered loops compare an induction variable against a
+  literal);
+* FLOPs: every ``dot`` (2 * |output| * contracted size), multiplied through
+  the enclosing while/fusion/call chain;
+* HBM bytes: per *kernel* (top-level op in a scheduled computation) as
+  operand bytes + output bytes — fusions count their boundary, not their
+  internals, matching how fused kernels touch HBM once;
+* collective bytes: per-device wire traffic per op kind (ring model:
+  all-reduce 2x shard bytes, all-gather/reduce-scatter 1x, all-to-all 1x,
+  collective-permute 1x), times trip counts.
+
+Validated against an unrolled-vs-scanned differential test (tests/).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_KIND_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _parse_op_line(line: str):
+    """'%n = <type> kind(operands), attrs' -> (name, type, kind, rest).
+
+    Tuple types contain parens and even '=' (in /*index=N*/ comments), so
+    the type is skipped with a paren balance counter, not a regex.
+    """
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":          # tuple-typed op
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        type_str = line[i:j + 1]
+        tail = line[j + 1:]
+    else:                                  # scalar/array type
+        mk = _KIND_RE.match(line, i)
+        # the "type" for array ops sits between '=' and the op kind; find the
+        # kind as the last word before '(' in the head segment
+        head_end = line.find("(", i)
+        if head_end < 0:
+            return None
+        head = line[i:head_end]
+        parts = head.rsplit(None, 1)
+        if len(parts) == 2:
+            type_str, kind = parts
+        else:
+            type_str, kind = "", parts[0] if parts else ""
+        rest = line[head_end + 1:]
+        return name, type_str.strip(), kind.strip(), rest
+    mk = _KIND_RE.match(tail)
+    if not mk:
+        return None
+    kind = mk.group(1)
+    rest = tail[mk.end():]
+    return name, type_str, kind, rest
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DIRECTION_RE = re.compile(r"direction=(\w+)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of possibly-tuple shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    out_shape: str
+    kind: str
+    rest: str           # operand list + attributes (raw tail)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    defs: Dict[str, Op] = field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*{", s)
+        if header and not s.startswith("//"):
+            cur = Computation(header.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            name, shape, kind, rest = parsed
+            op = Op(name, shape.strip(), kind, rest)
+            cur.ops.append(op)
+            cur.defs[name] = op
+    return comps
+
+
+def _dot_flops(op: Op, comp: Computation, comps) -> float:
+    """2 * |out| * contracted-size for a dot op."""
+    out = shape_elems(op.out_shape)
+    # contracting dims of lhs: shapes of operands come from defs or params
+    mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    operand_names = re.findall(r"%([\w.\-]+)", op.rest)
+    if not operand_names:
+        return 0.0
+    lhs_shape = _shape_of(operand_names[0], comp, comps)
+    if lhs_shape is None:
+        return 2.0 * out  # unknown; degrade gracefully
+    dims = [int(d) for d in mm.group(1).split(",") if d] if mm else []
+    csize = 1
+    for d in dims:
+        if d < len(lhs_shape):
+            csize *= lhs_shape[d]
+    return 2.0 * out * max(csize, 1)
+
+
+_param_shape_cache: Dict[Tuple[str, str], Optional[List[int]]] = {}
+
+
+def _shape_of(name: str, comp: Computation, comps) -> Optional[List[int]]:
+    op = comp.defs.get(name)
+    if op is None:
+        return None
+    m = _SHAPE_RE.search(op.out_shape)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def trip_count(cond: Computation) -> int:
+    """Recover the scan trip count from the loop condition computation."""
+    consts = []
+    direction = "LT"
+    for op in cond.ops:
+        for m in _CONST_RE.finditer(op.kind + "(" + op.rest):
+            consts.append(int(m.group(1)))
+        md = _DIRECTION_RE.search(op.rest)
+        if md:
+            direction = md.group(1)
+    if not consts:
+        return 1
+    n = max(consts)
+    return n + 1 if direction == "LE" else n
+
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0          # kernelized: VMEM panels discounted
+    hbm_bytes_raw: float = 0.0      # every kernel boundary counted
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    n_collectives: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    coll_by_shape: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    hbm_by_shape: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+
+    def scaled(self, k: float) -> "Costs":
+        c = Costs(self.flops * k, self.hbm_bytes * k, self.hbm_bytes_raw * k,
+                  self.coll_bytes * k)
+        for kk, v in self.coll_by_kind.items():
+            c.coll_by_kind[kk] = v * k
+        for kk, v in self.n_collectives.items():
+            c.n_collectives[kk] = int(v * k)
+        for kk, v in self.coll_by_shape.items():
+            c.coll_by_shape[kk] = v * k
+        for kk, v in self.hbm_by_shape.items():
+            c.hbm_by_shape[kk] = v * k
+        return c
+
+    def add(self, o: "Costs"):
+        self.flops += o.flops
+        self.hbm_bytes += o.hbm_bytes
+        self.hbm_bytes_raw += o.hbm_bytes_raw
+        self.coll_bytes += o.coll_bytes
+        for kk, v in o.coll_by_kind.items():
+            self.coll_by_kind[kk] += v
+        for kk, v in o.n_collectives.items():
+            self.n_collectives[kk] += v
+        for kk, v in o.coll_by_shape.items():
+            self.coll_by_shape[kk] += v
+        for kk, v in o.hbm_by_shape.items():
+            self.hbm_by_shape[kk] += v
+
+
+def _operand_names(op: Op):
+    head = op.rest.split("),")[0]
+    return re.findall(r"%([\w.\-]+)", head)
+
+
+def _operand_shapes(op: Op, comp: Computation):
+    out = []
+    for nm in _operand_names(op):
+        d = comp.defs.get(nm)
+        if d is not None:
+            out.append(d.out_shape)
+    return out
+
+
+class Analyzer:
+    """Walks the HLO call graph accumulating per-device roofline terms.
+
+    ``panel_dims``: set of (d_minor2, d_minor1) trailing-dim pairs marking
+    tensors that the Pallas kernels keep resident in VMEM (attention score
+    panels, SSD chunk masks).  Their HBM traffic is discounted in
+    ``hbm_bytes`` (and fully counted in ``hbm_bytes_raw``) — this is the
+    documented "kernelized" memory model used by §Roofline.
+    """
+
+    def __init__(self, comps: Dict[str, Computation],
+                 panel_dims=()):  # iterable of (dim-2, dim-1)
+        self.comps = comps
+        self.panel_dims = {tuple(p) for p in panel_dims}
+        self.memo: Dict = {}
+
+    # -- byte helpers -------------------------------------------------------
+    def _bf16_origin(self, name: str, comp: Computation, depth: int = 4
+                     ) -> bool:
+        """True when an f32 value is a float-normalized bf16 tensor.
+
+        XLA CPU has no bf16 matmul: its float-normalization pass upcasts
+        bf16 dot operands to f32 and SPMD hoists the converts, so bf16
+        weights/activations appear as f32 in the optimized HLO — 2x their
+        real TPU footprint.  Detected by chasing convert/copy/slice/gather
+        chains back to a bf16 value (or a fusion wrapping such a convert);
+        byte accounting then uses the *logical* 2-byte width.
+        """
+        if depth == 0:
+            return False
+        op = comp.defs.get(name)
+        if op is None or "f32" not in op.out_shape:
+            return False
+        if op.kind in ("convert", "copy", "bitcast", "all-gather",
+                       "get-tuple-element", "dynamic-slice", "transpose",
+                       "reshape", "all-reduce", "broadcast"):
+            for nm in _operand_names(op):
+                src = comp.defs.get(nm)
+                if src is not None and "bf16" in src.out_shape:
+                    return True
+                if self._bf16_origin(nm, comp, depth - 1):
+                    return True
+            return False
+        if op.kind == "fusion":
+            mc = _CALLS_RE.search(op.rest)
+            inner = self.comps.get(mc.group(1)) if mc else None
+            if inner is not None:
+                out_elems = shape_elems(op.out_shape)
+                for iop in inner.ops:
+                    if iop.kind == "convert" and "f32" in iop.out_shape:
+                        for nm in _operand_names(iop):
+                            src = inner.defs.get(nm)
+                            if src is not None and "bf16" in src.out_shape \
+                                    and shape_elems(src.out_shape) == out_elems:
+                                return True
+            # fusion of a hoisted entry convert: single bf16 param, f32 out
+            for nm in _operand_names(op):
+                src = comp.defs.get(nm)
+                if src is not None and "bf16" in src.out_shape and \
+                        shape_elems(src.out_shape) == shape_elems(op.out_shape):
+                    return True
+            return False
+        return False
+
+    _PURE_DATA_KINDS = frozenset((
+        "convert", "copy", "bitcast", "parameter", "transpose", "reshape",
+        "broadcast", "constant", "tuple", "get-tuple-element", "slice"))
+
+    def _is_normalization_fusion(self, inner: Computation) -> bool:
+        """A fusion that only converts/relabels a bf16 tensor to f32 is a
+        float-normalization artifact of the CPU backend (TPU runs the dot in
+        bf16 directly) — it contributes no HBM traffic on the target."""
+        has_convert = False
+        for op in inner.ops:
+            if op.kind not in self._PURE_DATA_KINDS:
+                return False
+            if op.kind == "convert":
+                has_convert = True
+        return has_convert
+
+    def _is_panel(self, shape_str: str) -> bool:
+        if not self.panel_dims:
+            return False
+        for m in _SHAPE_RE.finditer(shape_str):
+            dims = [int(d) for d in m.group(2).split(",") if d]
+            if len(dims) >= 2 and (dims[-2], dims[-1]) in self.panel_dims:
+                return True
+        return False
+
+    def _eff(self, shape_str: str, halve: bool = False) -> Tuple[int, int]:
+        """(kernelized bytes, raw bytes) for one shape."""
+        b = shape_bytes(shape_str)
+        if halve:
+            b //= 2
+        return (0 if self._is_panel(shape_str) else b), b
+
+    def _io_bytes(self, op: Op, comp: Computation) -> Tuple[int, int]:
+        eff = raw = 0
+        for nm in _operand_names(op):
+            d = comp.defs.get(nm)
+            if d is None:
+                continue
+            e, r = self._eff(d.out_shape, self._bf16_origin(nm, comp))
+            eff += e
+            raw += r
+        e, r = self._eff(op.out_shape)
+        return eff + e, raw + r
+
+    def _slice_discount(self, inner: Computation) -> Tuple[int, int]:
+        disc_e = disc_r = 0
+        for op in inner.ops:
+            if op.kind == "dynamic-slice":
+                names = _operand_names(op)
+                if names:
+                    src = inner.defs.get(names[0])
+                    if src is not None:
+                        d = max(shape_bytes(src.out_shape)
+                                - shape_bytes(op.out_shape), 0)
+                        disc_r += d
+                        if not self._is_panel(src.out_shape):
+                            disc_e += d
+            elif op.kind == "dynamic-update-slice":
+                names = _operand_names(op)
+                if len(names) >= 2:
+                    upd = inner.defs.get(names[1])
+                    ub = (shape_bytes(upd.out_shape) if upd is not None else 0)
+                    d = 2 * max(shape_bytes(op.out_shape) - ub, 0)
+                    disc_r += d
+                    if not self._is_panel(op.out_shape):
+                        disc_e += d
+        return disc_e, disc_r
+
+    def _collective(self, op: Op, comp: Computation) -> Tuple[str, float]:
+        kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+        inb = outb = 0
+        halve = False
+        for nm in _operand_names(op):
+            d = comp.defs.get(nm)
+            if d is None:
+                continue
+            h = self._bf16_origin(nm, comp)
+            halve |= h
+            inb += shape_bytes(d.out_shape) // (2 if h else 1)
+        outb = shape_bytes(op.out_shape) // (2 if halve else 1)
+        if kind == "all-reduce":
+            return kind, 2.0 * inb      # ring: reduce-scatter + all-gather
+        if kind == "all-gather":
+            return kind, float(max(outb - inb, inb))
+        if kind == "reduce-scatter":
+            return kind, float(inb)
+        return kind, float(inb)          # all-to-all, collective-permute
+
+    # -- main walk ----------------------------------------------------------
+    def comp_costs(self, comp: Computation, *, as_fusion: bool) -> Costs:
+        key = (comp.name, as_fusion)
+        if key in self.memo:
+            return self.memo[key]
+        comps = self.comps
+        c = Costs()
+
+        def add_io(op):
+            if not as_fusion:
+                e, r = self._io_bytes(op, comp)
+                c.hbm_bytes += e
+                c.hbm_bytes_raw += r
+                if e:
+                    c.hbm_by_shape[f"{op.kind} {op.out_shape[:64]}"] += e
+
+        for op in comp.ops:
+            k = op.kind
+            if k == "while":
+                mcb = _COND_BODY_RE.search(op.rest)
+                if mcb:
+                    cond_name, body_name = mcb.groups()
+                    trips = trip_count(comps[cond_name])
+                    body = self.comp_costs(comps[body_name], as_fusion=False)
+                    c.add(body.scaled(trips))
+            elif k == "fusion":
+                mc = _CALLS_RE.search(op.rest)
+                inner_comp = comps.get(mc.group(1)) if mc else None
+                if inner_comp is not None:
+                    inner = self.comp_costs(inner_comp, as_fusion=True)
+                    c.flops += inner.flops
+                    c.coll_bytes += inner.coll_bytes
+                    for kk, v in inner.coll_by_kind.items():
+                        c.coll_by_kind[kk] += v
+                    for kk, v in inner.coll_by_shape.items():
+                        c.coll_by_shape[kk] += v
+                    for kk, v in inner.n_collectives.items():
+                        c.n_collectives[kk] += v
+                if not as_fusion:
+                    if inner_comp is not None and \
+                            self._is_normalization_fusion(inner_comp):
+                        continue  # CPU float-normalization artifact
+                    e, r = self._io_bytes(op, comp)
+                    if inner_comp is not None:
+                        de, dr = self._slice_discount(inner_comp)
+                        e -= de
+                        r -= dr
+                    c.hbm_bytes += max(e, 0)
+                    c.hbm_bytes_raw += max(r, 0)
+                    if e > 0:
+                        c.hbm_by_shape[f"fusion {op.out_shape[:64]}"] += max(e, 0)
+            elif k in ("call", "conditional", "async-start"):
+                for nm in _CALLS_RE.finditer(op.rest):
+                    if nm.group(1) in comps:
+                        c.add(self.comp_costs(comps[nm.group(1)],
+                                              as_fusion=as_fusion))
+            elif k == "dot":
+                c.flops += _dot_flops(op, comp, comps)
+                add_io(op)
+            elif k == "convolution":
+                c.flops += 2.0 * shape_elems(op.out_shape)
+                add_io(op)
+            elif k in COLLECTIVES or (k.endswith("-start") and
+                                      k[:-6] in COLLECTIVES):
+                kind, b = self._collective(op, comp)
+                c.coll_bytes += b
+                c.coll_by_kind[kind] += b
+                c.n_collectives[kind] += 1
+                c.coll_by_shape[f"{kind} {op.out_shape[:64]}"] += b
+            elif k == "dynamic-slice" and not as_fusion:
+                e, r = self._eff(op.out_shape)
+                c.hbm_bytes += 2 * e
+                c.hbm_bytes_raw += 2 * r
+            elif k == "dynamic-update-slice" and not as_fusion:
+                names = _operand_names(op)
+                upd = comp.defs.get(names[1]) if len(names) >= 2 else None
+                sh = upd.out_shape if upd is not None else op.out_shape
+                e, r = self._eff(sh)
+                c.hbm_bytes += 2 * e
+                c.hbm_bytes_raw += 2 * r
+            elif k in ("parameter", "constant", "get-tuple-element", "tuple",
+                       "bitcast", "after-all", "partition-id", "replica-id",
+                       "copy-start", "copy-done") or k.endswith("-done"):
+                pass
+            else:
+                add_io(op)
+        self.memo[key] = c
+        return c
+
+
+def analyze(hlo_text: str, panel_dims=()) -> Costs:
+    """Per-device roofline terms for one compiled executable."""
+    comps = parse_hlo(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+    return Analyzer(comps, panel_dims).comp_costs(comps[entry],
+                                                  as_fusion=False)
+
+
+def roofline(costs: Costs, *, peak_flops: float, hbm_bw: float,
+             ici_bw: float, ici_links: int = 4) -> Dict[str, float]:
+    """Three roofline terms (seconds, per device) + dominant bottleneck."""
+    t_compute = costs.flops / peak_flops
+    t_memory = costs.hbm_bytes / hbm_bw
+    t_coll = costs.coll_bytes / (ici_bw * ici_links)
+    dom = max((("compute", t_compute), ("memory", t_memory),
+               ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    t_bound = max(t_compute, t_memory, t_coll)
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "bottleneck": dom,
+            "t_bound": t_bound,
+            "flops": costs.flops, "hbm_bytes": costs.hbm_bytes,
+            "hbm_bytes_raw": costs.hbm_bytes_raw,
+            "coll_bytes": costs.coll_bytes}

@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules."""
+from .model import Model, LayerSpec, superblock  # noqa: F401
+from .registry import (batch_specs, build, input_specs, param_stats,  # noqa
+                       pick_rules)
+from .sharding import (BASELINE_RULES, DECODE_RULES, LONG_DECODE_RULES,  # noqa
+                       MeshRules, ShardingResolver)

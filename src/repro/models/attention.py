@@ -1,0 +1,315 @@
+"""GQA attention: chunked (flash-style) causal attention for train/prefill,
+block-partial (flash-decode) attention for decode with an optionally
+sequence-sharded KV cache.
+
+Memory discipline
+-----------------
+* train/prefill never materializes the (S x S) score matrix: an outer
+  ``lax.scan`` over query chunks (``attn_chunk_q``) holds one
+  (B, KV, G, qc, S) panel at a time; this is the pure-jnp twin of the Pallas
+  ``flash_attention`` kernel (kernels/flash_attention.py) and is what the
+  dry-run lowers (clean HLO for the roofline; identical math).
+* decode uses a KV cache laid out as ``(S_blocks, T_blk, B, KV, hd)``.  The
+  leading block axis is the FUSEE "memory pool" axis: sharding it over mesh
+  axes = pages spread over memory nodes.  Attention computes per-block
+  partial (max, denom, weighted-sum) and combines across blocks — under SPMD
+  the combine is the only cross-shard traffic (B*H*hd-sized), the
+  flash-decode trick that makes 500k-token caches shardable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamBuilder, apply_rope, rms_norm, rope_angles
+
+NEG_INF = -1e30
+
+
+def make_attn_params(pb: ParamBuilder, d_model: int, n_heads: int,
+                     n_kv: int, head_dim: int, qk_norm: bool):
+    p = {
+        "wq": pb.param((d_model, n_heads, head_dim), ("fsdp", "heads", "head_dim"),
+                       fan_in=d_model),
+        "wk": pb.param((d_model, n_kv, head_dim), ("fsdp", "kv_heads", "head_dim"),
+                       fan_in=d_model),
+        "wv": pb.param((d_model, n_kv, head_dim), ("fsdp", "kv_heads", "head_dim"),
+                       fan_in=d_model),
+        "wo": pb.param((n_heads, head_dim, d_model), ("heads", "head_dim", "fsdp"),
+                       fan_in=n_heads * head_dim),
+    }
+    if qk_norm:
+        p["q_norm"] = pb.param((head_dim,), (None,), init="ones")
+        p["k_norm"] = pb.param((head_dim,), (None,), init="ones")
+    return p
+
+
+def _project_qkv(p, x, positions, theta: float, qk_norm: bool):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KV,hd), rope applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    hd = q.shape[-1]
+    cos, sin = rope_angles(positions, hd, theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def flash_attention_jnp(q, k, v, *, causal: bool, q_chunk: int,
+                        q_offset=0, kv_valid: Optional[jax.Array] = None):
+    """Chunked online-softmax attention (GQA via repeat-kv).
+
+    q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd).  Returns (B, Sq, H, hd).
+    ``q_offset``: absolute position of q[0] (prefill continuation).
+    ``kv_valid``: number of valid kv positions (mask tail), scalar.
+
+    Sharding note: kv heads are repeated up to H *before* the score einsum
+    so every tensor keeps the head axis = H, which shards over 'model'
+    without resharding (KV=8 never divides tp=16 in the assigned pool; a
+    (KV, G) grouped layout would force a per-layer all-to-all of q).
+
+    Memory note: the per-chunk score panel is the only O(Sq*Skv) tensor and
+    the q-step body is ``jax.checkpoint``ed, so the backward *recomputes*
+    scores per chunk instead of saving all panels — the same
+    recompute-in-backward the Pallas flash kernel does in VMEM.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    while Sq % q_chunk:
+        q_chunk //= 2
+    nq = Sq // q_chunk
+    qr = q.reshape(B, nq, q_chunk, H, hd)
+    kv_pos = jnp.arange(Skv)
+
+    def q_step(_, qi):
+        qc, qidx = qi                      # (B, qc, H, hd), scalar chunk idx
+        q_pos = q_offset + qidx * q_chunk + jnp.arange(q_chunk)
+        s = jnp.einsum("bqhd,bshd->bhqs", qc, k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((q_chunk, Skv), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if kv_valid is not None:
+            mask &= (kv_pos < kv_valid)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - jax.lax.stop_gradient(m))
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhqs,bshd->bqhd", p.astype(q.dtype), v,
+                       preferred_element_type=jnp.float32)
+        o = o / jnp.maximum(l, 1e-30).transpose(0, 2, 1, 3)
+        return None, o.astype(q.dtype)
+
+    q_step = jax.checkpoint(
+        q_step, policy=jax.checkpoint_policies.nothing_saveable)
+    _, out = jax.lax.scan(q_step, None,
+                          (jnp.moveaxis(qr, 1, 0), jnp.arange(nq)))
+    # out: (nq, B, qc, H, hd) -> (B, Sq, H, hd)
+    return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
+
+
+class KVCache(NamedTuple):
+    """Block-paged KV cache: (S_blocks, T_blk, B, KV, hd) per layer stack.
+
+    ``S_blocks`` is the FUSEE pool axis (shardable over mesh axes); a
+    (block, slot) pair is a page address exactly like a FUSEE pointer.
+    """
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # scalar int32: tokens currently stored
+
+
+def init_cache(n_super: int, per_super: int, batch: int, max_len: int,
+               n_kv: int, hd: int, n_blocks: int, dtype) -> KVCache:
+    t_blk = max_len // n_blocks
+    shape = (n_super, per_super, n_blocks, t_blk, batch, n_kv, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def cache_from_prefill(k, v, n_blocks: int, max_len: int):
+    """(B, S, KV, hd) -> block layout (n_blocks, T_blk, B, KV, hd), padded."""
+    B, S, KV, hd = k.shape
+    t_blk = max_len // n_blocks
+    pad = n_blocks * t_blk - S
+    k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    f = lambda x: x.reshape(B, n_blocks, t_blk, KV, hd).transpose(1, 2, 0, 3, 4)
+    return f(k), f(v)
+
+
+def cache_append(kc, vc, k_new, v_new, length):
+    """Write one token's k/v (B, 1, KV, hd) at position ``length``."""
+    t_blk = kc.shape[1]
+    blk = length // t_blk
+    off = length % t_blk
+    k1 = k_new[:, 0][None, None]  # (1, 1, B, KV, hd)
+    v1 = v_new[:, 0][None, None]
+    kc = jax.lax.dynamic_update_slice(kc, k1.astype(kc.dtype),
+                                      (blk, off, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v1.astype(vc.dtype),
+                                      (blk, off, 0, 0, 0))
+    return kc, vc
+
+
+def flash_decode_jnp(q, kc, vc, valid_len, k_new=None, v_new=None):
+    """Block-partial decode attention.
+
+    q: (B, 1, H, hd); kc/vc: (n_blocks, T_blk, B, KV, hd); valid_len: scalar
+    — the number of valid tokens ALREADY IN the cache.  If ``k_new/v_new``
+    (B, 1, KV, hd) are given, the current token participates via an extra
+    softmax partial (so the cache itself is read-only this step; the
+    engine/pool commits the token once, outside the layer scan).
+    Per-block partial softmax stats combine across the block axis — the
+    only cross-shard reduction when blocks are sharded over the mesh.
+    """
+    nb, tb, B, KV, hd = kc.shape
+    H = q.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q[:, 0].reshape(B, KV, G, hd)
+
+    pos = (jnp.arange(nb)[:, None] * tb + jnp.arange(tb)[None, :])
+    mask = pos < valid_len                                  # (nb, tb)
+    s = jnp.einsum("bkgh,ntbkh->nbkgt", qg, kc,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                 # (nb,B,KV,G)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)                                 # (nb,B,KV,G)
+    o = jnp.einsum("nbkgt,ntbkh->nbkgh", p.astype(kc.dtype), vc,
+                   preferred_element_type=jnp.float32)      # (nb,B,KV,G,hd)
+    # combine partials across blocks (the flash-decode reduction)
+    m_glob = jnp.max(m, axis=0)                             # (B,KV,G)
+    if k_new is not None:
+        s_new = jnp.einsum("bkgh,bkh->bkg", qg.astype(jnp.float32),
+                           k_new[:, 0].astype(jnp.float32)) * scale
+        m_glob = jnp.maximum(m_glob, s_new)
+    w = jnp.exp(m - m_glob[None])                           # (nb,B,KV,G)
+    denom = jnp.sum(l * w, axis=0)                          # (B,KV,G)
+    num = jnp.sum(o * w[..., None], axis=0)                 # (B,KV,G,hd)
+    if k_new is not None:
+        w_new = jnp.exp(s_new - m_glob)                     # (B,KV,G)
+        denom = denom + w_new
+        num = num + w_new[..., None] * v_new[:, 0].astype(
+            jnp.float32)[:, :, None, :]
+    out = num / jnp.maximum(denom, 1e-30)[..., None]
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attn_decode_readonly(p, x, pos, kc, vc, *, theta, qk_norm):
+    """Decode WITHOUT touching the cache: the current token's K/V is folded
+    into the softmax combine and returned for a single post-scan commit.
+    x: (B, 1, D); kc/vc: this layer's (nb, tb, B, KV, hd) read-only pages."""
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k, v = _project_qkv(p, x, positions.reshape(1), theta, qk_norm)
+    o = flash_decode_jnp(q, kc, vc, pos, k_new=k, v_new=v)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, (k[:, 0], v[:, 0])     # (B, KV, hd) new-token page entries
+
+
+def attn_train(p, x, positions, *, theta, qk_norm, q_chunk):
+    q, k, v = _project_qkv(p, x, positions, theta, qk_norm)
+    o = flash_attention_jnp(q, k, v, causal=True, q_chunk=q_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def attn_prefill(p, x, positions, *, theta, qk_norm, q_chunk,
+                 n_blocks, max_len, use_kernel: bool = False):
+    q, k, v = _project_qkv(p, x, positions, theta, qk_norm)
+    if use_kernel:
+        from repro.kernels import flash_attention
+        o = flash_attention(q.transpose(0, 2, 1, 3),
+                            k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=True,
+                            block_q=min(256, q.shape[1]),
+                            block_kv=min(512, k.shape[1])
+                            ).transpose(0, 2, 1, 3)
+    else:
+        o = flash_attention_jnp(q, k, v, causal=True, q_chunk=q_chunk)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    kc, vc = cache_from_prefill(k, v, n_blocks, max_len)
+    return out, (kc, vc)
+
+
+def attn_decode_carry(p, x, pos, kc_stack, vc_stack, li, *, theta, qk_norm,
+                      use_kernel: bool = False):
+    """Decode against the FULL stacked cache (n_super, nb, tb, B, KV, hd),
+    carried through the layer scan.  Only the new token's K/V is written
+    (dynamic_update_slice at (layer, block, offset)) so the while-loop
+    carry aliases in place — no per-step full-cache copy (the copy was the
+    dominant memory term of the baseline decode cells; see §Perf)."""
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k, v = _project_qkv(p, x, positions.reshape(1), theta, qk_norm)
+    t_blk = kc_stack.shape[2]
+    blk = pos // t_blk
+    off = pos % t_blk
+    k1 = k[:, 0][None, None, None].astype(kc_stack.dtype)  # (1,1,1,B,KV,hd)
+    v1 = v[:, 0][None, None, None].astype(vc_stack.dtype)
+    kc_stack = jax.lax.dynamic_update_slice(kc_stack, k1, (li, blk, off, 0, 0, 0))
+    vc_stack = jax.lax.dynamic_update_slice(vc_stack, v1, (li, blk, off, 0, 0, 0))
+    kc = jax.lax.dynamic_index_in_dim(kc_stack, li, 0, keepdims=False)
+    vc = jax.lax.dynamic_index_in_dim(vc_stack, li, 0, keepdims=False)
+    if use_kernel:
+        from repro.kernels import paged_attention
+        o = paged_attention(q[:, 0], kc, vc, pos + 1)[:, None]
+    else:
+        o = flash_decode_jnp(q, kc, vc, pos + 1)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, (kc_stack, vc_stack)
+
+
+def attn_decode(p, x, pos, kc, vc, *, theta, qk_norm,
+                use_kernel: bool = False):
+    """x: (B, 1, D); pos: scalar current position; returns out + new cache."""
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k, v = _project_qkv(p, x, positions.reshape(1), theta, qk_norm)
+    kc, vc = cache_append(kc, vc, k, v, pos)
+    if use_kernel:
+        from repro.kernels import paged_attention
+        o = paged_attention(q[:, 0], kc, vc, pos + 1)[:, None]
+    else:
+        o = flash_decode_jnp(q, kc, vc, pos + 1)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, (kc, vc)
+
+
+# ------------------------------------------------------ whisper cross-attn --
+def make_cross_attn_params(pb: ParamBuilder, d_model: int, n_heads: int,
+                           n_kv: int, head_dim: int):
+    return {
+        "wq": pb.param((d_model, n_heads, head_dim), ("fsdp", "heads", "head_dim"),
+                       fan_in=d_model),
+        "wk": pb.param((d_model, n_kv, head_dim), ("fsdp", "kv_heads", "head_dim"),
+                       fan_in=d_model),
+        "wv": pb.param((d_model, n_kv, head_dim), ("fsdp", "kv_heads", "head_dim"),
+                       fan_in=d_model),
+        "wo": pb.param((n_heads, head_dim, d_model), ("heads", "head_dim", "fsdp"),
+                       fan_in=n_heads * head_dim),
+    }
+
+
+def cross_attn_kv(p, enc_out):
+    """Precompute cross-attention K/V from encoder output (per request)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+def cross_attn(p, x, k, v, *, q_chunk):
+    """Non-causal attention of decoder states over encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    o = flash_attention_jnp(q, k, v, causal=False, q_chunk=q_chunk)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))

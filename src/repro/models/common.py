@@ -1,0 +1,152 @@
+"""Shared model components: parameter builder (values + logical axes),
+RMSNorm, RoPE, embeddings, losses, dtype policy.
+
+Parameters are plain nested dicts of arrays.  Every leaf has a parallel
+*logical axes* tuple (see sharding.py) collected by ``ParamBuilder`` at
+definition time, so a model is fully described by ``(params, axes)`` and any
+mesh/rules pair can shard it.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16}
+
+
+def dtype_of(name: str):
+    return DTYPES[name]
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+class ParamBuilder:
+    """Collects (shape, dtype, init, logical_axes) leaves; materializes either
+    real initialized arrays or abstract ShapeDtypeStructs (dry-run)."""
+
+    def __init__(self, key: Optional[jax.Array], abstract: bool,
+                 param_dtype):
+        self.key = key
+        self.abstract = abstract
+        self.param_dtype = param_dtype
+        self.axes: Dict[str, Any] = {}
+
+    def _split(self):
+        if self.abstract:
+            return None
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def param(self, shape: Sequence[int], axes: Tuple[Optional[str], ...],
+              init: str = "normal", scale: float = 1.0, dtype=None,
+              fan_in: Optional[int] = None):
+        assert len(shape) == len(axes), (shape, axes)
+        dtype = dtype or self.param_dtype
+        if self.abstract:
+            val = jax.ShapeDtypeStruct(tuple(shape), dtype)
+        else:
+            k = self._split()
+            if init == "normal":
+                if fan_in is None:
+                    fan_in = shape[-2] if len(shape) > 1 else max(shape[0], 1)
+                std = scale / math.sqrt(fan_in)
+                val = (jax.random.normal(k, tuple(shape), jnp.float32) * std
+                       ).astype(dtype)
+            elif init == "zeros":
+                val = jnp.zeros(tuple(shape), dtype)
+            elif init == "ones":
+                val = jnp.ones(tuple(shape), dtype)
+            elif init == "embed":
+                val = (jax.random.normal(k, tuple(shape), jnp.float32) * scale
+                       ).astype(dtype)
+            else:
+                raise ValueError(init)
+        return val, tuple(axes)
+
+
+def split_tree(tree):
+    """(value, axes) leaf tuples -> (values_tree, axes_tree)."""
+    is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
+                         and isinstance(x[1], tuple))
+    vals = jax.tree.map(lambda x: x[0], tree, is_leaf=is_leaf)
+    axes = jax.tree.map(lambda x: x[1], tree, is_leaf=is_leaf)
+    return vals, axes
+
+
+# ---------------------------------------------------------------- numerics --
+def rms_norm(x, gain, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * gain.astype(jnp.float32)).astype(dt)
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (...,) int32 -> cos/sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, hd//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = x @ w_gate
+    u = x @ w_up
+    return (jax.nn.silu(g) * u) @ w_down
+
+
+def softmax_cross_entropy(logits, labels, vocab: int):
+    """logits: (B, S, Vp) fp32-reduced; labels (B, S) with -1 = masked.
+
+    ``vocab`` is the true vocabulary size; padded logit columns are masked.
+    """
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp != vocab:
+        pad_mask = jnp.arange(vp) >= vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    valid = labels >= 0
+    labels_c = jnp.clip(labels, 0, vocab - 1)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels_c[..., None], axis=-1)[..., 0]
+    nll = (lse - picked) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+
+# ------------------------------------------------------------- embeddings --
+def make_embedding(pb: ParamBuilder, vocab_padded: int, d_model: int):
+    return pb.param((vocab_padded, d_model), ("vocab", None), init="embed",
+                    scale=0.02)
+
+
+def embed_lookup(table, ids):
+    return jnp.take(table, ids, axis=0)
+
+
+def lm_head(x, table, transpose: bool):
+    """x: (B,S,D) -> logits (B,S,Vp); fp32 accumulation."""
+    w = table.astype(jnp.bfloat16) if x.dtype == jnp.bfloat16 else table
+    if transpose:
+        return jnp.einsum("bsd,vd->bsv", x, w,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("bsd,dv->bsv", x, w,
+                      preferred_element_type=jnp.float32)

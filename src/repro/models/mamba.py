@@ -1,0 +1,175 @@
+"""Mamba (SSD / Mamba-2 style) selective state-space mixer.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel does not port;
+instead we use the chunkwise-parallel SSD formulation — within a chunk of
+``L`` tokens the recurrence is an attention-like (L x L) masked matmul (MXU
+friendly); across chunks a sequential ``lax.scan`` carries the (heads, P, N)
+state.  Per-head *scalar* decay (Mamba-2) keeps the decay matrix rank-1 so
+the intra-chunk mask is (B, nh, L, L) — bounded VMEM, hardware-aligned dims.
+
+Decode is the plain recurrence on the carried state: O(1) per token, which
+is why ssm/hybrid archs run the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamBuilder, rms_norm
+
+
+def make_mamba_params(pb: ParamBuilder, d_model: int, d_state: int,
+                      d_conv: int, expand: int, head_p: int = 128):
+    d_in = expand * d_model
+    nh = max(1, d_in // head_p)
+    return {
+        "in_proj": pb.param((d_model, 2 * d_in), ("fsdp", "mlp")),
+        "conv_w": pb.param((d_conv, d_in), (None, "mlp"), scale=0.5),
+        "dt_proj": pb.param((d_model, nh), (None, None), scale=0.5),
+        "dt_bias": pb.param((nh,), (None,), init="zeros"),
+        "bc_proj": pb.param((d_model, 2 * d_state), (None, None)),
+        "a_log": pb.param((nh,), (None,), init="zeros"),
+        "d_skip": pb.param((nh,), (None,), init="ones"),
+        "norm": pb.param((d_in,), ("mlp",), init="ones"),
+        "out_proj": pb.param((d_in, d_model), ("mlp", "fsdp")),
+    }
+
+
+class MambaState(NamedTuple):
+    h: jax.Array          # (B, nh, P, N) inter-chunk SSM state
+    conv: jax.Array       # (B, d_conv-1, d_in) conv tail
+
+
+def _segsum_mask(adt):
+    """adt: (B, L, nh) per-step log-decays -> (B, nh, L, L) decay matrix
+    M[t, s] = exp(sum_{r=s+1..t} adt_r) for s <= t, else 0.
+
+    Built directly in (B, nh, L, L) layout: the trailing (L, L) dims mark it
+    as a VMEM-resident chunk panel for the roofline's kernelized memory
+    model (launch/hlo_analysis.py panel_dims)."""
+    B, L, nh = adt.shape
+    ca = jnp.cumsum(adt, axis=1).transpose(0, 2, 1)    # (B, nh, L)
+    diff = ca[:, :, :, None] - ca[:, :, None, :]       # (B, nh, Lt, Ls)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    diff = jnp.where(tri[None, None], diff, -jnp.inf)
+    return jnp.exp(diff)                               # (B, nh, L, L)
+
+
+def _proj_inputs(p, x):
+    """x: (B, S, D) -> gated inputs for the SSM."""
+    dt = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt))
+    d_in = xz.shape[-1] // 2
+    xi, z = xz[..., :d_in], xz[..., d_in:]
+    dtv = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["dt_proj"].astype(dt)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))            # (B, S, nh)
+    bc = jnp.einsum("bsd,dn->bsn", x, p["bc_proj"].astype(dt))
+    n = bc.shape[-1] // 2
+    bmat, cmat = bc[..., :n], bc[..., n:]              # (B, S, N)
+    return xi, z, dtv, bmat.astype(jnp.float32), cmat.astype(jnp.float32)
+
+
+def _causal_conv(p, xi, tail=None):
+    """Depthwise causal conv over seq.  tail: (B, d_conv-1, d_in) context."""
+    w = p["conv_w"].astype(xi.dtype)                   # (d_conv, d_in)
+    dc = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xi.shape[0], dc - 1, xi.shape[2]), xi.dtype)
+    xp = jnp.concatenate([tail, xi], axis=1)
+    out = sum(xp[:, i:i + xi.shape[1]] * w[i] for i in range(dc))
+    new_tail = xp[:, -(dc - 1):] if dc > 1 else tail
+    return jax.nn.silu(out), new_tail
+
+
+def mamba_chunked(p, x, *, chunk: int, state: MambaState = None):
+    """Full-sequence (train/prefill) chunkwise SSD. Returns (y, final_state)."""
+    B, S, D = x.shape
+    xi, z, dtv, bmat, cmat = _proj_inputs(p, x)
+    conv_tail = state.conv if state is not None else None
+    xi, conv_tail = _causal_conv(p, xi, conv_tail)
+    d_in = xi.shape[-1]
+    nh = p["a_log"].shape[0]
+    P = d_in // nh
+    N = bmat.shape[-1]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))       # (nh,) negative decay
+
+    L = min(chunk, S)
+    while S % L:
+        L //= 2
+    nc = S // L
+    xh = xi.reshape(B, nc, L, nh, P)
+    dtc = dtv.reshape(B, nc, L, nh)
+    bm = bmat.reshape(B, nc, L, N)
+    cm = cmat.reshape(B, nc, L, N)
+    h0 = (state.h if state is not None
+          else jnp.zeros((B, nh, P, N), jnp.float32))
+
+    def chunk_step(h, inp):
+        xc, dc_, bc_, cc_ = inp                        # (B,L,nh,P) (B,L,nh) ..
+        adt = dc_ * a[None, None, :]                   # (B, L, nh) log decays
+        mask = _segsum_mask(adt)                       # (B, nh, L, L)
+        ca = jnp.cumsum(adt, axis=1)                   # (B, L, nh)
+        # intra-chunk: y[t] = sum_{s<=t} (C_t.B_s) M[t,s] dt_s x_s
+        cb = jnp.einsum("btn,bsn->bts", cc_, bc_)      # (B, L, L)
+        w = cb[:, None] * mask                         # (B, nh, L, L)
+        xdt = xc * dc_[..., None].astype(xc.dtype)     # (B, L, nh, P)
+        y_in = jnp.einsum("bhts,bshp->bthp", w.astype(xc.dtype), xdt)
+        # inter-chunk: y_ext[t] = C_t . (exp(ca_t) h_in)
+        dec_t = jnp.exp(ca)                            # (B, L, nh)
+        y_ext = jnp.einsum("btn,bhpn,bth->bthp",
+                           cc_.astype(jnp.float32), h,
+                           dec_t).astype(xc.dtype)
+        # state update: h' = exp(ca_L) h + sum_s exp(ca_L - ca_s) dt_s x_s B_s^T
+        dec_end = jnp.exp(ca[:, -1:, :] - ca)          # (B, L, nh)
+        hb = jnp.einsum("bshp,bsn,bsh->bhpn",
+                        xdt.astype(jnp.float32), bc_, dec_end)
+        h_new = jnp.exp(ca[:, -1])[:, :, None, None] * h + hb
+        return h_new, (y_in + y_ext)
+
+    hT, ys = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dtc, 1, 0),
+         jnp.moveaxis(bm, 1, 0), jnp.moveaxis(cm, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, nh, P)
+    y = y + xh.reshape(B, S, nh, P) * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, MambaState(h=hT, conv=conv_tail)
+
+
+def mamba_decode(p, x, state: MambaState):
+    """One-token recurrence.  x: (B, 1, D) -> (B, 1, D), new state."""
+    B = x.shape[0]
+    xi, z, dtv, bmat, cmat = _proj_inputs(p, x)
+    xi, conv_tail = _causal_conv(p, xi, state.conv)
+    d_in = xi.shape[-1]
+    nh = p["a_log"].shape[0]
+    P = d_in // nh
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    adt = dtv[:, 0] * a[None, :]                       # (B, nh)
+    xh = xi[:, 0].reshape(B, nh, P)
+    xdt = (xh * dtv[:, 0, :, None].astype(xh.dtype)).astype(jnp.float32)
+    hb = jnp.einsum("bhp,bn->bhpn", xdt, bmat[:, 0])
+    h = jnp.exp(adt)[:, :, None, None] * state.h + hb
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], h).astype(x.dtype)
+    y = y + xh * p["d_skip"].astype(y.dtype)[None, :, None]
+    y = y.reshape(B, 1, d_in)
+    y = rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, MambaState(h=h, conv=conv_tail)
+
+
+def init_mamba_state(batch: int, d_model: int, d_state: int, d_conv: int,
+                     expand: int, head_p: int = 128,
+                     dtype=jnp.bfloat16) -> MambaState:
+    d_in = expand * d_model
+    nh = max(1, d_in // head_p)
+    P = d_in // nh
+    return MambaState(
+        h=jnp.zeros((batch, nh, P, d_state), jnp.float32),
+        conv=jnp.zeros((batch, d_conv - 1, d_in), dtype))

@@ -1,0 +1,533 @@
+"""Unified LM assembly for all assigned architectures.
+
+Every architecture is a *superblock* — a short, repeating pattern of layers
+(e.g. jamba: 7 mamba + 1 attention, MoE on odd positions) — scanned
+``n_super`` times with per-position stacked parameters.  This keeps the HLO
+one-superblock-sized regardless of depth (88-layer mistral compiles as fast
+as 2-layer smollm) and makes remat policy uniform.
+
+Modes:
+  train    — full causal sequence, logits for every position.
+  prefill  — full sequence + returns the block-paged KV/state cache.
+  decode   — one token against the cache (``serve_step``).
+
+The decode KV cache uses the FUSEE block-pool layout (attention.py): its
+leading block axis shards over the mesh like pages over memory nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from . import attention as A
+from . import ffn as F
+from . import mamba as M
+from . import xlstm as X
+from .common import (ParamBuilder, dtype_of, embed_lookup, lm_head,
+                     pad_to_multiple, rms_norm, softmax_cross_entropy,
+                     split_tree)
+from .sharding import MeshRules, ShardingResolver
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str            # 'attn' | 'mamba' | 'mlstm' | 'slstm'
+    ffn: str              # 'dense' | 'moe' | 'moe+dense' | 'none'
+    cross: bool = False   # whisper decoder cross-attention
+
+
+def superblock(cfg: ArchConfig) -> Tuple[List[LayerSpec], int]:
+    if cfg.family == "ssm":  # xlstm
+        period = cfg.ssm.slstm_every or 1
+        specs = [LayerSpec("mlstm", "none") for _ in range(period - 1)]
+        specs += [LayerSpec("slstm", "none")]
+        return specs, cfg.n_layers // period
+    if cfg.family == "hybrid":  # jamba
+        period = cfg.attn_every
+        me = cfg.moe.moe_every if cfg.moe else 1
+        specs = []
+        for i in range(period):
+            mixer = "attn" if i % cfg.attn_every == cfg.attn_phase else "mamba"
+            ffn = "moe" if (cfg.moe and i % me == me - 1) else "dense"
+            specs.append(LayerSpec(mixer, ffn))
+        return specs, cfg.n_layers // period
+    ffn = "dense"
+    if cfg.moe is not None:
+        ffn = "moe+dense" if cfg.moe.dense_residual_d_ff else "moe"
+    cross = cfg.enc_dec
+    return [LayerSpec("attn", ffn, cross=cross)], cfg.n_layers
+
+
+def _make_layer_params(pb: ParamBuilder, cfg: ArchConfig, spec: LayerSpec,
+                       n_super: int):
+    """One superblock position; all leaves get a leading (n_super,) dim."""
+    stack = _Stacker(pb, n_super)
+    p: Dict[str, Any] = {"ln1": stack.param((cfg.d_model,), (None,),
+                                            init="ones")}
+    if spec.mixer == "attn":
+        p["attn"] = _stack_tree(
+            stack, lambda b: A.make_attn_params(
+                b, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                cfg.qk_norm))
+    elif spec.mixer == "mamba":
+        s = cfg.ssm
+        p["mamba"] = _stack_tree(
+            stack, lambda b: M.make_mamba_params(
+                b, cfg.d_model, s.d_state, s.d_conv, s.expand))
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = _stack_tree(
+            stack, lambda b: X.make_mlstm_params(b, cfg.d_model, cfg.n_heads))
+    elif spec.mixer == "slstm":
+        p["slstm"] = _stack_tree(
+            stack, lambda b: X.make_slstm_params(b, cfg.d_model, cfg.n_heads))
+    if spec.cross:
+        p["ln_x"] = stack.param((cfg.d_model,), (None,), init="ones")
+        p["cross"] = _stack_tree(
+            stack, lambda b: A.make_cross_attn_params(
+                b, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd))
+    if spec.ffn != "none":
+        p["ln2"] = stack.param((cfg.d_model,), (None,), init="ones")
+    if spec.ffn in ("dense",):
+        p["ffn"] = _stack_tree(
+            stack, lambda b: F.make_dense_ffn_params(b, cfg.d_model, cfg.d_ff))
+    elif spec.ffn in ("moe", "moe+dense"):
+        m = cfg.moe
+        p["moe"] = _stack_tree(
+            stack, lambda b: F.make_moe_params(b, cfg.d_model, m.n_experts,
+                                               m.d_ff_expert))
+        if spec.ffn == "moe+dense":
+            p["ffn"] = _stack_tree(
+                stack, lambda b: F.make_dense_ffn_params(
+                    b, cfg.d_model, m.dense_residual_d_ff))
+    return p
+
+
+class _Stacker:
+    """ParamBuilder proxy that prepends a stacked (n_super,) leading dim."""
+
+    def __init__(self, pb: ParamBuilder, n: int):
+        self.pb = pb
+        self.n = n
+
+    def param(self, shape, axes, **kw):
+        return self.pb.param((self.n, *shape), (None, *axes), **kw)
+
+
+def _stack_tree(stack: _Stacker, fn):
+    return fn(stack)
+
+
+# ============================================================== the model ===
+class Model:
+    """A built (arch x mesh x rules) model: pure-function API over params."""
+
+    def __init__(self, cfg: ArchConfig, mesh, rules: MeshRules,
+                 use_kernels: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules
+        # serving path only: Pallas flash/paged attention (interpret on CPU)
+        self.use_kernels = use_kernels
+        self.resolver = ShardingResolver(mesh, rules)
+        self.specs, self.n_super = superblock(cfg)
+        self.vocab_p = pad_to_multiple(cfg.vocab, 256)
+        self.dtype = dtype_of(cfg.dtype)
+        if cfg.moe is not None:
+            self.moe_ctx = F.MoEContext(mesh, rules, cfg.moe.n_experts,
+                                        cfg.moe.top_k, cfg.moe.capacity_factor)
+        else:
+            self.moe_ctx = None
+        # filled by init(); axes of every param leaf
+        self.axes: Any = None
+
+    # ----------------------------------------------------------- building --
+    def init(self, key: Optional[jax.Array] = None, abstract: bool = False):
+        cfg = self.cfg
+        pb = ParamBuilder(key, abstract, self.dtype)
+        tree: Dict[str, Any] = {}
+        # embed is sharded on vocab only: an fsdp-sharded gather dimension
+        # triggers XLA's "involuntary full rematerialization" (the lookup
+        # gather cannot be partitioned on the feature dim) — vocab sharding
+        # alone keeps the lookup a masked-local-gather + psum.
+        tree["embed"] = pb.param((self.vocab_p, cfg.d_model),
+                                 ("vocab", None), init="embed", scale=0.02)
+        tree["final_norm"] = pb.param((cfg.d_model,), (None,), init="ones")
+        if not cfg.tie_embeddings:
+            tree["lm_head"] = pb.param((cfg.d_model, self.vocab_p),
+                                       ("fsdp", "vocab"), init="normal")
+        tree["layers"] = [
+            _make_layer_params(pb, cfg, s, self.n_super) for s in self.specs]
+        if cfg.enc_dec:
+            enc_spec = LayerSpec("attn", "dense")
+            tree["enc"] = {
+                "layers": [_make_layer_params(pb, cfg, enc_spec,
+                                              cfg.n_enc_layers)],
+                "final_norm": pb.param((cfg.d_model,), (None,), init="ones"),
+                "pos_embed": pb.param((cfg.enc_seq, cfg.d_model),
+                                      (None, None), init="embed", scale=0.02),
+            }
+        params, axes = split_tree(tree)
+        self.axes = axes
+        return params
+
+    def param_specs(self, params_shape=None):
+        """PartitionSpecs for every leaf, resolved against mesh+rules."""
+        if self.axes is None:
+            self.init(abstract=True)
+        if params_shape is None:
+            params_shape = self.abstract_params()
+        return jax.tree.map(
+            lambda ax, sh: self.resolver.spec(ax, sh.shape),
+            self.axes, jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params_shape),
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    def abstract_params(self):
+        return self.init(abstract=True)
+
+    def _c(self, x, axes):
+        """Activation sharding constraint by logical axes."""
+        spec = self.resolver.spec(axes, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    # ------------------------------------------------------------ forward --
+    def _block(self, spec: LayerSpec, p, x, positions, mode,
+               cache, enc_kv=None, cache_geom=None):
+        """One layer.  cache: per-mixer state or (kc, vc) or None.
+        cache_geom: static (n_blocks, max_len) for prefill cache layout."""
+        cfg = self.cfg
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        new_cache = cache
+        if spec.mixer == "attn":
+            if mode == "train":
+                mix = A.attn_train(p["attn"], h, positions, theta=cfg.rope_theta,
+                                   qk_norm=cfg.qk_norm, q_chunk=cfg.attn_chunk_q)
+            elif mode == "prefill":
+                mix, new_cache = A.attn_prefill(
+                    p["attn"], h, positions, theta=cfg.rope_theta,
+                    qk_norm=cfg.qk_norm, q_chunk=cfg.attn_chunk_q,
+                    n_blocks=cache_geom[0], max_len=cache_geom[1],
+                    use_kernel=self.use_kernels)
+            elif mode == "encode":
+                q, k, v = A._project_qkv(p["attn"], h, positions,
+                                         cfg.rope_theta, cfg.qk_norm)
+                o = A.flash_attention_jnp(q, k, v, causal=False,
+                                          q_chunk=cfg.attn_chunk_q)
+                mix = jnp.einsum("bshk,hkd->bsd", o,
+                                 p["attn"]["wo"].astype(h.dtype))
+            else:  # decode
+                kc, vc = cache
+                mix, new_cache = A.attn_decode(
+                    p["attn"], h, positions, kc, vc, theta=cfg.rope_theta,
+                    qk_norm=cfg.qk_norm, use_kernel=self.use_kernels)
+        elif spec.mixer == "mamba":
+            if mode in ("train", "prefill", "encode"):
+                mix, st = M.mamba_chunked(p["mamba"], h, chunk=cfg.ssm.chunk,
+                                          state=cache if mode == "prefill"
+                                          else None)
+                new_cache = st if mode == "prefill" else cache
+            else:
+                mix, new_cache = M.mamba_decode(p["mamba"], h, cache)
+        elif spec.mixer == "mlstm":
+            if mode in ("train", "prefill", "encode"):
+                mix, st = X.mlstm_chunked(p["mlstm"], h, chunk=cfg.ssm.chunk,
+                                          n_heads=cfg.n_heads,
+                                          state=cache if mode == "prefill"
+                                          else None)
+                new_cache = st if mode == "prefill" else cache
+            else:
+                mix, new_cache = X.mlstm_decode(p["mlstm"], h,
+                                                cache, n_heads=cfg.n_heads)
+        elif spec.mixer == "slstm":
+            if mode in ("train", "prefill", "encode"):
+                mix, st = X.slstm_seq(p["slstm"], h,
+                                      state=cache if mode == "prefill"
+                                      else None)
+                new_cache = st if mode == "prefill" else cache
+            else:
+                mix, new_cache = X.slstm_decode(p["slstm"], h, cache)
+        else:
+            raise ValueError(spec.mixer)
+        x = x + mix
+        if spec.cross and enc_kv is not None:
+            hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+            k, v = enc_kv
+            x = x + A.cross_attn(p["cross"], hx, k, v,
+                                 q_chunk=cfg.attn_chunk_q)
+        if spec.ffn != "none":
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            out = 0.0
+            if "moe" in spec.ffn:
+                out = F.moe_ffn(self.moe_ctx, p["moe"], h2)
+            if "dense" in spec.ffn:
+                out = out + F.dense_ffn(p["ffn"], h2)
+            x = x + out
+        return x, new_cache
+
+    def _stack(self, layers_p, x, positions, mode, caches, enc_kv=None,
+               cross_cache=None, specs=None, n_super=None,
+               want_cache: bool = False, cache_geom=None):
+        """Scan the superblock stack.  caches: list (per position) of stacked
+        states (leading n_super dim) or None.  want_cache: emit (prefill) or
+        thread (decode) per-layer caches through the scan."""
+        specs = specs or self.specs
+        n_super = n_super or self.n_super
+        remat = self.cfg.remat != "none" and mode == "train"
+
+        def body(x, xs):
+            p_sl, cache_sl, xkv_sl = xs
+            new_caches = []
+            for i, spec in enumerate(specs):
+                ekv = xkv_sl[i] if xkv_sl is not None else None
+                x, nc = self._block(spec, p_sl[i], x, positions, mode,
+                                    cache_sl[i] if cache_sl is not None
+                                    else None,
+                                    enc_kv=ekv, cache_geom=cache_geom)
+                new_caches.append(nc)
+            x = self._c(x, ("batch", None, None))
+            return x, (new_caches if want_cache else 0)
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = (layers_p, caches, cross_cache)
+        x, new_caches = jax.lax.scan(body, x, xs, length=n_super)
+        return x, (new_caches if want_cache else None)
+
+    def _stack_decode(self, layers_p, x, pos, caches, cross_cache=None):
+        """Decode scan with READ-ONLY caches as scan xs: attention folds the
+        current token's K/V into its softmax combine, the scan emits only
+        the tiny new-token page entries (ys), and the pool is committed ONCE
+        post-scan with a single batched dynamic_update_slice — the
+        baseline's per-step full-cache copy (scan ys threading) disappears
+        and the step's cache traffic drops to one read + one token write
+        (§Perf).  Recurrent states (small) stay as xs -> ys."""
+        specs = self.specs
+
+        def body(x, xs):
+            p_sl, cache_sl, xkv_sl = xs
+            new_entries = []
+            for i, spec in enumerate(specs):
+                p = p_sl[i]
+                h = rms_norm(x, p["ln1"], self.cfg.norm_eps)
+                if spec.mixer == "attn":
+                    kc, vc = cache_sl[i]
+                    mix, entry = A.attn_decode_readonly(
+                        p["attn"], h, pos, kc, vc,
+                        theta=self.cfg.rope_theta, qk_norm=self.cfg.qk_norm)
+                else:
+                    st = cache_sl[i]
+                    if spec.mixer == "mamba":
+                        mix, entry = M.mamba_decode(p["mamba"], h, st)
+                    elif spec.mixer == "mlstm":
+                        mix, entry = X.mlstm_decode(p["mlstm"], h, st,
+                                                    n_heads=self.cfg.n_heads)
+                    else:
+                        mix, entry = X.slstm_decode(p["slstm"], h, st)
+                    entry = jax.tree.map(
+                        lambda s, old: s.astype(old.dtype), entry, st)
+                new_entries.append(entry)
+                x = x + mix
+                if spec.cross and xkv_sl is not None and xkv_sl[i] is not None:
+                    hx = rms_norm(x, p["ln_x"], self.cfg.norm_eps)
+                    k, v = xkv_sl[i]
+                    x = x + A.cross_attn(p["cross"], hx, k, v,
+                                         q_chunk=self.cfg.attn_chunk_q)
+                if spec.ffn != "none":
+                    h2 = rms_norm(x, p["ln2"], self.cfg.norm_eps)
+                    out = 0.0
+                    if "moe" in spec.ffn:
+                        out = F.moe_ffn(self.moe_ctx, p["moe"], h2)
+                    if "dense" in spec.ffn:
+                        out = out + F.dense_ffn(p["ffn"], h2)
+                    x = x + out
+            x = self._c(x, ("batch", None, None))
+            return x, new_entries
+
+        x, entries = jax.lax.scan(body, x, (layers_p, caches, cross_cache),
+                                  length=self.n_super)
+        # single post-scan commit of all layers' new-token pages
+        new_caches = []
+        for i, spec in enumerate(specs):
+            if spec.mixer == "attn":
+                kc, vc = caches[i]
+                kn, vn = entries[i]            # (n_super, B, KV, hd)
+                t_blk = kc.shape[2]
+                blk, off = pos // t_blk, pos % t_blk
+                upd = lambda c, t: jax.lax.dynamic_update_slice(
+                    c, t[:, None, None].astype(c.dtype),
+                    (0, blk, off, 0, 0, 0))
+                new_caches.append((upd(kc, kn), upd(vc, vn)))
+            else:
+                new_caches.append(entries[i])  # full new state stacks
+        return x, new_caches
+
+    # --------------------------------------------------------- public API --
+    def forward(self, params, tokens, frames=None):
+        """tokens (B, S) -> logits (B, S, vocab_p).  Train-mode path.
+        ``frames``: encoder inputs for enc-dec archs (whisper stub)."""
+        return self._forward_mode(params, tokens, mode="train", frames=frames)
+
+    def _embed(self, params, tokens):
+        x = embed_lookup(params["embed"], tokens).astype(self.dtype)
+        return self._c(x, ("batch", None, None))
+
+    def _head(self, params, x):
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        if self.cfg.tie_embeddings:
+            logits = lm_head(x, params["embed"], transpose=True)
+        else:
+            logits = lm_head(x, params["lm_head"], transpose=False)
+        return self._c(logits, ("batch", None, "vocab"))
+
+    def _forward_mode(self, params, tokens, mode, frames=None):
+        B, S = tokens.shape
+        positions = jnp.arange(S)
+        x = self._embed(params, tokens)
+        enc_kv = None
+        cross_cache = None
+        if self.cfg.enc_dec:
+            enc_out = self.encode(params, frames)
+            # per decoder superblock position, precompute cross K/V stacks
+            cross_cache = self._cross_kv(params, enc_out)
+        x, _ = self._stack(params["layers"], x, positions, mode, None,
+                           cross_cache=cross_cache)
+        return self._head(params, x)
+
+    def encode(self, params, frames):
+        """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+        enc = params["enc"]
+        x = (frames + enc["pos_embed"][None, :frames.shape[1]]).astype(self.dtype)
+        pos = jnp.arange(x.shape[1])
+        x, _ = self._stack(enc["layers"], x, pos, "encode", None,
+                           specs=[LayerSpec("attn", "dense")],
+                           n_super=self.cfg.n_enc_layers)
+        return rms_norm(x, enc["final_norm"], self.cfg.norm_eps)
+
+    def _cross_kv(self, params, enc_out):
+        """Stacked (n_super, ...) cross K/V for each decoder position."""
+        out = []
+        for i, spec in enumerate(self.specs):
+            if not spec.cross:
+                out.append(None)
+                continue
+            cp = params["layers"][i]["cross"]
+            k = jnp.einsum("bsd,ldhk->lbshk", enc_out,
+                           cp["wk"].astype(enc_out.dtype))
+            v = jnp.einsum("bsd,ldhk->lbshk", enc_out,
+                           cp["wv"].astype(enc_out.dtype))
+            out.append((k, v))
+        return out
+
+    def loss(self, params, batch):
+        logits = self._forward_mode(params, batch["tokens"], "train",
+                                    frames=batch.get("frames"))
+        return softmax_cross_entropy(logits, batch["labels"], self.cfg.vocab)
+
+    # ----------------------------------------------------------- serving --
+    def cache_blocks(self, max_len: int) -> int:
+        nb = max(1, max_len // 1024)
+        return nb
+
+    def init_cache(self, batch: int, max_len: int, abstract: bool = False,
+                   prompt_len: Optional[int] = None):
+        """Full decode-cache dict with per-position stacked layer caches
+        (leading n_super), as produced by ``prefill``."""
+        cfg = self.cfg
+        nb = self.cache_blocks(max_len)
+        t_blk = max_len // nb
+        caches = []
+        mk = (jax.ShapeDtypeStruct if abstract
+              else lambda s, d: jnp.zeros(s, d))
+        for spec in self.specs:
+            if spec.mixer == "attn":
+                shp = (self.n_super, nb, t_blk, batch, cfg.n_kv_heads, cfg.hd)
+                caches.append((mk(shp, self.dtype), mk(shp, self.dtype)))
+            elif spec.mixer == "mamba":
+                d_in = cfg.ssm.expand * cfg.d_model
+                nh = max(1, d_in // 128)
+                Pd = d_in // nh
+                caches.append(M.MambaState(
+                    h=mk((self.n_super, batch, nh, Pd, cfg.ssm.d_state),
+                         jnp.float32),
+                    conv=mk((self.n_super, batch, cfg.ssm.d_conv - 1, d_in),
+                            self.dtype)))
+            elif spec.mixer == "mlstm":
+                d_in = int(cfg.d_model * 2.0)
+                Pd = d_in // cfg.n_heads
+                caches.append(X.MLSTMState(
+                    c=mk((self.n_super, batch, cfg.n_heads, Pd, Pd), jnp.float32),
+                    n=mk((self.n_super, batch, cfg.n_heads, Pd), jnp.float32),
+                    m=mk((self.n_super, batch, cfg.n_heads), jnp.float32)))
+            elif spec.mixer == "slstm":
+                z = lambda: mk((self.n_super, batch, cfg.d_model), jnp.float32)
+                caches.append(X.SLSTMState(h=z(), c=z(), n=z(), m=z()))
+        cross = None
+        if cfg.enc_dec:
+            cross = [(mk((self.n_super, batch, cfg.enc_seq, cfg.n_kv_heads,
+                          cfg.hd), self.dtype),
+                      mk((self.n_super, batch, cfg.enc_seq, cfg.n_kv_heads,
+                          cfg.hd), self.dtype))
+                     for s in self.specs]
+        length = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                  else jnp.array(prompt_len or 0, jnp.int32))
+        return {"layers": caches, "length": length, "cross": cross}
+
+    def cache_specs(self, cache):
+        """PartitionSpecs for the cache pytree (pages over the pool axes)."""
+        def spec_of(leaf):
+            if leaf.ndim == 6:   # attn kv: (L, nb, tb, B, KV, hd)
+                return self.resolver.spec(
+                    (None, "kv_seq", None, "batch", "kv_heads", "head_dim"),
+                    leaf.shape)
+            if leaf.ndim == 5 and self.cfg.enc_dec:  # cross kv (L,B,S,KV,hd)
+                return self.resolver.spec(
+                    (None, "batch", None, "kv_heads", "head_dim"), leaf.shape)
+            if leaf.ndim == 0:
+                return P()
+            # recurrent states: (L, B, ...)
+            ax = [None, "batch"] + [None] * (leaf.ndim - 2)
+            return self.resolver.spec(tuple(ax), leaf.shape)
+        return jax.tree.map(spec_of, cache)
+
+    def prefill(self, params, tokens, frames=None, max_len: int = 0):
+        """Returns (last-token logits, cache) for a prompt batch.
+
+        ``max_len`` (>= prompt length) sizes the block-paged cache; defaults
+        to the prompt length padded to the 1024-token page size.
+        """
+        B, S = tokens.shape
+        max_len = max(max_len, pad_to_multiple(S, 1024))
+        nb = self.cache_blocks(max_len)
+        positions = jnp.arange(S)
+        x = self._embed(params, tokens)
+        cross_cache = None
+        if self.cfg.enc_dec:
+            cross_cache = self._cross_kv(params, self.encode(params, frames))
+        # prefill caches are *produced* as scan ys (no inputs needed)
+        x, new_caches = self._stack(params["layers"], x, positions, "prefill",
+                                    None, cross_cache=cross_cache,
+                                    want_cache=True, cache_geom=(nb, max_len))
+        logits = self._head(params, x[:, -1:])
+        return logits, {"layers": new_caches,
+                        "length": jnp.array(S, jnp.int32),
+                        "cross": cross_cache}
+
+    def decode_step(self, params, cache, token):
+        """token (B, 1) int32; cache from prefill.  One serve step."""
+        x = self._embed(params, token)
+        x, new_caches = self._stack_decode(params["layers"], x,
+                                           cache["length"], cache["layers"],
+                                           cross_cache=cache.get("cross"))
+        logits = self._head(params, x)
+        return logits, {"layers": new_caches, "length": cache["length"] + 1,
+                        "cross": cache.get("cross")}

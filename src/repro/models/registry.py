@@ -1,0 +1,120 @@
+"""Model registry: build any assigned architecture against a mesh, produce
+step functions and abstract input specs for the dry-run.
+
+``input_specs(model, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step the shape exercises (train_step for ``train_*``, prefill
+for ``prefill_*``, serve_step for ``decode_*``/``long_*``) — weak-type
+correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as C
+from .model import Model
+from .sharding import (BASELINE_RULES, DECODE_RULES, LONG_DECODE_RULES,
+                       MeshRules)
+
+
+def build(arch: "str | C.ArchConfig", mesh, rules: Optional[MeshRules] = None,
+          use_kernels: bool = False) -> Model:
+    cfg = C.get(arch) if isinstance(arch, str) else arch
+    return Model(cfg, mesh, rules or BASELINE_RULES, use_kernels=use_kernels)
+
+
+def pick_rules(cfg: C.ArchConfig, shape: C.ShapeSpec,
+               mesh=None) -> MeshRules:
+    """Default rule preset per shape kind (the §Perf baseline)."""
+    if shape.kind == "train":
+        return BASELINE_RULES
+    rules = DECODE_RULES if shape.seq_len < 100_000 else LONG_DECODE_RULES
+    # models whose DENSE weights are too large for TP-only keep FSDP at
+    # serve time (weights all-gathered per layer inside the scan; latency
+    # traded for fit).  Expert weights are excluded: at decode they are
+    # 'split'-sharded over experts x d_ff (DECODE_RULES) and never gathered.
+    big = _dense_param_bytes(cfg) / 16 > 12e9
+    if big:
+        rules = rules.replace(fsdp="data")
+    return rules
+
+
+def _rough_param_bytes(cfg: C.ArchConfig) -> float:
+    return cfg.n_params() * 2.0  # bf16
+
+
+def _dense_param_bytes(cfg: C.ArchConfig) -> float:
+    n = cfg.n_params()
+    if cfg.moe is not None:
+        m = cfg.moe
+        me = m.moe_every or 1
+        n_moe_layers = cfg.n_layers // me
+        n -= n_moe_layers * m.n_experts * 3 * cfg.d_model * m.d_ff_expert
+    return n * 2.0  # bf16
+
+
+def input_specs(model: Model, shape: C.ShapeSpec) -> Dict[str, Any]:
+    """Abstract inputs for the step function this shape lowers."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        out = {"tokens": tok(B, S), "labels": tok(B, S)}
+        if cfg.enc_dec:
+            out["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                                 model.dtype)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": tok(B, S)}
+        if cfg.enc_dec:
+            out["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model),
+                                                 model.dtype)
+        return out
+    # decode: one new token against a cache of seq_len
+    cache = model.init_cache(B, S, abstract=True)
+    return {"token": tok(B, 1), "cache": cache}
+
+
+def batch_specs(model: Model, shape: C.ShapeSpec):
+    """PartitionSpecs matching input_specs."""
+    r = model.resolver
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": r.spec(("batch", None), (shape.global_batch,
+                                                  shape.seq_len))}
+        if shape.kind == "train":
+            out["labels"] = out["tokens"]
+        if model.cfg.enc_dec:
+            out["frames"] = r.spec(("batch", None, None),
+                                   (shape.global_batch, model.cfg.enc_seq,
+                                    model.cfg.d_model))
+        return out
+    cache = model.init_cache(shape.global_batch, shape.seq_len, abstract=True)
+    return {"token": r.spec(("batch", None), (shape.global_batch, 1)),
+            "cache": model.cache_specs(cache)}
+
+
+# ------------------------------------------------------------ param count --
+def param_stats(model: Model) -> Dict[str, float]:
+    """Exact parameter counts from the abstract tree (N for 6*N*D)."""
+    params = model.abstract_params()
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    total = active = embed = 0
+    for path, leaf in flat:
+        n = math.prod(leaf.shape)
+        keys = [getattr(k, "key", getattr(k, "idx", "")) for k in path]
+        total += n
+        if "embed" in keys or "lm_head" in keys or "pos_embed" in keys:
+            embed += n
+            active += n
+            continue
+        if "experts" in keys:
+            m = model.cfg.moe
+            active += n * m.top_k / m.n_experts
+        else:
+            active += n
+    return {"total": total, "active": active, "embed": embed,
+            "non_embed": total - embed,
+            "active_non_embed": active - embed}

@@ -1,0 +1,155 @@
+"""Logical-axis sharding: every parameter/activation carries *logical* axis
+names; a ``MeshRules`` table maps logical axes to physical mesh axes.
+
+This is the single knob the §Perf hillclimb turns: changing a rule (e.g.
+``mlp: 'model' -> ('data','model')``) re-shards the whole model without
+touching model code.  Rules resolve to ``PartitionSpec``s against whatever
+mesh is active (single-pod ``(data, model)`` or multi-pod
+``(pod, data, model)``); axes absent from the mesh are dropped, and logical
+dims whose size does not divide the mapped mesh-axis product fall back to
+replication (recorded, so the dry-run can report every fallback).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes, or None)."""
+    batch: Axis = ("pod", "data")     # data parallel over pod x data
+    fsdp: Axis = "data"               # weight-shard axis (ZeRO-3 style)
+    tp: Axis = "model"                # tensor-parallel axis
+    mlp: Axis = "model"               # FFN hidden dim (Megatron split)
+    seq: Axis = None                  # sequence parallelism (long-context)
+    expert: Axis = "model"            # expert parallelism
+    # expert weight layout: 'gather' mode shards D over expert_din (FSDP,
+    # weights all-gathered just-in-time — right for training where tokens
+    # >> weights); 'split' mode shards F over expert_dff (weights stay put,
+    # the down-proj partial sums psum — right for decode where tokens per
+    # expert are tiny and weight gathers dominate; §Perf cell 4).
+    expert_din: Axis = "data"
+    expert_dff: Axis = None
+    vocab: Axis = "model"
+    heads: Axis = "model"
+    kv_heads: Axis = "model"
+    head_dim: Axis = None
+    kv_seq: Axis = None               # decode KV-cache sequence sharding
+    pages: Axis = "model"             # FUSEE KV-pool page axis ("memory nodes")
+    replica: Axis = None
+
+    def get(self, name: Optional[str]) -> Axis:
+        if name is None:
+            return None
+        return getattr(self, name)
+
+    def replace(self, **kw) -> "MeshRules":
+        return dataclasses.replace(self, **kw)
+
+
+# Rule presets ----------------------------------------------------------------
+# paper-faithful baseline: TP over 'model', DP over 'pod','data', FSDP for
+# weights over 'data' (needed to fit >=100B params), no sequence parallelism.
+BASELINE_RULES = MeshRules()
+
+# decode rules: batch over 'data'; KV-cache pages over 'model' (the FUSEE
+# pool axis — pages live on "memory nodes"); weights TP-only by default
+# (pick_rules adds fsdp='data' for models too big for TP-only); expert
+# weights in 'split' layout (see above — ship activations, not weights).
+DECODE_RULES = MeshRules(batch="data", fsdp=None, kv_seq="model",
+                         expert_din=None, expert_dff="data")
+
+# long-context decode (batch=1): pages spread over the whole mesh.
+LONG_DECODE_RULES = MeshRules(batch=None, fsdp=None,
+                              kv_seq=("pod", "data", "model"))
+
+# pure data parallelism: every device holds the full model, batch shards
+# over the whole mesh.  For sub-~1B models TP over 16 ways wastes more in
+# collectives + indivisible-head replication than it saves (§Perf: smollm
+# useful_ratio 0.038 under TP vs ~0.5 under DP); params/grads/moments fit
+# per-device, and the only collective left is the gradient all-reduce.
+DP_ONLY_RULES = MeshRules(batch=("pod", "data", "model"), fsdp=None,
+                          tp=None, mlp=None, expert=None, vocab=None,
+                          heads=None, kv_heads=None, head_dim=None,
+                          kv_seq=None, pages=None)
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _axis_product(axis: Axis, sizes: Dict[str, int]) -> Tuple[Tuple[str, ...], int]:
+    if axis is None:
+        return (), 1
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    present = tuple(a for a in names if a in sizes)
+    prod = 1
+    for a in present:
+        prod *= sizes[a]
+    return present, prod
+
+
+class ShardingResolver:
+    """Resolves (logical_axes, shape) -> PartitionSpec for a given mesh."""
+
+    def __init__(self, mesh: Mesh, rules: MeshRules):
+        self.mesh = mesh
+        self.rules = rules
+        self.sizes = _mesh_axis_sizes(mesh)
+        self.fallbacks: list = []  # (logical_axis, dim_size, mesh_axes) records
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        parts = []
+        used: set = set()
+        for i, name in enumerate(logical_axes):
+            axis = self.rules.get(name)
+            names, prod = _axis_product(axis, self.sizes)
+            names = tuple(n for n in names if n not in used)
+            prod = 1
+            for n in names:
+                prod *= self.sizes[n]
+            if not names or prod == 1:
+                parts.append(None)
+                continue
+            if shape is not None and shape[i] % prod != 0:
+                # try prefixes of the axis tuple before giving up
+                ok = None
+                for j in range(len(names) - 1, 0, -1):
+                    sub = names[:j]
+                    p = 1
+                    for n in sub:
+                        p *= self.sizes[n]
+                    if shape[i] % p == 0:
+                        ok = sub
+                        break
+                if ok is None:
+                    self.fallbacks.append((name, None if shape is None else shape[i], names))
+                    parts.append(None)
+                    continue
+                names = ok
+            parts.append(names if len(names) > 1 else names[0])
+            used.update(names)
+        return P(*parts)
+
+    def named(self, logical_axes: Sequence[Optional[str]],
+              shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def tree_specs(resolver: ShardingResolver, axes_tree, shape_tree):
+    """Map a pytree of logical-axes tuples + matching ShapeDtypeStructs to
+    PartitionSpecs."""
+    return jax.tree.map(
+        lambda ax, sh: resolver.spec(ax, sh.shape),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )

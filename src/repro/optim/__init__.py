@@ -1,0 +1,4 @@
+"""Optimizers, schedules, grad clipping, and gradient compression."""
+from .compress import init_error_feedback, pod_compressed_mean  # noqa: F401
+from .optimizer import (Moment, OptConfig, Optimizer, clip_by_global_norm,  # noqa
+                        global_norm, schedule)

@@ -1,0 +1,64 @@
+"""Cross-pod gradient compression (int8 + error feedback).
+
+At multi-pod scale the pod<->pod links (DCI) are the scarcest bandwidth; the
+standard trick is to run the intra-pod reduction at full precision and the
+cross-pod merge quantized.  In JAX SPMD the cross-pod all-reduce is implicit
+in ``jax.grad`` (parameters are replicated over 'pod'), so to compress it we
+run the *whole grad computation* under a ``shard_map`` that maps ONLY the
+'pod' axis (every other mesh axis stays auto-sharded, ``auto=...``):
+
+    per-pod grads  ->  (+ error feedback)  ->  int8 quantize
+      ->  all_gather over 'pod' (int8 on the wire, 4x less DCI traffic)
+      ->  local dequant + sum  ->  update
+
+The residual ``g - dequant(q)`` is carried in the train state and re-added
+next step (error feedback), which keeps the quantization bias from
+accumulating.  ``compression error -> 0`` over steps is property-tested.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quant(x):
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True) if x.ndim else jnp.abs(x)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def pod_compressed_mean(grads, err, *, axis: str = "pod"):
+    """Inside shard_map(mapped over 'pod'): per-pod grads -> global mean.
+
+    grads: per-pod gradient pytree (fp32).  err: error-feedback pytree.
+    Returns (merged grads, new err).
+    """
+    npod = jax.lax.axis_size(axis)
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, s = _quant(g)
+        # int8 all-gather: wire traffic is 1 byte/elem instead of >=4
+        qg = jax.lax.all_gather(q, axis)          # (npod, ...)
+        sg = jax.lax.all_gather(s, axis)
+        merged = jnp.sum(qg.astype(jnp.float32) * sg, axis=0) / npod
+        new_e = g - q.astype(jnp.float32) * s     # local residual
+        return merged, new_e
+
+    out = jax.tree.map(one, grads, err)
+    merged = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                          and isinstance(t[0], jax.Array))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                           and isinstance(t[0], jax.Array))
+    return merged, new_err
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,209 @@
+"""Optimizers from scratch: AdamW / Lion / SGD-momentum, with optional
+int8-quantized moments (8-bit Adam) for the >=100B architectures.
+
+ZeRO note: parameters in this framework are already FSDP-sharded over the
+'data' mesh axis (models/sharding.py), and optimizer state mirrors parameter
+sharding exactly — i.e. moments are partitioned over data x model, which is
+the ZeRO-3 superset of ZeRO-1.  ``state_specs`` simply reuses param specs.
+
+int8 moments use blockwise absmax quantization over the last axis (block =
+whole row; dequant-update-requant per step with fp32 scales).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"              # 'adamw' | 'lion' | 'sgdm'
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moments: str = "fp32"            # 'fp32' | 'int8'
+    # schedule
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: OptConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+# ------------------------------------------------------- int8 moment codec --
+def _quant(x):
+    """fp32 -> (int8, fp32 row scales)."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+class Moment(NamedTuple):
+    """A possibly-quantized moment tensor."""
+    value: jax.Array                   # fp32 or int8
+    scale: Optional[jax.Array]         # None for fp32
+
+
+def _moment_init(p, quantized: bool) -> Moment:
+    if quantized and p.ndim >= 1:
+        z = jnp.zeros(p.shape, jnp.int8)
+        s = jnp.zeros((*p.shape[:-1], 1), jnp.float32)
+        return Moment(z, s)
+    return Moment(jnp.zeros(p.shape, jnp.float32), None)
+
+
+def _moment_get(m: Moment, sqrt_domain: bool = False):
+    if m.scale is None:
+        return m.value
+    v = _dequant(m.value, m.scale)
+    return jnp.square(v) if sqrt_domain else v
+
+
+def _moment_set(m: Moment, x, sqrt_domain: bool = False) -> Moment:
+    """``sqrt_domain``: store sqrt(x) (x >= 0).  Linear int8 cannot span the
+    dynamic range of Adam's second moment (g^2): small-v rows quantize to 0
+    and m/(sqrt(0)+eps) explodes.  sqrt halves the dynamic range (|g|), the
+    standard fix for 8-bit second moments."""
+    if m.scale is None:
+        return Moment(x.astype(jnp.float32), None)
+    q, s = _quant(jnp.sqrt(x) if sqrt_domain else x)
+    return Moment(q, s)
+
+
+# ---------------------------------------------------------------- updates --
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * factor), grads), norm
+
+
+class Optimizer:
+    """Pure-functional optimizer: state is a pytree, update is jittable."""
+
+    def __init__(self, cfg: OptConfig):
+        self.cfg = cfg
+
+    def init(self, params):
+        q = self.cfg.moments == "int8"
+        mk = lambda p: _moment_init(p, q)
+        state: Dict[str, Any] = {"count": jnp.zeros((), jnp.int32)}
+        if self.cfg.name in ("adamw",):
+            state["m"] = jax.tree.map(mk, params)
+            state["v"] = jax.tree.map(mk, params)
+        elif self.cfg.name in ("lion", "sgdm"):
+            state["m"] = jax.tree.map(mk, params)
+        else:
+            raise ValueError(self.cfg.name)
+        return state
+
+    def state_specs(self, param_specs):
+        """PartitionSpecs for the state, mirroring param sharding."""
+        from jax.sharding import PartitionSpec as P
+
+        def expand(ps):
+            # Moment(value sharded like the param; row scales shed the last
+            # dim's sharding — their trailing axis has size 1)
+            if self.cfg.moments == "int8":
+                lst = list(ps)
+                if lst:
+                    lst[-1] = None
+                return Moment(value=ps, scale=P(*lst))
+            return Moment(value=ps, scale=None)
+
+        out = {"count": P()}
+        keys = ["m", "v"] if self.cfg.name == "adamw" else ["m"]
+        for k in keys:
+            out[k] = jax.tree.map(
+                expand, param_specs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        return out
+
+    def update(self, grads, state, params, extra_decay_mask=None):
+        """Returns (new_params, new_state, metrics)."""
+        cfg = self.cfg
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        count = state["count"] + 1
+        lr = schedule(cfg, count)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+
+        if cfg.name == "adamw":
+            bc1 = 1 - cfg.b1 ** count.astype(jnp.float32)
+            bc2 = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+            def upd(p, g, m, v):
+                mf = cfg.b1 * _moment_get(m) + (1 - cfg.b1) * g
+                vf = (cfg.b2 * _moment_get(v, sqrt_domain=True)
+                      + (1 - cfg.b2) * jnp.square(g))
+                step = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+                decay = cfg.weight_decay * p.astype(jnp.float32)
+                new_p = p.astype(jnp.float32) - lr * (step + decay)
+                return (new_p.astype(p.dtype), _moment_set(m, mf),
+                        _moment_set(v, vf, sqrt_domain=True))
+
+            out = jax.tree.map(upd, params, grads, state["m"], state["v"],
+                               is_leaf=lambda x: isinstance(x, Moment))
+            leaves = lambda i: jax.tree.map(
+                lambda t: t[i], out,
+                is_leaf=lambda t: isinstance(t, tuple) and len(t) == 3
+                and isinstance(t[1], Moment))
+            new_params, new_m, new_v = leaves(0), leaves(1), leaves(2)
+            return new_params, {"count": count, "m": new_m, "v": new_v}, metrics
+
+        if cfg.name == "lion":
+            def upd(p, g, m):
+                mf = _moment_get(m)
+                step = jnp.sign(cfg.b1 * mf + (1 - cfg.b1) * g)
+                new_m = cfg.b2 * mf + (1 - cfg.b2) * g
+                decay = cfg.weight_decay * p.astype(jnp.float32)
+                new_p = p.astype(jnp.float32) - lr * (step + decay)
+                return new_p.astype(p.dtype), _moment_set(m, new_m)
+
+            out = jax.tree.map(upd, params, grads, state["m"],
+                               is_leaf=lambda x: isinstance(x, Moment))
+            leaves = lambda i: jax.tree.map(
+                lambda t: t[i], out,
+                is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                and isinstance(t[1], Moment))
+            return leaves(0), {"count": count, "m": leaves(1)}, metrics
+
+        if cfg.name == "sgdm":
+            def upd(p, g, m):
+                new_m = cfg.b1 * _moment_get(m) + g
+                new_p = p.astype(jnp.float32) - lr * new_m
+                return new_p.astype(p.dtype), _moment_set(m, new_m)
+
+            out = jax.tree.map(upd, params, grads, state["m"],
+                               is_leaf=lambda x: isinstance(x, Moment))
+            leaves = lambda i: jax.tree.map(
+                lambda t: t[i], out,
+                is_leaf=lambda t: isinstance(t, tuple) and len(t) == 2
+                and isinstance(t[1], Moment))
+            return leaves(0), {"count": count, "m": leaves(1)}, metrics
+
+        raise ValueError(cfg.name)

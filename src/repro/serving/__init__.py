@@ -1,0 +1,5 @@
+"""FUSEE-managed disaggregated KV-cache serving layer."""
+from .engine import Request, ServeEngine  # noqa: F401
+from .kvpool import KVPool, PoolConfig  # noqa: F401
+from .snapshot_jax import EpochResult, snapshot_epoch, snapshot_epoch_np  # noqa
+from . import slots_jax  # noqa: F401

@@ -1,0 +1,170 @@
+"""Continuous-batching serve engine over a FUSEE-managed KV pool.
+
+Requests stream in; the engine packs up to ``max_batch`` of them into fixed
+decode slots, prefills new arrivals, decodes the active set each step, and
+retires finished sequences.  The FUSEE pool provides:
+
+* prefix-cache metadata: prompt token-blocks are hashed; block hashes are
+  SEARCHed in the RACE index (race_lookup kernel) — hits are counted as
+  reusable prefix pages (the disaggregated prefix cache), misses are
+  INSERTed via SNAPSHOT epochs after prefill;
+* page accounting for each slot's cache blocks via the two-level allocator
+  (chunk grants from pool shards -> client slab);
+* crash recovery of engine workers via the embedded page log.
+
+The engine is deliberately synchronous (one jitted decode step per tick) —
+the distributed story lives in the model (pjit) and pool (replicated
+metadata), not in host threading.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from .kvpool import KVPool, PoolConfig
+
+BLOCK_TOKENS = 64   # prefix-hash granularity
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    slot: int = -1
+    pages: Optional[np.ndarray] = None
+    prefix_hits: int = 0
+
+
+def _block_hashes(prompt: np.ndarray) -> np.ndarray:
+    """Rolling content hash per BLOCK_TOKENS block (prefix identity)."""
+    nb = len(prompt) // BLOCK_TOKENS
+    out = np.zeros(max(nb, 0), np.int64)
+    h = 1469598103  # FNV-style rolling hash in Python ints (no overflow)
+    for b in range(nb):
+        blk = prompt[b * BLOCK_TOKENS:(b + 1) * BLOCK_TOKENS]
+        for x in (b, *(int(t) for t in blk[::7])):
+            h = ((h ^ x) * 1099511628211) & 0x7FFFFFFF
+        out[b] = h
+    return out.astype(np.int32)
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, *, max_batch: int = 4,
+                 max_len: int = 256, pool_cfg: Optional[PoolConfig] = None,
+                 cid: int = 0, greedy: bool = True, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.pool = KVPool(pool_cfg or PoolConfig())
+        self.cid = cid
+        self.greedy = greedy
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+        self.cache = None
+        self.slots_free = list(range(max_batch))
+        self.slot_tokens = np.zeros((max_batch, max_len), np.int32)
+        self.slot_len = np.zeros((max_batch,), np.int32)
+        self._decode = jax.jit(model.decode_step, donate_argnums=1)
+        self.steps = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    # ------------------------------------------------------------- ticks --
+    def _admit(self):
+        admitted = False
+        while self.queue and self.slots_free:
+            req = self.queue.pop(0)
+            req.slot = self.slots_free.pop(0)
+            # FUSEE prefix lookup: count reusable pages for this prompt
+            hashes = _block_hashes(req.prompt)
+            if len(hashes):
+                ptr, found = self.pool.search(hashes)
+                req.prefix_hits = int(found.sum())
+                missing = hashes[~found]
+                if len(missing):
+                    pages = self.pool.alloc_pages(self.cid, len(missing))
+                    live = pages >= 0
+                    if live.any():
+                        self.pool.write_pages(self.cid, pages[live],
+                                              missing[live], opcode=1)
+                        self.pool.insert_batch(self.cid, missing[live],
+                                               pages[live])
+                    req.pages = pages
+            self.slot_tokens[req.slot, :len(req.prompt)] = req.prompt
+            self.slot_len[req.slot] = len(req.prompt)
+            self.active[req.slot] = req
+            admitted = True
+        return admitted
+
+    def _prefill_all(self):
+        """(Re)prefill the whole active batch into a fresh cache.
+
+        Fixed-slot batching: the batch tensor always has max_batch rows;
+        empty slots hold a pad prompt of length 1."""
+        L = int(self.slot_len.max()) if self.active else 1
+        L = max(L, 1)
+        toks = jnp.asarray(self.slot_tokens[:, :L])
+        logits, cache = self.model.prefill(self.params, toks,
+                                           max_len=self.max_len)
+        self.cache = cache
+        return logits
+
+    def step(self) -> int:
+        """One engine tick: admit + (re)prefill if membership changed, else
+        decode one token for every active slot.  Returns #active."""
+        changed = self._admit()
+        if not self.active:
+            return 0
+        if changed or self.cache is None:
+            logits = self._prefill_all()
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for s, req in self.active.items():
+                tok = int(nxt[s])
+                req.out.append(tok)
+                pos = int(self.slot_len[s])
+                self.slot_tokens[s, pos] = tok
+                self.slot_len[s] = pos + 1
+        else:
+            token = jnp.asarray(
+                self.slot_tokens[np.arange(self.max_batch),
+                                 np.maximum(self.slot_len - 1, 0)][:, None])
+            logits, self.cache = self._decode(self.params, self.cache, token)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for s, req in self.active.items():
+                tok = int(nxt[s])
+                req.out.append(tok)
+                pos = int(self.slot_len[s])
+                if pos < self.max_len:
+                    self.slot_tokens[s, pos] = tok
+                    self.slot_len[s] = pos + 1
+        self.steps += 1
+        # retire finished
+        for s in list(self.active):
+            req = self.active[s]
+            if len(req.out) >= req.max_new or self.slot_len[s] >= self.max_len:
+                self.finished.append(req)
+                del self.active[s]
+                self.slots_free.append(s)
+                self.slot_tokens[s] = 0
+                self.slot_len[s] = 0
+                if req.pages is not None:
+                    live = req.pages[req.pages >= 0]
+                    # prefix pages stay in the store (cache); only surplus
+                    # pages would be freed here in an eviction policy.
+        return len(self.active)
+
+    def run(self, max_ticks: int = 1000) -> List[Request]:
+        while (self.queue or self.active) and self.steps < max_ticks:
+            self.step()
+        return self.finished

@@ -1,0 +1,54 @@
+"""JAX twin of the FUSEE slot/metadata layout, 32-bit serving variant.
+
+The event-level simulator (core/layout.py) uses the paper's 64-bit slots.
+The serving pool works in a smaller address space — a slot names a *page*
+in the on-device KV pool — so slots are uint32-as-int32 words:
+
+    | fp : 8 | page_ptr : 24 |          (fp 0 reserved = empty)
+
+Hashing is the xorshift-multiply hash32 shared with the race_lookup Pallas
+kernel (kernels/race_lookup/ref.py); packing is differentially tested
+against a numpy mirror.  All arrays are int32 (JAX default-int friendly);
+bit games rely on wrap-around int32 arithmetic which JAX guarantees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.race_lookup.ref import (MASK24, bucket_pair, fingerprint,
+                                           hash32)
+
+__all__ = ["MASK24", "bucket_pair", "fingerprint", "hash32", "pack_slot",
+           "slot_fp", "slot_ptr", "pack_slot_np", "slot_fp_np", "slot_ptr_np"]
+
+
+def pack_slot(fp, ptr):
+    """fp (…,) int32 in [1,255]; ptr (…,) int32 in [0, 2^24)."""
+    return ((fp.astype(jnp.uint32) << 24)
+            | (ptr.astype(jnp.uint32) & MASK24)).astype(jnp.int32)
+
+
+def slot_fp(slot):
+    return ((slot.astype(jnp.uint32) >> 24) & 0xFF).astype(jnp.int32)
+
+
+def slot_ptr(slot):
+    return (slot & MASK24).astype(jnp.int32)
+
+
+# numpy mirrors (differential tests)
+def pack_slot_np(fp, ptr):
+    return ((np.uint32(fp) << np.uint32(24))
+            | (np.uint32(ptr) & np.uint32(MASK24))).astype(np.uint32) \
+        .view(np.int32)
+
+
+def slot_fp_np(slot):
+    return ((np.asarray(slot).view(np.uint32) >> 24) & 0xFF).astype(np.int32)
+
+
+def slot_ptr_np(slot):
+    return (np.asarray(slot).view(np.uint32) & np.uint32(MASK24)) \
+        .astype(np.int32)

@@ -1,0 +1,173 @@
+"""SNAPSHOT replication protocol as a batched, jitted CAS epoch.
+
+The event-level simulator (core/client.py) executes Algorithm 1+2 verb by
+verb.  On the serving path the same protocol runs as a *vectorized epoch*:
+a batch of W writers (the serving engine's concurrent index updates in one
+scheduling tick) all CAS their backup slots, observe the CAS return values
+(``v_list``), evaluate the three conflict-resolution rules, and the unique
+winner commits the primary — one jitted call, no locks, no serialization,
+exactly the paper's collaborative conflict resolution.
+
+Mapping to DM: the replica axis r of ``index`` is the set of memory nodes
+holding index replicas (shardable over the mesh's 'model'/pool axis); the
+"CAS arrival order" at each replica is an explicit per-replica priority
+permutation (the network's nondeterminism, seeded for reproducibility —
+property tests sweep seeds).  The atomicity of RDMA_CAS becomes the
+atomicity of a scatter-min: each backup slot accepts exactly one writer
+per epoch because all writers present the same expected value ``v_old``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NO_SLOT = jnp.int32(-1)
+
+
+class EpochResult(NamedTuple):
+    index: jax.Array      # (r, M) updated replicas (flat slots)
+    win: jax.Array        # (W,) bool — this writer's value was committed
+    committed: jax.Array  # (W,) int32 — value now in the writer's slot
+    rule: jax.Array       # (W,) int32 — 1/2/3 for winners, 0 for losers
+
+
+@partial(jax.jit, static_argnames=())
+def snapshot_epoch(index, slot_idx, v_old, v_new, key) -> EpochResult:
+    """One SNAPSHOT write round for a batch of writers.
+
+    index: (r, M) int32 flat replicated slots (replica 0 = primary).
+    slot_idx: (W,) int32 target slot per writer (-1 = inactive writer).
+    v_old: (W,) expected value (what the writer read from the primary).
+    v_new: (W,) proposed value (unique per writer by out-of-place alloc).
+    key: PRNG key modelling per-replica CAS arrival order.
+    """
+    r, M = index.shape
+    W = slot_idx.shape[0]
+    active = slot_idx >= 0
+    slot = jnp.where(active, slot_idx, 0)
+
+    cur_primary = index[0, slot]
+    # a CAS can only succeed if the expected value matches the *current*
+    # replica value; all writers share v_old so each backup slot accepts at
+    # most one writer per epoch (RDMA_CAS atomicity).
+    can = active & (cur_primary == v_old)
+
+    # per-replica arrival priorities (the network nondeterminism)
+    prios = jax.random.uniform(key, (r, W))
+    backup_vals = []
+    for b in range(1, r):
+        valid = can & (index[b, slot] == v_old)
+        prio = jnp.where(valid, prios[b], jnp.inf)
+        best = jnp.full((M,), jnp.inf).at[slot].min(prio)
+        won_cas = valid & (prio == best[slot]) & jnp.isfinite(prio)
+        new_b = index[b].at[jnp.where(won_cas, slot, M)].set(
+            jnp.where(won_cas, v_new, 0), mode="drop")
+        backup_vals.append(new_b)
+    new_index = jnp.stack([index[0]] + backup_vals, axis=0) if r > 1 \
+        else index
+
+    if r == 1:
+        # degenerate single-replica mode: plain CAS race on the primary
+        prio = jnp.where(can, prios[0], jnp.inf)
+        best = jnp.full((M,), jnp.inf).at[slot].min(prio)
+        win = can & (prio == best[slot]) & jnp.isfinite(prio)
+        new0 = index[0].at[jnp.where(win, slot, M)].set(
+            jnp.where(win, v_new, 0), mode="drop")
+        committed = new0[slot]
+        return EpochResult(new0[None], win, committed,
+                           jnp.where(win, 1, 0).astype(jnp.int32))
+
+    # v_list per writer: the values now in its backup slots (CAS returns)
+    v_list = jnp.stack([new_index[b, slot] for b in range(1, r)],
+                       axis=1)                         # (W, r-1)
+    nb = r - 1
+    n_eq = jnp.sum(v_list == v_new[:, None], axis=1)
+    rule1 = n_eq == nb
+    rule2 = (~rule1) & (2 * n_eq > nb)
+    # Rule 3: no majority anywhere -> smallest proposed value wins.  The
+    # primary is untouched within an epoch, so the Alg.2 line-12 check
+    # (primary still == v_old) always passes for ``can`` writers.
+    vmax = jnp.iinfo(jnp.int32).max
+    has_any = n_eq > 0
+    # a slot is rule-3 eligible only if NO writer on it got a majority
+    slot_major = jnp.zeros((M,), bool).at[slot].max(
+        jnp.where(can & (rule1 | rule2), True, False))
+    vmin_per_slot = jnp.full((M,), vmax).at[slot].min(
+        jnp.where(can & has_any,
+                  jnp.where(v_list == v_new[:, None], v_new[:, None],
+                            vmax).min(axis=1),
+                  vmax))
+    rule3 = (can & has_any & ~(rule1 | rule2) & ~slot_major[slot]
+             & (v_new == vmin_per_slot[slot]))
+    win = can & (rule1 | rule2 | rule3)
+
+    # winner commits: repair divergent backups + CAS primary
+    wslot = jnp.where(win, slot, M)
+    final = new_index.at[:, :].get()
+    for b in range(r):
+        final = final.at[b, wslot].set(jnp.where(win, v_new, 0), mode="drop")
+    committed = final[0, slot]
+    rule = jnp.where(rule1, 1, jnp.where(rule2, 2, jnp.where(rule3, 3, 0)))
+    return EpochResult(final, win, committed,
+                       jnp.where(win, rule, 0).astype(jnp.int32))
+
+
+def snapshot_epoch_np(index, slot_idx, v_old, v_new, order):
+    """Numpy oracle executing the same epoch sequentially (CAS by CAS) in an
+    explicit per-replica arrival ``order`` — differentially tested against
+    the jitted epoch and against the event-level core simulator."""
+    import numpy as np
+
+    index = np.array(index)
+    r, M = index.shape
+    W = len(slot_idx)
+    # phase 2: backup CAS races in arrival order
+    for b in range(1, r):
+        for w in order[b % len(order)]:
+            if slot_idx[w] < 0:
+                continue
+            s = slot_idx[w]
+            if index[0, s] == v_old[w] and index[b, s] == v_old[w]:
+                index[b, s] = v_new[w]
+    win = np.zeros(W, bool)
+    rulev = np.zeros(W, np.int32)
+    for w in range(W):
+        if slot_idx[w] < 0 or index[0, slot_idx[w]] != v_old[w]:
+            continue
+        s = slot_idx[w]
+        vl = index[1:, s]
+        n_eq = int((vl == v_new[w]).sum())
+        nb = r - 1
+        if nb == 0:
+            win[w], rulev[w] = True, 1
+            continue
+        if n_eq == nb:
+            win[w], rulev[w] = True, 1
+        elif 2 * n_eq > nb:
+            win[w], rulev[w] = True, 2
+        elif n_eq > 0:
+            # rule 3 candidates: defer; resolved after majority check
+            rulev[w] = -3
+    # rule 3: per slot, smallest v_new among candidates wins if no majority
+    for s in set(int(s) for s in slot_idx if s >= 0):
+        cands = [w for w in range(W)
+                 if slot_idx[w] == s and rulev[w] == -3]
+        if any(win[w] for w in range(W) if slot_idx[w] == s):
+            for w in cands:
+                rulev[w] = 0
+            continue
+        if cands:
+            wmin = min(cands, key=lambda w: v_new[w])
+            win[wmin], rulev[wmin] = True, 3
+            for w in cands:
+                if w != wmin:
+                    rulev[w] = 0
+    # winners commit all replicas + primary
+    for w in range(W):
+        if win[w]:
+            index[:, slot_idx[w]] = v_new[w]
+    committed = np.array([index[0, s] if s >= 0 else 0 for s in slot_idx])
+    return index, win, committed, np.maximum(rulev, 0)

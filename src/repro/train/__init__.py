@@ -1,0 +1,5 @@
+"""Distributed training loop: pjit train step, microbatch accumulation,
+fault drill, straggler watchdog."""
+from .trainer import (TrainConfig, Trainer, make_train_step,  # noqa: F401
+                      pick_microbatches)
+from .fault import SimulatedFailure, StragglerWatchdog  # noqa: F401

@@ -1,0 +1,214 @@
+"""The pjit training loop.
+
+``make_train_step`` builds a single jitted step:
+
+    batch (global_batch, seq) --reshape--> (n_micro, micro, seq)
+      --lax.scan--> fp32 grad accumulation (remat inside the layer scan)
+      --optional shard_map('pod')--> int8-compressed cross-pod grad merge
+      --optimizer.update--> new params/state
+
+Microbatch count is chosen so rematerialized activations fit HBM
+(``pick_microbatches``); grads accumulate in fp32 sharded like the params.
+
+The Trainer drives steps, checkpoints asynchronously every ``ckpt_every``,
+detects stragglers, and recovers from (simulated) failures by restoring the
+latest committed checkpoint — the restart path is identical to a real
+preemption: rebuild state from disk, fast-forward the data pipeline cursor.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.ckpt import CheckpointManager, load_checkpoint
+from repro.models.model import Model
+from repro.optim import (OptConfig, Optimizer, init_error_feedback,
+                         pod_compressed_mean)
+from .fault import SimulatedFailure, StragglerWatchdog
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    n_micro: int = 1                 # gradient-accumulation microbatches
+    pod_compress: bool = False       # int8 cross-pod gradient merge
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    straggler_factor: float = 3.0
+
+
+def pick_microbatches(model: Model, global_batch: int, seq_len: int,
+                      budget_bytes: float = 4e9) -> int:
+    """Choose n_micro so stored layer inputs (scan remat) fit the budget."""
+    cfg = model.cfg
+    sizes = dict(zip(model.mesh.axis_names, model.mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    per_layer = seq_len * cfg.d_model * 2  # bf16 layer input per sample
+    stored = cfg.n_layers * per_layer * (global_batch / dp)
+    n_micro = 1
+    while stored / n_micro > budget_bytes and n_micro < global_batch:
+        n_micro *= 2
+    # each microbatch must still shard over the full data-parallel extent
+    # (the MoE shard_map maps the batch dim over ('pod','data'))
+    n_micro = min(n_micro, max(global_batch // dp, 1))
+    while global_batch % n_micro:
+        n_micro //= 2
+    return max(1, n_micro)
+
+
+def make_train_step(model: Model, opt: Optimizer, *, n_micro: int = 1,
+                    pod_compress: bool = False) -> Callable:
+    """Returns step(state, batch) -> (state, metrics), jit-ready."""
+    mesh = model.mesh
+    has_pod = "pod" in mesh.axis_names
+
+    def grads_of(params, batch):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            return loss, grads
+
+        def micro(batch):
+            return jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                    *x.shape[1:]), batch)
+
+        def acc_step(carry, mb):
+            loss_acc, g_acc = carry
+            loss, grads = jax.value_and_grad(model.loss)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+            return (loss_acc + loss, g_acc), ()
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, gsum), _ = jax.lax.scan(acc_step, (0.0, g0), micro(batch))
+        inv = 1.0 / n_micro
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    if pod_compress and has_pod:
+        # map ONLY the pod axis; everything else stays auto-sharded.  Each
+        # pod computes grads on its batch slice; the merge goes over the
+        # wire int8 (optim/compress.py), with error feedback in the state.
+        def step(state, batch):
+            def pod_body(params, batch, err):
+                loss, grads = grads_of(params, batch)
+                grads, new_err = pod_compressed_mean(grads, err, axis="pod")
+                loss = jax.lax.pmean(loss, "pod")
+                return loss, grads, new_err
+
+            pspecs = model.param_specs()
+            smap = jax.shard_map(
+                pod_body, mesh=mesh,
+                in_specs=(jax.tree.map(lambda s: P(*s), pspecs),
+                          jax.tree.map(lambda _: P("pod"), batch),
+                          jax.tree.map(lambda s: P(*s), pspecs)),
+                out_specs=(P(), jax.tree.map(lambda s: P(*s), pspecs),
+                           jax.tree.map(lambda s: P(*s), pspecs)),
+                check_vma=False, axis_names={"pod"})
+            loss, grads, new_err = smap(state["params"], batch, state["err"])
+            new_params, new_opt, metrics = opt.update(
+                grads, state["opt"], state["params"])
+            metrics["loss"] = loss
+            return {"params": new_params, "opt": new_opt,
+                    "err": new_err}, metrics
+    else:
+        def step(state, batch):
+            loss, grads = grads_of(state["params"], batch)
+            new_params, new_opt, metrics = opt.update(
+                grads, state["opt"], state["params"])
+            metrics["loss"] = loss
+            return {"params": new_params, "opt": new_opt}, metrics
+
+    return step
+
+
+class Trainer:
+    """Synchronous training driver with checkpoint/restart + watchdog."""
+
+    def __init__(self, model: Model, opt_cfg: OptConfig,
+                 tcfg: TrainConfig, dataset):
+        self.model = model
+        self.opt = Optimizer(opt_cfg)
+        self.tcfg = tcfg
+        self.dataset = dataset
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir)
+        self.watchdog = StragglerWatchdog(factor=tcfg.straggler_factor)
+        self.step_fn = jax.jit(make_train_step(
+            model, self.opt, n_micro=tcfg.n_micro,
+            pod_compress=tcfg.pod_compress), donate_argnums=0)
+        self.state = None
+        self.step = 0
+        self.history: list = []
+
+    def init_state(self, key):
+        params = self.model.init(key)
+        state = {"params": params, "opt": self.opt.init(params)}
+        if self.tcfg.pod_compress and "pod" in self.model.mesh.axis_names:
+            state["err"] = init_error_feedback(params)
+        self.state = state
+        self.step = 0
+        return state
+
+    def restore(self) -> bool:
+        """Restore latest checkpoint; returns True if one was found."""
+        if self.ckpt.latest() is None:
+            return False
+        like = {"params": self.model.abstract_params(),
+                "opt": self.opt.init(self.model.abstract_params())
+                if False else None}
+        # build abstract state via a throwaway init on shapes
+        params_abs = self.model.abstract_params()
+        state_abs = {"params": params_abs}
+        opt_abs = jax.eval_shape(self.opt.init, params_abs)
+        state_abs["opt"] = opt_abs
+        if self.tcfg.pod_compress and "pod" in self.model.mesh.axis_names:
+            state_abs["err"] = jax.eval_shape(init_error_feedback, params_abs)
+        loaded, step, extra = load_checkpoint(
+            self.tcfg.ckpt_dir, state_abs)
+        self.state = loaded
+        self.step = step
+        return True
+
+    def run(self, n_steps: int, *, fail_at: Optional[int] = None):
+        """Train; optionally inject a failure at ``fail_at`` (fault drill)."""
+        assert self.state is not None
+        losses = []
+        while self.step < n_steps:
+            if fail_at is not None and self.step == fail_at:
+                fail_at = None  # fire once
+                raise SimulatedFailure(self.step)
+            t0 = time.perf_counter()
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.dataset.batch_at(self.step).items()}
+            self.state, metrics = self.step_fn(self.state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.watchdog.record(self.step, dt)
+            losses.append(loss)
+            self.history.append({"step": self.step, "loss": loss, "dt": dt})
+            self.step += 1
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save_async(self.step, self.state,
+                                     extra={"data_step": self.step})
+        self.ckpt.save_async(self.step, self.state,
+                             extra={"data_step": self.step})
+        self.ckpt.wait()
+        return losses
+
+    def run_with_recovery(self, n_steps: int, fail_at: Optional[int] = None):
+        """The fault drill: crash at fail_at, restore, resume, finish."""
+        try:
+            return self.run(n_steps, fail_at=fail_at), False
+        except SimulatedFailure:
+            self.state = None
+            restored = self.restore()
+            if not restored:
+                self.init_state(jax.random.key(0))
+            return self.run(n_steps), True

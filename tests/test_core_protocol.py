@@ -1,0 +1,298 @@
+"""Unit + property tests for the FUSEE core protocol (SNAPSHOT, RACE index,
+two-level allocation, embedded log)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layout as L
+from repro.core import race
+from repro.core.client import FuseeClient, evaluate_rules_pure, R1, R2, LOSE, FAILV
+from repro.core.events import OK, NOT_FOUND
+from repro.core.heap import DMConfig, DMPool, INDEX_REGION
+from repro.core.linearize import check_linearizable, records_to_hops
+from repro.core.master import Master
+from repro.core.sim import Scheduler
+from repro.core.store import FuseeCluster
+
+
+# ---------------------------------------------------------------- layout ----
+def test_slot_packing_roundtrip():
+    for fp, sc, ptr in [(1, 0, 0), (255, 7, (1 << 48) - 1), (17, 3, 123456789)]:
+        s = L.pack_slot(fp, sc, ptr)
+        assert L.slot_fp(s) == fp
+        assert L.slot_size_class(s) == sc
+        assert L.slot_ptr(s) == ptr
+
+
+@given(st.integers(0, (1 << 20) - 2), st.integers(0, (1 << 28) - 1))
+def test_ptr_packing_roundtrip(region, off):
+    p = L.pack_ptr(region, off)
+    assert L.ptr_region(p) == region
+    assert L.ptr_offset(p) == off
+
+
+@given(st.integers(min_value=0, max_value=2**63 - 1),
+       st.lists(st.integers(0, 2**63 - 1), max_size=6),
+       st.integers(0, (1 << 48) - 1), st.integers(0, (1 << 48) - 1),
+       st.sampled_from([L.OPCODE_INSERT, L.OPCODE_UPDATE, L.OPCODE_DELETE]))
+def test_object_roundtrip(key, value, nxt, prv, opcode):
+    words, sc = L.build_object(key, value, nxt, prv, opcode)
+    assert len(words) == L.size_class_words(sc)
+    obj = L.parse_object(words)
+    assert obj["key"] == key
+    assert obj["value"] == [v & 0xFFFFFFFFFFFFFFFF for v in value]
+    assert obj["next_ptr"] == nxt
+    assert obj["prev_ptr"] == prv
+    assert obj["opcode"] == opcode
+    assert obj["used"] and not obj["invalid"] and obj["crc_ok"]
+    assert int(obj["old_value"]) == 0  # uncommitted
+
+
+def test_fingerprint_nonzero():
+    assert all(L.fingerprint(k) != 0 for k in range(1000))
+
+
+# ------------------------------------------------------------ rule eval -----
+def test_rule1_unanimous_win():
+    assert evaluate_rules_pure([5, 5, 5], v_new=5) == R1
+
+
+def test_rule1_unanimous_lose():
+    assert evaluate_rules_pure([7, 7, 7], v_new=5) == LOSE
+
+
+def test_rule2_majority():
+    assert evaluate_rules_pure([5, 5, 9], v_new=5) == R2
+    assert evaluate_rules_pure([5, 5, 9], v_new=9) == LOSE
+
+
+def test_rule3_needs_check():
+    assert evaluate_rules_pure([5, 9], v_new=5) == "NEED_CHECK"
+    assert evaluate_rules_pure([5, 9], v_new=9) == "NEED_CHECK"
+
+
+def test_absent_value_loses():
+    assert evaluate_rules_pure([5, 9, 13], v_new=7) == LOSE
+
+
+def test_fail_propagates():
+    assert evaluate_rules_pure([5, None, 5], v_new=5) == FAILV
+
+
+# ----------------------------------------------------------- race index -----
+def test_bucket_pair_distinct():
+    for k in range(500):
+        b1, b2 = race.bucket_pair(k, 64)
+        assert b1 != b2
+
+
+# -------------------------------------------------------- basic KV ops ------
+@pytest.fixture
+def cluster():
+    return FuseeCluster(DMConfig(num_mns=4, replication=3), num_clients=4)
+
+
+def test_rtt_counts_match_paper(cluster):
+    kv = cluster.store(0)
+    kv.insert(1, [10])               # warm up block allocation
+    r = kv.insert(2, [20])
+    assert r.rtts == 4, "conflict-free INSERT must be 4 RTTs (Fig 9)"
+    r = kv.update(2, [21])
+    assert r.rtts == 4, "conflict-free UPDATE must be 4 RTTs (Fig 9)"
+    r = kv.search(2)
+    assert r.rtts == 1, "cache-hit SEARCH must be 1 RTT (Fig 9)"
+    kv2 = cluster.store(1)
+    r = kv2.search(2)
+    assert r.rtts == 2, "cache-miss SEARCH must be 2 RTTs (Fig 9)"
+
+
+def test_insert_search_update_delete(cluster):
+    kv = cluster.store(0)
+    assert kv.insert(5, [1, 2]).status == OK
+    assert kv.get(5) == [1, 2]
+    assert kv.update(5, [3]).status == OK
+    assert kv.get(5) == [3]
+    assert kv.delete(5).status == OK
+    assert kv.search(5).status == NOT_FOUND
+    assert kv.update(5, [9]).status == NOT_FOUND
+    assert kv.delete(5).status == NOT_FOUND
+
+
+def test_cross_client_visibility(cluster):
+    kv0, kv1 = cluster.store(0), cluster.store(1)
+    kv0.insert(100, [7])
+    assert kv1.get(100) == [7]
+    kv1.update(100, [8])
+    assert kv0.get(100) == [8]  # kv0's cache must detect invalidation
+
+
+def test_many_keys_many_clients(cluster):
+    stores = [cluster.store(i) for i in range(4)]
+    for k in range(200):
+        assert stores[k % 4].insert(k, [k]).status == OK
+    for k in range(200):
+        assert stores[(k + 1) % 4].get(k) == [k]
+
+
+def test_replica_consistency_after_ops(cluster):
+    kv = cluster.store(0)
+    for k in range(50):
+        kv.insert(k, [k * 2])
+    for k in range(0, 50, 2):
+        kv.update(k, [k * 3])
+    pool = cluster.pool
+    reps = pool.placement[INDEX_REGION]
+    arrays = [pool.mns[m].regions[INDEX_REGION] for m in reps]
+    for a in arrays[1:]:
+        assert np.array_equal(arrays[0], a), "index replicas diverged at rest"
+
+
+# ------------------------------------------------- concurrent write races ---
+def _fresh(num_clients=4, r=3, num_mns=4):
+    cfg = DMConfig(num_mns=num_mns, replication=r)
+    pool = DMPool(cfg, num_clients=num_clients)
+    master = Master(pool)
+    clients = [FuseeClient(i, pool) for i in range(num_clients)]
+    sched = Scheduler(pool, master)
+    for c in clients:
+        sched.add_client(c)
+    return pool, master, clients, sched
+
+
+def _seed_key(sched, clients, key, value):
+    rec = sched.submit(clients[0].cid, "insert", key, value)
+    sched.run_round_robin()
+    assert rec.result.status == OK
+
+
+def _read_key_direct(pool, key):
+    """Read a key's committed value straight from the heap (test oracle)."""
+    cfg = pool.cfg
+    for off in race.slot_offsets(key, cfg.index_buckets, cfg.slots_per_bucket):
+        w = pool.read(INDEX_REGION, 0, off, 1)
+        if w is None or int(w[0]) == 0:
+            continue
+        s = int(w[0])
+        if L.slot_fp(s) != L.fingerprint(key):
+            continue
+        ptr, sc = L.slot_ptr(s), L.slot_size_class(s)
+        raw = pool.read(L.ptr_region(ptr), 0, L.ptr_offset(ptr),
+                        L.size_class_words(sc))
+        if raw is None:
+            continue
+        obj = L.parse_object(list(raw))
+        if obj["key"] == key:
+            return obj["value"]
+    return None
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000), n_writers=st.integers(2, 4))
+def test_concurrent_updates_linearizable(seed, n_writers):
+    pool, master, clients, sched = _fresh(num_clients=n_writers + 1)
+    _seed_key(sched, clients, 42, [0])
+    recs = []
+    for i in range(n_writers):
+        recs.append(sched.submit(clients[i + 1].cid, "update", 42, [100 + i]))
+    sched.run_random(rng=np.random.default_rng(seed))
+    assert all(r.result.status == OK for r in recs)
+    # all index replicas converge
+    reps = pool.placement[INDEX_REGION]
+    arrays = [pool.mns[m].regions[INDEX_REGION] for m in reps]
+    for a in arrays[1:]:
+        assert np.array_equal(arrays[0], a)
+    # final value is one of the writers' values
+    final = _read_key_direct(pool, 42)
+    assert final in [[100 + i] for i in range(n_writers)]
+    # history is linearizable and consistent with the final state: append a
+    # virtual read that happened after everything completed
+    hops = records_to_hops(sched.history, 42)
+    from repro.core.linearize import HOp
+    hops.append(HOp(op_id=10_000, kind="search", inv=sched.tick + 1,
+                    resp=sched.tick + 2, wrote=None, read=tuple(final),
+                    status=OK))
+    assert check_linearizable(hops, initial=(0,))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_mixed_ops_linearizable(seed):
+    rng = np.random.default_rng(seed)
+    pool, master, clients, sched = _fresh(num_clients=5)
+    _seed_key(sched, clients, 7, [1])
+    kinds = ["update", "search", "delete", "insert"]
+    recs = []
+    for i in range(4):
+        kind = kinds[int(rng.integers(len(kinds)))]
+        val = [int(rng.integers(1000)) + 2] if kind in ("update", "insert") else None
+        recs.append(sched.submit(clients[i + 1].cid, kind, 7, val))
+    sched.run_random(rng=rng)
+    hops = records_to_hops(sched.history, 7)
+    assert check_linearizable(hops, initial=None)  # includes the seeding insert
+    reps = pool.placement[INDEX_REGION]
+    arrays = [pool.mns[m].regions[INDEX_REGION] for m in reps]
+    for a in arrays[1:]:
+        assert np.array_equal(arrays[0], a)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), r=st.integers(1, 4))
+def test_replication_factor_sweep(seed, r):
+    pool, master, clients, sched = _fresh(num_clients=3, r=r, num_mns=max(4, r))
+    _seed_key(sched, clients, 11, [0])
+    recs = [sched.submit(clients[1].cid, "update", 11, [1]),
+            sched.submit(clients[2].cid, "update", 11, [2])]
+    sched.run_random(rng=np.random.default_rng(seed))
+    assert all(rec.result.status == OK for rec in recs)
+    hops = records_to_hops(sched.history, 11)
+    assert check_linearizable(hops)
+
+
+# ----------------------------------------------------- allocator invariants -
+def test_no_double_allocation():
+    pool, master, clients, sched = _fresh(num_clients=3)
+    seen = set()
+    for i, c in enumerate(clients):
+        for k in range(60):
+            rec = sched.submit(c.cid, "insert", 1000 * i + k, [k])
+            sched.run_round_robin()
+            assert rec.result.status == OK
+    # all allocated objects distinct (via slot pointers)
+    reps = pool.placement[INDEX_REGION]
+    arr = pool.mns[reps[0]].regions[INDEX_REGION]
+    ptrs = [L.slot_ptr(int(w)) for w in arr if int(w) != 0]
+    assert len(ptrs) == len(set(ptrs)) == 180
+
+
+def test_block_ownership_recorded():
+    pool, master, clients, sched = _fresh(num_clients=2)
+    rec = sched.submit(clients[1].cid, "insert", 1, [1])
+    sched.run_round_robin()
+    owners = set()
+    for g in range(2, pool.num_regions):
+        mem = pool.mns[pool.primary_mn(g)].regions[g]
+        for b in range(pool.cfg.blocks_per_region):
+            if int(mem[b]) != 0:
+                owners.add(int(mem[b]) - 1)
+    assert owners == {clients[1].cid}
+
+
+def test_free_and_reclaim_reuses_memory():
+    cfg = DMConfig(num_mns=4, replication=2)
+    cl = FuseeCluster(cfg, num_clients=1)
+    kv = cl.store(0)
+    for k in range(20):
+        kv.insert(k, [k])
+    for k in range(20):
+        kv.update(k, [k + 1])   # frees 20 old objects
+    before = sum(len(s.free) for s in cl.clients[0].slab.values())
+    r = kv.reclaim()
+    after = sum(len(s.free) for s in cl.clients[0].slab.values())
+    assert r.value[0] >= 20
+    assert after >= before + 20
+    # reclaimed objects must be reusable without corruption
+    for k in range(20, 60):
+        assert kv.insert(k, [k]).status == OK
+    for k in range(60):
+        expect = [k + 1] if k < 20 else [k]
+        assert kv.get(k) == expect
