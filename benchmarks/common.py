@@ -57,8 +57,12 @@ def run_workload(*, n_clients: int, n_mns: int, replication: int = 2,
                  value_words: int = 16, seed: int = 0,
                  enable_cache: bool = True, cache_threshold: float = 0.5,
                  replication_mode: str = "snapshot",
-                 preload: int = 256) -> WorkloadStats:
-    """Run a mixed workload on the event simulator; return measured stats."""
+                 preload: int = 256, pipeline_depth: int = 1) -> WorkloadStats:
+    """Run a mixed workload on the event simulator; return measured stats.
+
+    ``pipeline_depth`` = ops each closed-loop client keeps in flight
+    (the (cid, op_id) pipelines of core/sim.py; 1 = the classic
+    one-op-per-client loop the paper figures assume)."""
     t0 = time.perf_counter()
     cfg = DMConfig(num_mns=n_mns, replication=replication,
                    region_words=1 << 15, regions_per_mn=16)
@@ -93,17 +97,15 @@ def run_workload(*, n_clients: int, n_mns: int, replication: int = 2,
         val = [i] * value_words if kind in ("insert", "update") else None
         plan[clients[i % n_clients].cid].append((kind, key, val))
 
-    # closed-loop: every client always has one op in flight
-    done_records = []
-    active = {}
+    # closed-loop: every client keeps ``pipeline_depth`` ops in flight
     while True:
         for cid, ops in plan.items():
-            if cid not in sched.running and ops:
+            while ops and sched.inflight(cid) < pipeline_depth:
                 kind, key, val = ops.pop(0)
-                active[cid] = sched.submit(cid, kind, key, val)
-        if not sched.running:
+                sched.submit(cid, kind, key, val)
+        cids = sched.eligible_cids()
+        if not cids:
             break
-        cids = list(sched.running.keys())
         cid = cids[int(rng.integers(len(cids)))]
         sched.step(cid, pick=int(rng.integers(4)))
 

@@ -15,6 +15,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.configs.fusee_paper import FuseePaperConfig
+from repro.core.api import Op
 from repro.core.heap import DMConfig, DMPool, INDEX_REGION
 from repro.core.master import Master
 from repro.core.client import FuseeClient
@@ -68,7 +69,7 @@ def fig10_latency_cdf() -> List[Dict]:
     lat = {k: [] for k in ("insert", "update", "search", "delete")}
     for i in range(300):
         lat["insert"].append(kv.insert(i, [i] * 16).rtts)
-        lat["search"].append(kv.search(i).rtts)
+        lat["search"].append(kv.submit(Op.get(i)).result().rtts)
         lat["update"].append(kv.update(i, [i + 1] * 16).rtts)
         lat["delete"].append(kv.delete(i).rtts)
     rows = []
@@ -310,8 +311,48 @@ def tab1_recovery() -> List[Dict]:
                          ("construct_free_list", free), ("total", total)]]
 
 
+# ----------------------------------------------------- API pipeline bench --
+def api_batch_search() -> List[Dict]:
+    """Batched vs serial SEARCH through the unified store API.
+
+    Serial path: one cache-hit SEARCH per op = 1 RTT each.  Batched path:
+    ``submit_batch`` matches the GET keys against the client's index cache
+    via the race_lookup kernel and fuses every resident key into ONE
+    doorbell batch — B ops per RTT.  Rows report measured ops/RTT for both
+    paths plus the pipelined mixed-op depth sweep (ops in flight per
+    client never blocks the client, §4.3)."""
+    rows = []
+    for batch in (4, 8, 16, 32, 64):
+        cl = FuseeCluster(DMConfig(num_mns=4, replication=3), num_clients=1,
+                          seed=batch)
+        kv = cl.store(0, max_inflight=max(16, batch))
+        for f in kv.submit_batch([Op.put(k, [k] * 8) for k in range(batch)]):
+            f.result()
+        for k in range(batch):       # warm the adaptive index cache
+            kv.get(k)
+        serial = [kv.submit(Op.get(k)).result() for k in range(batch)]
+        serial_rtts = sum(r.rtts for r in serial)
+        mark = len(cl.scheduler.history)
+        batched = [f.result() for f in
+                   kv.submit_batch([Op.get(k) for k in range(batch)])]
+        assert all(r.status == "OK" for r in batched)
+        batch_rtts = sum(r.rtts for r in cl.scheduler.history[mark:])
+        stats = kv.scan_stats()
+        rows.append({
+            "bench": "api_batch", "batch": batch,
+            "serial_rtts": serial_rtts,
+            "serial_ops_per_rtt": batch / max(serial_rtts, 1),
+            "batch_rtts": batch_rtts,
+            "batch_ops_per_rtt": batch / max(batch_rtts, 1),
+            "fast_hits": stats["batch_fast_hits"],
+            "speedup": (batch / max(batch_rtts, 1))
+                       / (batch / max(serial_rtts, 1)),
+        })
+    return rows
+
+
 ALL_FIGURES = [fig02_metadata_cpu, fig03_lock_consensus, fig10_latency_cdf,
                fig11_micro_tput, fig12_kv_sizes, fig13_ycsb_scale,
                fig14_mn_scale, fig15_rw_ratio, fig16_cache_threshold,
                fig17_alloc, fig1819_replication, fig20_mn_crash,
-               fig21_elasticity, tab1_recovery]
+               fig21_elasticity, tab1_recovery, api_batch_search]

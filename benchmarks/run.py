@@ -66,6 +66,11 @@ def summarize(name: str, rows) -> str:
         return (f"UPDATE r=1: fusee={lat.get((1, 'fusee', 'update'), 0):.1f}us"
                 f" r=5: fusee={lat.get((5, 'fusee', 'update'), 0):.1f}us"
                 f" cr={lat.get((5, 'fusee-cr', 'update'), 0):.1f}us")
+    if name == "api_batch_search":
+        best = max(rows, key=lambda r: r["batch"])
+        return (f"batch SEARCH {best['batch_ops_per_rtt']:.0f} ops/RTT vs "
+                f"serial {best['serial_ops_per_rtt']:.1f} "
+                f"({best['speedup']:.1f}x at B={best['batch']})")
     if name == "roofline" and "arch" in rows[0]:
         worst = min(rows, key=lambda r: r.get("mfu_bound", 1))
         return (f"{len(rows)} cells; worst MFU-bound "
@@ -100,6 +105,11 @@ def validate_claims(rows):
         checks.append(("recovery dominated by reconnect (paper: 92%)",
                        t1["reconnect_mr"]["pct"] > 80,
                        f"{t1['reconnect_mr']['pct']:.0f}%"))
+    ab = [r for r in rows if r.get("bench") == "api_batch"]
+    if ab:
+        worst = min(r["speedup"] for r in ab)
+        checks.append(("batched SEARCH beats serial ops/RTT at every size",
+                       worst > 1.0, f"min speedup {worst:.1f}x"))
     f17 = {r["alloc"]: r["mops"] for r in rows
            if r.get("bench") == "fig17" and r.get("ycsb") == "A"}
     if f17:

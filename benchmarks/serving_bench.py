@@ -8,27 +8,36 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 import numpy as np
+from repro.launch.mesh import make_host_mesh
 
 
 def bench_pool_ops() -> List[Dict]:
-    from repro.serving import KVPool, PoolConfig
+    """Device pool through the unified store API (core/api.py): one
+    ``submit_batch`` of INSERTs = alloc + page write + SNAPSHOT epochs;
+    one batch of GETs = a single race_lookup probe."""
+    from repro.core.api import KVStore, Op
+    from repro.core.events import OK
+    from repro.serving import DeviceBackend, PoolConfig
     rows = []
-    pool = KVPool(PoolConfig(n_pages=8192, n_buckets=2048,
-                             slots_per_bucket=8, replicas=3))
-    keys = np.arange(1, 4001).astype(np.int32)
-    pages = pool.alloc_pages(0, len(keys))
-    pool.write_pages(0, pages, keys, opcode=1)
+    store = KVStore(DeviceBackend(PoolConfig(n_pages=8192, n_buckets=2048,
+                                             slots_per_bucket=8, replicas=3)))
+    keys = list(range(1, 4001))
     t0 = time.perf_counter()
-    ok = pool.insert_batch(0, keys, pages)
+    res = [f.result() for f in
+           store.submit_batch([Op.insert(k, None) for k in keys])]
     t_ins = time.perf_counter() - t0
+    ok = np.array([r.status == OK for r in res])
     t0 = time.perf_counter()
     for _ in range(5):
-        ptr, found = pool.search(keys)
+        got = [f.result() for f in
+               store.submit_batch([Op.get(k) for k in keys])]
     t_s = (time.perf_counter() - t0) / 5
+    found = np.array([r.status == OK for r in got])
+    stats = store.scan_stats()
     rows.append({"bench": "serving_pool", "op": "insert_batch",
                  "n": len(keys), "wall_s": t_ins,
                  "success": float(ok.mean()),
-                 "epochs": pool.stats["epochs"]})
+                 "epochs": stats["epochs"]})
     rows.append({"bench": "serving_pool", "op": "search_batch",
                  "n": len(keys), "wall_s": t_s,
                  "hit": float(found.mean()),
@@ -61,8 +70,7 @@ def bench_engine_prefix() -> List[Dict]:
     from repro.configs import base as C
     from repro.models import build
     from repro.serving import PoolConfig, Request, ServeEngine
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh((1, 1), ("data", "model"))
     r = C.reduced(C.get("llama3-8b"))
     m = build(r, mesh)
     params = m.init(jax.random.key(0))

@@ -15,14 +15,14 @@ from repro.data import DataConfig, SyntheticLM
 from repro.models import build
 from repro.optim import OptConfig
 from repro.train import TrainConfig, Trainer
+from repro.launch.mesh import make_host_mesh
 
 
 def train_drill():
     print("== training fault drill ==")
     shutil.rmtree("/tmp/repro_fault_ckpt", ignore_errors=True)
     cfg = C.reduced(C.get("smollm-360m"))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh((1, 1), ("data", "model"))
     model = build(cfg, mesh)
     data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=32,
                                   global_batch=4, seed=0))

@@ -11,11 +11,11 @@ import numpy as np
 from repro.configs import base as C
 from repro.models import build
 from repro.serving import PoolConfig, Request, ServeEngine
+from repro.launch.mesh import make_host_mesh
 
 
 def main():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh((1, 1), ("data", "model"))
     cfg = C.reduced(C.get("llama3-8b"))
     model = build(cfg, mesh, use_kernels=True)   # Pallas attn (interpret)
     params = model.init(jax.random.PRNGKey(0))

@@ -14,6 +14,7 @@ from repro.data import DataConfig, SyntheticLM
 from repro.models import build
 from repro.optim import OptConfig
 from repro.train import TrainConfig, Trainer
+from repro.launch.mesh import make_host_mesh
 
 
 def main():
@@ -30,8 +31,7 @@ def main():
     if not args.full:
         cfg = C.reduced(cfg, n_layers=4, d_model=128, vocab=512,
                         d_ff_scale=64)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh((1, 1), ("data", "model"))
     model = build(cfg, mesh)
     data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                   global_batch=args.batch, seed=0))

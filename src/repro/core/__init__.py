@@ -6,4 +6,6 @@ from .heap import DMConfig, DMPool, INDEX_REGION, META_REGION  # noqa: F401
 from .client import FuseeClient  # noqa: F401
 from .master import Master  # noqa: F401
 from .sim import Scheduler, run_ops_concurrently  # noqa: F401
-from .store import FuseeCluster, KVStore  # noqa: F401
+from .api import KVFuture, KVStore, Op, SimBackend  # noqa: F401
+from .store import FuseeCluster  # noqa: F401
+from . import codec  # noqa: F401

@@ -1,0 +1,414 @@
+"""The public FUSEE store API: pipelined batch ops over futures.
+
+FUSEE's whole point is that *clients* drive metadata concurrently — each
+client keeps many doorbell-batched ops in flight against the replicated
+RACE index (§4.3, Fig. 9).  This module is the client-facing surface over
+that machinery:
+
+* ``Op`` — an immutable request (get/insert/update/delete/reclaim) over
+  **bytes/str keys and variable-length byte values** (core/codec.py maps
+  them onto the 64-bit-key, word-value protocol substrate);
+* ``KVFuture`` — a handle to an in-flight op; ``result()`` drives the
+  event scheduler until the op responds;
+* ``KVStore`` — ``submit`` / ``submit_batch`` plus blocking
+  ``get``/``put``/``delete``/``scan_stats`` conveniences, over a pluggable
+  backend:
+
+  - ``SimBackend``: the paper-faithful event-level simulation
+    (core/client.py + core/sim.py), with any number of ops in flight per
+    client ((cid, op_id) pipelines, per-(client, MN) FIFO preserved);
+  - ``DeviceBackend`` (serving/backend.py): the jitted device-resident
+    pool used by the serving engine.  One surface, two substrates.
+
+Batched SEARCH fast path: when a ``submit_batch`` carries several GETs
+whose keys are resident in the client's adaptive index cache (§4.6), the
+API matches the batch against a shadow copy of the cache through the
+``race_lookup`` Pallas kernel and fuses all hits into **one** doorbell
+batch (client.op_search_batch) — the whole batch costs 1 RTT instead of
+1-2 RTTs per key.  Keys that miss (or fail validation) fall back to
+individual SEARCH ops, resubmitted at the batch's response tick.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from . import codec
+from .events import NOT_FOUND, OK, OpResult
+
+__all__ = ["Op", "KVFuture", "KVStore", "SimBackend"]
+
+
+# ----------------------------------------------------------------- requests
+KINDS = ("search", "insert", "update", "delete", "reclaim")
+
+
+@dataclass(frozen=True)
+class Op:
+    """One store request.  Keys are bytes/str/int; values bytes/str or a
+    raw word list (legacy protocol callers).
+
+    Ordering: ops submitted together (or while others are still in
+    flight) are **concurrent** — like verbs in one RDMA doorbell batch,
+    they may take effect in any linearizable order.  For read-your-write
+    ordering, ``result()`` the earlier future before submitting the next
+    op."""
+    kind: str                      # one of KINDS
+    key: Any = None
+    value: Any = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown op kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+
+    @staticmethod
+    def get(key) -> "Op":
+        return Op("search", key)
+
+    @staticmethod
+    def put(key, value) -> "Op":
+        """Upsert (the paper's INSERT upserts on duplicate keys)."""
+        return Op("insert", key, value)
+
+    @staticmethod
+    def insert(key, value) -> "Op":
+        return Op("insert", key, value)
+
+    @staticmethod
+    def update(key, value) -> "Op":
+        return Op("update", key, value)
+
+    @staticmethod
+    def delete(key) -> "Op":
+        return Op("delete", key)
+
+    @staticmethod
+    def reclaim() -> "Op":
+        return Op("reclaim")
+
+
+# ------------------------------------------------------------------ futures
+class KVFuture:
+    """Handle to an in-flight op.  ``result()`` drives the backend until
+    the op responds, then returns the decoded ``OpResult``."""
+
+    __slots__ = ("_backend", "record", "_resolved")
+
+    def __init__(self, backend, record=None):
+        self._backend = backend
+        self.record = record        # sim OpRecord (rebindable on fallback)
+        self._resolved: Optional[OpResult] = None
+
+    def _resolve(self, result: OpResult, record=None):
+        self._resolved = result
+        if record is not None:
+            self.record = record
+
+    def done(self) -> bool:
+        if self._resolved is not None:
+            return True
+        return self.record is not None and self.record.result is not None
+
+    def result(self) -> OpResult:
+        if not self.done():
+            self._backend.drive(self)
+        if self._resolved is not None:
+            res = self._resolved
+        else:
+            rec = self.record
+            res = dataclasses.replace(rec.result, rtts=rec.rtts,
+                                      bg_rtts=rec.bg_rtts)
+        return dataclasses.replace(res, value=codec.decode_value(res.value))
+
+
+# -------------------------------------------------------------- sim backend
+def _hash32_np(x: np.ndarray, seed: int) -> np.ndarray:
+    """NumPy mirror of kernels/race_lookup/ref.py::hash32 (uint32 lanes)."""
+    with np.errstate(over="ignore"):
+        x = x.astype(np.uint32) + np.uint32((0x9E3779B9 * (seed + 1))
+                                            & 0xFFFFFFFF)
+        x = (x ^ (x >> np.uint32(16))) * np.uint32(0x85EBCA6B)
+        x = (x ^ (x >> np.uint32(13))) * np.uint32(0xC2B2AE35)
+        return (x ^ (x >> np.uint32(16))).astype(np.uint32)
+
+
+def _fold32(key64: int) -> int:
+    return (key64 ^ (key64 >> 32)) & 0xFFFFFFFF
+
+
+class SimBackend:
+    """Pipelined backend over the event-level protocol simulation.
+
+    Binds one ``FuseeClient`` + the cluster ``Scheduler``; ops are
+    submitted as (cid, op_id) pipeline entries, so a client has up to
+    ``max_inflight`` concurrent doorbell-batched ops — the scheduler
+    preserves per-(client, MN) FIFO verb order across all of them.
+    """
+
+    SHADOW_SPB = 8          # slots per bucket of the shadow cache index
+
+    def __init__(self, scheduler, client, *, max_inflight: int = 16,
+                 batch_search_min: int = 2, use_kernel: bool = True):
+        self.sched = scheduler
+        self.client = client
+        self.cid = client.cid
+        self.max_inflight = max_inflight
+        self.batch_search_min = batch_search_min
+        self.use_kernel = use_kernel
+        self.counters = {"ops": 0, "batch_lookups": 0, "batch_fast_hits": 0,
+                         "batch_fallbacks": 0, "shadow_rebuilds": 0}
+        # memoized shadow index: (cache fingerprint, entries, shadow table)
+        self._shadow = (None, None, None)
+
+    # ------------------------------------------------------------- submit
+    def submit_many(self, ops: Sequence[Op]) -> List[KVFuture]:
+        futs = [KVFuture(self) for _ in ops]
+        self.counters["ops"] += len(ops)
+        batched: Dict[int, Any] = {}
+        gets = [i for i, op in enumerate(ops) if op.kind == "search"]
+        if (len(gets) >= self.batch_search_min and self.client.enable_cache
+                and not self.client.crashed):
+            batched = self._try_batch_search(ops, gets, futs)
+        for i, op in enumerate(ops):
+            if i in batched:
+                continue
+            self._submit_one(op, futs[i])
+        return futs
+
+    def _submit_one(self, op: Op, fut: KVFuture):
+        while self.max_inflight and self.sched.inflight(self.cid) >= self.max_inflight:
+            self._pump()
+        key = codec.encode_key(op.key) if op.key is not None else 0
+        value = codec.encode_value(op.value) if op.kind in ("insert", "update") \
+            else None
+        fut.record = self.sched.submit(self.cid, op.kind, key, value)
+
+    # --------------------------------------------- batched SEARCH fast path
+    def _try_batch_search(self, ops, gets, futs) -> Dict[int, Any]:
+        """Probe the batch's GET keys against a shadow of the client's index
+        cache via the race_lookup kernel; fuse all confirmed-resident keys
+        into one 1-RTT multi-key SEARCH.  Returns {op_index: key64} for the
+        ops consumed by the fused path."""
+        keys64 = [codec.encode_key(ops[i].key) for i in gets]
+        hit_entries = self._kernel_probe(keys64)
+        batch = [(i, k, ce) for i, k, ce in
+                 zip(gets, keys64, hit_entries) if ce is not None]
+        if len(batch) < self.batch_search_min:
+            return {}
+        self.counters["batch_lookups"] += 1
+        items = [(k, ce.slot_off, ce.slot_val) for (_, k, ce) in batch]
+        rec = self.sched.submit(
+            self.cid, "search_batch", None, None,
+            gen=self.client.op_search_batch(items))
+
+        def finish(record, batch=batch, futs=futs):
+            per_key = record.result.value
+            for (i, key64, _ce), (stat, val) in zip(batch, per_key):
+                if stat == OK:
+                    res = OpResult(OK, value=val, rtts=1)
+                    # per-key history record for the linearizability checker;
+                    # rtts=0 — the single network RTT is tallied on the
+                    # parent search_batch record, not once per key
+                    sub = type(record)(
+                        cid=record.cid, op_id=self.sched.next_op_id(),
+                        kind="search", key=key64, value=None,
+                        inv_tick=record.inv_tick, resp_tick=record.resp_tick,
+                        result=res, rtts=0)
+                    self.sched.history.append(sub)
+                    futs[i]._resolve(res, record=sub)
+                    self.counters["batch_fast_hits"] += 1
+                else:
+                    # cache entry went stale mid-flight: full SEARCH,
+                    # invoked at the batch's response tick
+                    futs[i].record = self.sched.submit(self.cid, "search",
+                                                       key64)
+                    self.counters["batch_fallbacks"] += 1
+
+        rec.on_done = finish
+        return {i: k for (i, k, _ce) in batch}
+
+    def _cache_entries(self):
+        thr = self.client.cache_threshold
+        return [(k, ce) for k, ce in self.client.cache.items()
+                if ce.invalid_ratio <= thr][:(1 << 24) - 2]
+
+    def _cache_fingerprint(self):
+        """Cheap dirty signal for the shadow memo: every cache mutation in
+        client.py either changes the entry count or bumps an access /
+        invalid counter.  A (rare) stale hit is safe — op_search_batch
+        re-validates every entry against the heap and falls back."""
+        cache = self.client.cache
+        acc = inv = 0
+        for ce in cache.values():
+            acc += ce.access
+            inv += ce.invalid
+        return (len(cache), acc, inv)
+
+    def _shadow_index(self, entries):
+        """Build (or reuse) the 32-bit shadow RACE index over the cache."""
+        spb = self.SHADOW_SPB
+        nb = 16
+        while nb * spb < 4 * len(entries):
+            nb *= 2
+        tbl = np.array([_fold32(k) for k, _ in entries], np.uint32)
+        fp = (_hash32_np(tbl, 7) >> np.uint32(24)).astype(np.uint32)
+        fp = np.where(fp == 0, np.uint32(1), fp)
+        b1 = _hash32_np(tbl, 1) % nb
+        b2 = _hash32_np(tbl, 2) % nb
+        b2 = np.where(b2 == b1, (b1 + 1) % nb, b2)
+        shadow = np.zeros((nb, spb), np.uint32)
+        for idx in range(len(entries)):
+            placed = False
+            for b in (int(b1[idx]), int(b2[idx])):
+                for s in range(spb):
+                    if shadow[b, s] == 0:
+                        shadow[b, s] = (fp[idx] << np.uint32(24)) \
+                            | np.uint32(idx + 1)
+                        placed = True
+                        break
+                if placed:
+                    break
+            # overflow: entry simply not reachable via the fast path
+        return shadow
+
+    def _kernel_probe(self, keys64):
+        """Match ``keys64`` against the client's index cache with one
+        batched RACE probe (the race_lookup Pallas kernel on a memoized
+        32-bit shadow index).  Returns a per-key list of
+        CacheEntry-or-None."""
+        fpr = self._cache_fingerprint()
+        if self._shadow[0] == fpr:
+            _, entries, shadow = self._shadow
+        else:
+            entries = self._cache_entries()
+            shadow = self._shadow_index(entries)
+            self._shadow = (fpr, entries, shadow)
+            self.counters["shadow_rebuilds"] += 1
+        if not entries:
+            return [None] * len(keys64)
+        q = np.array([_fold32(k) for k in keys64], np.uint32)
+        ptr, found = self._race_lookup(q, shadow)
+        out = []
+        for j, k in enumerate(keys64):
+            if found[j] and ptr[j] > 0:
+                ekey, ce = entries[int(ptr[j]) - 1]
+                # guard fp/fold collisions: the table entry must be OUR key
+                if ekey == k:
+                    out.append(ce)
+                    continue
+            out.append(None)
+        return out
+
+    def _race_lookup(self, q: np.ndarray, shadow: np.ndarray):
+        if self.use_kernel:
+            try:
+                import jax.numpy as jnp
+                from repro.kernels import race_lookup
+                n = len(q)
+                pad = -(-n // 256) * 256 - n
+                qp = jnp.asarray(np.concatenate(
+                    [q, np.zeros(pad, np.uint32)]).view(np.int32))
+                ptr, found = race_lookup(qp, jnp.asarray(shadow.view(np.int32)))
+                return np.asarray(ptr[:n]), np.asarray(found[:n])
+            except Exception:       # pragma: no cover - jax-less fallback
+                pass
+        # numpy fallback mirroring race_lookup_ref
+        fpq = (_hash32_np(q, 7) >> np.uint32(24)).astype(np.uint32)
+        fpq = np.where(fpq == 0, np.uint32(1), fpq)
+        nb = shadow.shape[0]
+        b1 = _hash32_np(q, 1) % nb
+        b2 = _hash32_np(q, 2) % nb
+        b2 = np.where(b2 == b1, (b1 + 1) % nb, b2)
+        rows = np.concatenate([shadow[b1], shadow[b2]], axis=1)
+        match = (rows >> np.uint32(24)) == fpq[:, None]
+        any_m = match.any(axis=1)
+        first = match.argmax(axis=1)
+        picked = np.take_along_axis(rows, first[:, None], axis=1)[:, 0]
+        return np.where(any_m, picked & np.uint32((1 << 24) - 1), 0), any_m
+
+    # -------------------------------------------------------------- driving
+    def _pump(self):
+        """One round-robin pass over every client with pending work."""
+        cids = self.sched.eligible_cids()
+        if not cids:
+            raise RuntimeError("scheduler has no work but ops are unresolved")
+        for c in cids:
+            self.sched.step(c)
+
+    def drive(self, fut: KVFuture):
+        while not fut.done():
+            self._pump()
+
+    def drain(self):
+        while self.sched.inflight(self.cid) > 0:
+            self._pump()
+
+    # ---------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, Any]:
+        recs = [r for r in self.sched.history
+                if r.cid == self.cid and r.result is not None]
+        rtts: Dict[str, list] = {}
+        for r in recs:
+            rtts.setdefault(r.kind, []).append(r.rtts)
+        return {
+            "backend": "sim",
+            "cid": self.cid,
+            "inflight": self.sched.inflight(self.cid),
+            "completed_ops": len(recs),
+            "avg_rtts_by_kind": {k: float(np.mean(v)) for k, v in rtts.items()},
+            "cache_entries": len(self.client.cache),
+            **self.counters,
+        }
+
+
+# -------------------------------------------------------------------- store
+class KVStore:
+    """The unified client-facing store: pipelined batch ops over futures.
+
+    One surface for both substrates — construct over ``SimBackend`` (the
+    event-level protocol simulation; ``FuseeCluster.store()`` does this)
+    or ``serving.DeviceBackend`` (the jitted device-resident pool).
+    """
+
+    def __init__(self, backend):
+        self.backend = backend
+
+    # ------------------------------------------------------------ pipelined
+    def submit(self, op: Op) -> KVFuture:
+        return self.backend.submit_many([op])[0]
+
+    def submit_batch(self, ops: Sequence[Op]) -> List[KVFuture]:
+        return self.backend.submit_many(list(ops))
+
+    def drain(self):
+        """Block until every op this store submitted has responded."""
+        self.backend.drain()
+
+    # ------------------------------------------------------------- blocking
+    def get(self, key):
+        """Value of ``key`` (decoded bytes / word list) or None."""
+        r = self.submit(Op.get(key)).result()
+        return r.value if r.status == OK else None
+
+    def put(self, key, value) -> OpResult:
+        return self.submit(Op.put(key, value)).result()
+
+    def insert(self, key, value) -> OpResult:
+        return self.submit(Op.insert(key, value)).result()
+
+    def update(self, key, value) -> OpResult:
+        return self.submit(Op.update(key, value)).result()
+
+    def delete(self, key) -> OpResult:
+        return self.submit(Op.delete(key)).result()
+
+    def reclaim(self) -> OpResult:
+        return self.submit(Op.reclaim()).result()
+
+    def scan_stats(self) -> Dict[str, Any]:
+        """Backend counters: RTT tallies, cache and pipeline state."""
+        return self.backend.stats()

@@ -471,6 +471,50 @@ class FuseeClient:
                 return OpResult(NOT_FOUND, rtts=2)
         return OpResult(NOT_FOUND, rtts=2)
 
+    def op_search_batch(self, items):
+        """Vectorized cache-resident SEARCH: one doorbell batch reads the
+        cached slot + cached KV object of *every* key in ``items`` — the
+        whole batch costs 1 RTT instead of 1-2 RTTs per key.
+
+        ``items`` is a list of ``(key, slot_off, slot_val)`` picked by the
+        API layer (core/api.py) from this client's index cache via the
+        race_lookup kernel.  Per-key validation is identical to the cached
+        fast path of ``op_search``: the slot must still hold the cached
+        value and the object must verify (key + used + !invalid + CRC).
+        Keys that fail validation are reported as misses — the caller
+        falls back to individual ``op_search`` ops for them.
+
+        Returns ``OpResult(OK, value=[(status|None, value|None), ...])``
+        aligned with ``items``; ``None`` status = fall back.
+        """
+        verbs = []
+        for (key, slot_off, slot_val) in items:
+            verbs.append(Verb("read", region=INDEX_REGION, replica=0,
+                              off=slot_off, n=1))
+            verbs.append(self._read_obj_verb(L.slot_ptr(slot_val),
+                                             L.slot_size_class(slot_val)))
+        res = yield Phase(verbs, label="1:batch_cached_read")
+        out = []
+        for i, (key, slot_off, slot_val) in enumerate(items):
+            ce = self.cache.get(key)
+            if ce is not None:
+                ce.access += 1
+            slot_raw, kv_raw = res[2 * i], res[2 * i + 1]
+            hit = False
+            if slot_raw is not None and kv_raw is not None:
+                cur_slot = int(slot_raw[0])
+                obj = L.parse_object(list(kv_raw))
+                if (cur_slot == int(slot_val) and obj["key"] == key
+                        and obj["used"] and not obj["invalid"]
+                        and obj["crc_ok"]):
+                    out.append((OK, obj["value"]))
+                    hit = True
+            if not hit:
+                if ce is not None:
+                    ce.invalid += 1
+                out.append((None, None))
+        return OpResult(OK, value=out, rtts=1)
+
     def _search_degraded(self, key: int):
         """§5.2 READ under a crashed primary: read all alive backups; if they
         agree, return that value; otherwise ask the master."""

@@ -65,3 +65,4 @@ class OpResult:
     rtts: int = 0              # critical-path RTTs actually spent
     bg_rtts: int = 0           # background round trips
     rule: Optional[str] = None # winning SNAPSHOT rule, for Fig-9/RTT accounting
+    page: Optional[int] = None # device-backend page id backing this key

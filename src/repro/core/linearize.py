@@ -85,8 +85,18 @@ def check_linearizable(ops: List[HOp], initial=ABSENT) -> bool:
     return dfs(frozenset(o.op_id for o in ops), initial)
 
 
-def records_to_hops(records, key: int) -> List[HOp]:
-    """Convert sim.OpRecord list to per-key HOps."""
+def records_to_hops(records, key) -> List[HOp]:
+    """Convert sim.OpRecord list to per-key HOps.
+
+    ``key`` may be an int (protocol key space) or bytes/str (public API
+    key space) — the latter is encoded through core/codec.py, matching
+    what the pipelined API stamped onto the records.  Fused multi-key
+    SEARCH batches appear as one ``search_batch`` parent record (key None,
+    skipped here) plus one expanded per-key ``search`` record each.
+    """
+    if not isinstance(key, int):
+        from .codec import encode_key
+        key = encode_key(key)
     out = []
     for r in records:
         if r.key != key or r.result is None:

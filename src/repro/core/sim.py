@@ -6,9 +6,17 @@ schedule (hypothesis-controlled in tests, RNG-driven in benchmarks), while
 preserving per-(client, MN) FIFO ordering — the RDMA QP ordering guarantee
 the paper's embedded-log used-bit argument depends on (§4.5).
 
+A client may have **many ops in flight** (the pipelined batch API of
+core/api.py): each op is keyed by ``(cid, op_id)`` and owns its own
+generator, but all of a client's outstanding verbs share one FIFO queue per
+target MN — the queue-pair model.  A verb enters its QP queue when the
+owning op's phase is issued, so verbs of different ops interleave across
+MNs but never reorder on one (client, MN) pair.
+
 Crash injection: ``crash_client`` freezes a client at an arbitrary verb
-boundary (partially executed phase = partially written doorbell batch);
-``crash_mn`` makes every verb touching that MN return FAIL (crash-stop §5.1).
+boundary (partially executed phase = partially written doorbell batch,
+for *every* op in its pipeline); ``crash_mn`` makes every verb touching
+that MN return FAIL (crash-stop §5.1).
 
 The scheduler also keeps the raw *history* (invocation/response ticks per op)
 consumed by the linearizability checker in tests, and the RTT / byte traffic
@@ -17,8 +25,9 @@ tallies consumed by the network performance model (netmodel.py).
 from __future__ import annotations
 
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -32,27 +41,43 @@ from .master import Master
 class OpRecord:
     cid: int
     op_id: int
-    kind: str                  # 'search' | 'insert' | 'update' | 'delete'
-    key: int
+    kind: str                  # 'search' | 'insert' | 'update' | 'delete' | ...
+    key: Any
     value: Optional[list]
     inv_tick: int
     resp_tick: int = -1
     result: Optional[OpResult] = None
     rtts: int = 0
     bg_rtts: int = 0
+    # invoked at completion (same tick as resp_tick); used by the batch API
+    # to expand multi-key ops into per-key history records and to resubmit
+    # fallback ops at the exact response boundary.
+    on_done: Optional[Callable[["OpRecord"], None]] = field(
+        default=None, repr=False, compare=False)
 
 
 @dataclass
 class _Running:
     gen: Any
     record: OpRecord
-    # outstanding verbs of the current phase, grouped per target MN (FIFO)
-    queues: Dict[int, List[Tuple[int, Verb]]] = field(default_factory=dict)
     results: List[Any] = field(default_factory=list)
-    n_verbs: int = 0
-    phase: Optional[Phase] = None
+    pending: int = 0                       # unexecuted verbs of current phase
     master_call: Optional[MasterCall] = None
     done: bool = False
+
+
+class _ClientPipe:
+    """Per-client pipeline state: in-flight ops + per-MN QP FIFO queues."""
+
+    __slots__ = ("runs", "qp", "master_q")
+
+    def __init__(self):
+        self.runs: Dict[int, _Running] = {}          # op_id -> run
+        self.qp: Dict[int, Deque[Tuple[_Running, int, Verb]]] = {}
+        self.master_q: Deque[_Running] = deque()
+
+    def has_work(self) -> bool:
+        return bool(self.master_q) or any(self.qp.values())
 
 
 class Scheduler:
@@ -61,7 +86,7 @@ class Scheduler:
         self.master = master
         self.rng = np.random.default_rng(seed)
         self.tick = 0
-        self.running: Dict[int, _Running] = {}   # cid -> in-flight op
+        self.pipes: Dict[int, _ClientPipe] = {}      # cid -> pipeline
         self.history: List[OpRecord] = []
         self._op_counter = itertools.count()
         self.clients: Dict[int, FuseeClient] = {}
@@ -69,93 +94,116 @@ class Scheduler:
     # ------------------------------------------------------------- spawning
     def add_client(self, client: FuseeClient):
         self.clients[client.cid] = client
+        self.pipes.setdefault(client.cid, _ClientPipe())
         self.master.register(client)
 
-    def submit(self, cid: int, kind: str, key: int, value=None) -> OpRecord:
-        assert cid not in self.running, f"client {cid} already has an op in flight"
+    def next_op_id(self) -> int:
+        return next(self._op_counter)
+
+    def submit(self, cid: int, kind: str, key, value=None, *,
+               gen=None) -> OpRecord:
+        """Enqueue one op on client ``cid``'s pipeline.  Any number of ops
+        may be in flight per client; per-(client, MN) verb order is FIFO
+        across all of them.  ``gen`` overrides the client op generator
+        (used by the batch API for multi-key fused ops)."""
         client = self.clients[cid]
         assert not client.crashed
-        gen = {
-            "search": lambda: client.op_search(key),
-            "insert": lambda: client.op_insert(key, value),
-            "update": lambda: client.op_update(key, value),
-            "delete": lambda: client.op_delete(key),
-            "reclaim": lambda: client.op_reclaim(),
-        }[kind]()
-        rec = OpRecord(cid=cid, op_id=next(self._op_counter), kind=kind,
+        if gen is None:
+            gen = {
+                "search": lambda: client.op_search(key),
+                "insert": lambda: client.op_insert(key, value),
+                "update": lambda: client.op_update(key, value),
+                "delete": lambda: client.op_delete(key),
+                "reclaim": lambda: client.op_reclaim(),
+            }[kind]()
+        rec = OpRecord(cid=cid, op_id=self.next_op_id(), kind=kind,
                        key=key, value=value, inv_tick=self.tick)
         self.history.append(rec)
         run = _Running(gen=gen, record=rec)
-        self.running[cid] = run
-        self._advance(run, None)  # prime to the first phase
+        self.pipes.setdefault(cid, _ClientPipe()).runs[rec.op_id] = run
+        self._advance(cid, run, None)  # prime to the first phase
         return rec
 
     # ------------------------------------------------------------ execution
-    def _advance(self, run: _Running, send_value):
+    def _advance(self, cid: int, run: _Running, send_value):
         """Resume the generator until it yields the next phase or finishes."""
-        try:
-            item = run.gen.send(send_value)
-        except StopIteration as stop:
-            res: OpResult = stop.value
-            run.record.result = res
-            run.record.resp_tick = self.tick
-            run.done = True
-            self.running.pop(run.record.cid, None)
+        pipe = self.pipes[cid]
+        while True:
+            try:
+                item = run.gen.send(send_value)
+            except StopIteration as stop:
+                res: OpResult = stop.value
+                run.record.result = res
+                run.record.resp_tick = self.tick
+                run.done = True
+                pipe.runs.pop(run.record.op_id, None)
+                if run.record.on_done is not None:
+                    cb, run.record.on_done = run.record.on_done, None
+                    cb(run.record)   # cleared first: history retains the
+                    return           # record forever, the closure must not
+                return               # pin futures/backends with it
+            if isinstance(item, MasterCall):
+                run.master_call = item
+                pipe.master_q.append(run)
+                return
+            assert isinstance(item, Phase)
+            run.results = [None] * len(item.verbs)
+            run.pending = len(item.verbs)
+            if item.background:
+                run.record.bg_rtts += 1
+            else:
+                run.record.rtts += 1
+            if not item.verbs:   # empty phase = pure wait (1 RTT beat)
+                send_value = []
+                continue
+            for idx, verb in enumerate(item.verbs):
+                mn = verb.target_mn(self.pool)
+                pipe.qp.setdefault(mn, deque()).append((run, idx, verb))
             return
-        if isinstance(item, MasterCall):
-            run.master_call = item
-            run.phase = None
-            return
-        assert isinstance(item, Phase)
-        run.phase = item
-        run.queues = {}
-        run.results = [None] * len(item.verbs)
-        run.n_verbs = len(item.verbs)
-        if item.background:
-            run.record.bg_rtts += 1
-        else:
-            run.record.rtts += 1
-        if not item.verbs:   # empty phase = pure wait (1 RTT beat)
-            self._advance(run, [])
-            return
-        for idx, verb in enumerate(item.verbs):
-            mn = verb.target_mn(self.pool)
-            run.queues.setdefault(mn, []).append((idx, verb))
+
+    def inflight(self, cid: int) -> int:
+        pipe = self.pipes.get(cid)
+        return len(pipe.runs) if pipe is not None else 0
 
     def eligible(self, cid: int) -> bool:
-        run = self.running.get(cid)
-        return run is not None and not run.done
+        pipe = self.pipes.get(cid)
+        return pipe is not None and pipe.has_work()
+
+    def has_work(self) -> bool:
+        return any(p.has_work() for p in self.pipes.values())
+
+    def eligible_cids(self) -> List[int]:
+        return sorted(c for c, p in self.pipes.items() if p.has_work())
 
     def step(self, cid: int, pick: int = 0) -> bool:
         """Execute one verb (or master call) of client ``cid``.
 
         ``pick`` chooses among the client's per-MN FIFO queues, enabling the
-        schedule to explore cross-MN orderings within a doorbell batch.
+        schedule to explore cross-MN orderings within and across the
+        doorbell batches of the client's in-flight ops.
         Returns False if the client has nothing to do.
         """
         self.tick += 1
-        run = self.running.get(cid)
-        if run is None:
+        pipe = self.pipes.get(cid)
+        if pipe is None:
             return False
-        if run.master_call is not None:
-            call = run.master_call
-            run.master_call = None
+        if pipe.master_q:
+            run = pipe.master_q.popleft()
+            call, run.master_call = run.master_call, None
             ans = self._master_dispatch(call)
-            self._advance(run, ans)
+            self._advance(cid, run, ans)
             return True
-        if run.phase is None:
-            return False
-        keys = sorted(run.queues.keys())
+        keys = sorted(mn for mn, q in pipe.qp.items() if q)
         if not keys:
             return False
         mn = keys[pick % len(keys)]
-        idx, verb = run.queues[mn].pop(0)
-        if not run.queues[mn]:
-            del run.queues[mn]
+        run, idx, verb = pipe.qp[mn].popleft()
+        if not pipe.qp[mn]:
+            del pipe.qp[mn]
         run.results[idx] = self._exec_verb(verb, cid)
-        run.n_verbs -= 1
-        if run.n_verbs == 0:
-            self._advance(run, run.results)
+        run.pending -= 1
+        if run.pending == 0:
+            self._advance(cid, run, run.results)
         return True
 
     def _exec_verb(self, v: Verb, cid: int):
@@ -188,9 +236,10 @@ class Scheduler:
 
     # ------------------------------------------------------------- failure
     def crash_client(self, cid: int):
-        """Crash-stop at the current verb boundary: in-flight doorbell batch
-        stays partially executed (exactly the paper's failure model)."""
-        self.running.pop(cid, None)
+        """Crash-stop at the current verb boundary: every in-flight doorbell
+        batch of the client's pipeline stays partially executed (exactly the
+        paper's failure model)."""
+        self.pipes[cid] = _ClientPipe()
         self.clients[cid].crashed = True
 
     def crash_mn(self, mid: int):
@@ -200,29 +249,35 @@ class Scheduler:
     def run_round_robin(self, max_ticks: int = 1_000_000):
         """Drive all in-flight ops to completion, round-robin."""
         ticks = 0
-        while self.running and ticks < max_ticks:
-            for cid in list(self.running.keys()):
+        while ticks < max_ticks:
+            progressed = False
+            for cid in self.eligible_cids():
                 if self.step(cid):
                     ticks += 1
-        assert not self.running, "ops did not converge (possible livelock)"
+                    progressed = True
+            if not progressed:
+                break
+        assert not self.has_work(), "ops did not converge (possible livelock)"
 
     def run_random(self, rng=None, max_ticks: int = 2_000_000):
         rng = rng or self.rng
         ticks = 0
-        while self.running and ticks < max_ticks:
-            cids = list(self.running.keys())
+        while ticks < max_ticks:
+            cids = self.eligible_cids()
+            if not cids:
+                break
             cid = cids[int(rng.integers(len(cids)))]
             self.step(cid, pick=int(rng.integers(4)))
             ticks += 1
-        assert not self.running, "ops did not converge (possible livelock)"
+        assert not self.has_work(), "ops did not converge (possible livelock)"
 
     def run_schedule(self, schedule, max_extra: int = 500_000):
         """Drive with an explicit (cid, pick) schedule; fall back to
         round-robin once the schedule is exhausted (ensures completion)."""
         for (cid, pick) in schedule:
-            if not self.running:
+            cids = self.eligible_cids()
+            if not cids:
                 return
-            cids = sorted(self.running.keys())
             self.step(cids[cid % len(cids)], pick=pick)
         self.run_round_robin(max_ticks=max_extra)
 

@@ -1,16 +1,16 @@
-"""High-level FUSEE store API.
+"""Cluster bootstrap for the FUSEE store.
 
-``FuseeCluster`` bootstraps the pool + master + N clients.  ``KVStore`` wraps
-one client with a synchronous interface (each op runs to completion on a
-private scheduler) — the ergonomic entry point for examples and non-
-concurrency tests.  Concurrency/crash tests drive ``sim.Scheduler`` directly.
+``FuseeCluster`` wires up the pool + master + N clients.  ``cluster.store(cid)``
+returns the public pipelined ``KVStore`` (core/api.py) bound to one client —
+the ergonomic entry point for examples, benchmarks, and non-concurrency
+tests.  Concurrency/crash tests drive ``sim.Scheduler`` directly.
 """
 from __future__ import annotations
 
 from typing import List, Optional
 
+from .api import KVStore, SimBackend
 from .client import FuseeClient
-from .events import OK, OpResult
 from .heap import DMConfig, DMPool
 from .master import Master
 from .sim import Scheduler
@@ -34,8 +34,10 @@ class FuseeCluster:
         for c in self.clients:
             self.scheduler.add_client(c)
 
-    def store(self, cid: int = 0) -> "KVStore":
-        return KVStore(self, cid)
+    def store(self, cid: int = 0, *, max_inflight: int = 16) -> KVStore:
+        """The unified pipelined store API over client ``cid``."""
+        return KVStore(SimBackend(self.scheduler, self.clients[cid],
+                                  max_inflight=max_inflight))
 
     def crash_mn(self, mid: int):
         self.scheduler.crash_mn(mid)
@@ -46,40 +48,3 @@ class FuseeCluster:
     def recover_client(self, cid: int, reassign_to_cid: Optional[int] = None):
         target = self.clients[reassign_to_cid] if reassign_to_cid is not None else None
         return self.master.recover_client(cid, reassign_to=target)
-
-
-class KVStore:
-    """Synchronous single-client view over the cluster."""
-
-    def __init__(self, cluster: FuseeCluster, cid: int = 0):
-        self.cluster = cluster
-        self.cid = cid
-
-    def _run(self, kind: str, key: int, value=None) -> OpResult:
-        sched = self.cluster.scheduler
-        rec = sched.submit(self.cid, kind, key, value)
-        while sched.eligible(self.cid):
-            sched.step(self.cid)
-        assert rec.result is not None
-        rec.result.rtts = rec.rtts
-        rec.result.bg_rtts = rec.bg_rtts
-        return rec.result
-
-    def insert(self, key: int, value) -> OpResult:
-        return self._run("insert", key, list(value))
-
-    def update(self, key: int, value) -> OpResult:
-        return self._run("update", key, list(value))
-
-    def delete(self, key: int) -> OpResult:
-        return self._run("delete", key)
-
-    def search(self, key: int) -> OpResult:
-        return self._run("search", key)
-
-    def reclaim(self) -> OpResult:
-        return self._run("reclaim", 0)
-
-    def get(self, key: int):
-        r = self.search(key)
-        return r.value if r.status == OK else None

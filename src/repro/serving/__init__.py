@@ -1,5 +1,11 @@
-"""FUSEE-managed disaggregated KV-cache serving layer."""
+"""FUSEE-managed disaggregated KV-cache serving layer.
+
+The public KV surface is the unified ``core.api.KVStore`` over
+``DeviceBackend``; the device pool itself (kvpool.KVPool) is an internal
+substrate and is no longer exported here.
+"""
+from .backend import DeviceBackend  # noqa: F401
 from .engine import Request, ServeEngine  # noqa: F401
-from .kvpool import KVPool, PoolConfig  # noqa: F401
+from .kvpool import PoolConfig  # noqa: F401
 from .snapshot_jax import EpochResult, snapshot_epoch, snapshot_epoch_np  # noqa
 from . import slots_jax  # noqa: F401

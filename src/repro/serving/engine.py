@@ -26,8 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.api import KVStore, Op
+from repro.core.events import OK
 from repro.models.model import Model
-from .kvpool import KVPool, PoolConfig
+from .backend import DeviceBackend
+from .kvpool import PoolConfig
 
 BLOCK_TOKENS = 64   # prefix-hash granularity
 
@@ -40,6 +43,7 @@ class Request:
     out: List[int] = field(default_factory=list)
     slot: int = -1
     pages: Optional[np.ndarray] = None
+    surplus: Optional[np.ndarray] = None  # allocated pages that lost insert
     prefix_hits: int = 0
 
 
@@ -64,7 +68,11 @@ class ServeEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        self.pool = KVPool(pool_cfg or PoolConfig())
+        # unified store API over the device-resident pool (one public KV
+        # surface shared with the event-level core; see core/api.py)
+        self._backend = DeviceBackend(pool_cfg or PoolConfig(), cid=cid,
+                                      seed=seed)
+        self.store = KVStore(self._backend)
         self.cid = cid
         self.greedy = greedy
         self.queue: List[Request] = []
@@ -77,6 +85,11 @@ class ServeEngine:
         self._decode = jax.jit(model.decode_step, donate_argnums=1)
         self.steps = 0
 
+    @property
+    def pool(self):
+        """The device pool behind the store (stats / recovery / tests)."""
+        return self._backend.pool
+
     def submit(self, req: Request):
         self.queue.append(req)
 
@@ -86,21 +99,27 @@ class ServeEngine:
         while self.queue and self.slots_free:
             req = self.queue.pop(0)
             req.slot = self.slots_free.pop(0)
-            # FUSEE prefix lookup: count reusable pages for this prompt
+            # FUSEE prefix lookup: one batched GET over the block hashes
             hashes = _block_hashes(req.prompt)
             if len(hashes):
-                ptr, found = self.pool.search(hashes)
+                res = [f.result() for f in self.store.submit_batch(
+                    [Op.get(int(h)) for h in hashes])]
+                found = np.array([r.status == OK for r in res])
                 req.prefix_hits = int(found.sum())
                 missing = hashes[~found]
                 if len(missing):
-                    pages = self.pool.alloc_pages(self.cid, len(missing))
-                    live = pages >= 0
-                    if live.any():
-                        self.pool.write_pages(self.cid, pages[live],
-                                              missing[live], opcode=1)
-                        self.pool.insert_batch(self.cid, missing[live],
-                                               pages[live])
-                    req.pages = pages
+                    ins = [f.result() for f in self.store.submit_batch(
+                        [Op.insert(int(h), None) for h in missing])]
+                    req.pages = np.array(
+                        [r.page if r.page is not None else -1 for r in ins],
+                        np.int32)
+                    # a page whose insert lost (another worker's page won
+                    # the slot) is unreferenced by the index: remember it
+                    # for release at retire
+                    req.surplus = np.array(
+                        [r.page for r in ins
+                         if r.status != OK and r.page is not None
+                         and r.page >= 0], np.int32)
             self.slot_tokens[req.slot, :len(req.prompt)] = req.prompt
             self.slot_len[req.slot] = len(req.prompt)
             self.active[req.slot] = req
@@ -158,10 +177,12 @@ class ServeEngine:
                 self.slots_free.append(s)
                 self.slot_tokens[s] = 0
                 self.slot_len[s] = 0
-                if req.pages is not None:
-                    live = req.pages[req.pages >= 0]
-                    # prefix pages stay in the store (cache); only surplus
-                    # pages would be freed here in an eviction policy.
+                if req.surplus is not None and len(req.surplus):
+                    # prefix pages referenced by the index stay in the store
+                    # (the shared cache); pages this request allocated that
+                    # LOST their insert race are unreachable — free them
+                    # back to the pool.
+                    self._backend.release_pages(req.surplus)
         return len(self.active)
 
     def run(self, max_ticks: int = 1000) -> List[Request]:

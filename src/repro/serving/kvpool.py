@@ -1,4 +1,8 @@
-"""The FUSEE-managed disaggregated KV-cache pool.
+"""The FUSEE-managed disaggregated KV-cache pool (INTERNAL substrate).
+
+This module is not a public KV surface: clients go through the unified
+``core.api.KVStore`` over ``serving.backend.DeviceBackend``, which lowers
+Op batches onto the pool below.  Whitebox tests import it directly.
 
 This is the paper's technique as a first-class serving feature: the
 *metadata* of a paged KV-cache prefix store — the RACE hash index mapping
@@ -260,6 +264,12 @@ class KVPool:
             wpg = jnp.where(res.win, pages_j, self.cfg.n_pages)
             self.log = self.log.at[wpg, 0].set(
                 v_old | jnp.int32(1 << 30), mode="drop")
+            # a winner that overwrote a same-key slot superseded that key's
+            # old page: free it (any-client bitmap free, §4.4) so upserts
+            # don't leak pool capacity
+            superseded = np.asarray(
+                jnp.where(res.win & (v_old != 0), SL.slot_ptr(v_old), -1))
+            self.free_pages(superseded[superseded >= 0])
             done |= np.asarray(res.win)
             if done.all():
                 break

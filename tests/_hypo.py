@@ -1,0 +1,92 @@
+"""Minimal stand-in for ``hypothesis`` when the package is not installed.
+
+The tier-1 suite property-tests the protocol with hypothesis; this shim
+keeps those tests collectable *and runnable* in hypothesis-less
+environments by replaying each property over a deterministic sample of
+random examples (no shrinking, no database — just coverage).
+
+Only the strategy surface this repo uses is implemented: ``integers``,
+``booleans``, ``lists``, ``sampled_from``.  Test modules import it as:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypo import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import random
+import zlib
+
+DEFAULT_EXAMPLES = 12
+MAX_EXAMPLES_CAP = 25       # keep hypothesis-less runs quick
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        lo = -(2 ** 31) if min_value is None else min_value
+        hi = 2 ** 31 if max_value is None else max_value
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+st = strategies
+
+
+def given(*gargs, **gkwargs):
+    def deco(fn):
+        # NOTE: no functools.wraps — copying fn's signature (or setting
+        # __wrapped__) would make pytest treat the drawn parameters as
+        # fixtures; the wrapper must present a bare () signature.
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_EXAMPLES)
+            seed0 = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = random.Random(seed0 + i)
+                drawn = tuple(s.example(rng) for s in gargs)
+                dkw = {k: s.example(rng) for k, s in gkwargs.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **dkw)
+                except Exception:
+                    print(f"[_hypo] falsifying example #{i}: "
+                          f"args={drawn} kwargs={dkw}")
+                    raise
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._stub_given = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples=None, deadline=None, **_ignored):
+    def deco(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = min(max_examples, MAX_EXAMPLES_CAP)
+        return fn
+    return deco

@@ -1,0 +1,334 @@
+"""Tests for the unified pipelined store API (core/api.py + core/codec.py).
+
+Covers: codec round trips (bytes key/value -> slab words -> bytes),
+multi-op-per-client pipelines under random schedules (linearizability of
+mixed INSERT/UPDATE/DELETE/SEARCH with >= 4 ops in flight per client), the
+batched cache-resident SEARCH fast path (race_lookup kernel + stale-entry
+fallback), and the device backend speaking the same surface."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # pragma: no cover - hypothesis-less environments
+    from _hypo import given, settings, strategies as st
+
+from repro.core import codec
+from repro.core.api import KVStore, Op, SimBackend
+from repro.core.client import FuseeClient
+from repro.core.events import NOT_FOUND, OK
+from repro.core.heap import DMConfig, DMPool
+from repro.core.linearize import check_linearizable, records_to_hops
+from repro.core.master import Master
+from repro.core.sim import Scheduler
+from repro.core.store import FuseeCluster
+
+
+# ----------------------------------------------------------------- codec ----
+def test_encode_key_int_passthrough():
+    assert codec.encode_key(42) == 42
+    assert codec.encode_key(2**64 - 1) == 2**64 - 1
+
+
+def test_encode_key_bytes_str_consistent():
+    assert codec.encode_key("abc") == codec.encode_key(b"abc")
+    assert codec.encode_key(b"abc") != codec.encode_key(b"abd")
+    assert codec.encode_key(b"") != codec.encode_key(b"\x00")
+    # 64-bit range, deterministic
+    k = codec.encode_key(b"some-key")
+    assert 0 <= k < 2**64 and k == codec.encode_key(b"some-key")
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(0, 64), seed=st.integers(0, 10_000))
+def test_value_roundtrip_random_bytes(n, seed):
+    rng = np.random.default_rng(seed)
+    b = bytes(rng.integers(0, 256, n, dtype=np.uint8).tolist())
+    assert codec.decode_value(codec.encode_value(b)) == b
+
+
+def test_value_roundtrip_edge_lengths():
+    for n in (0, 1, 7, 8, 9, 15, 16, 17, 255):
+        b = bytes(range(256))[:n]
+        words = codec.encode_value(b)
+        assert all(0 <= w < 2**64 for w in words)
+        assert codec.decode_value(words) == b
+
+
+def test_value_str_and_raw_words():
+    assert codec.decode_value(codec.encode_value("héllo")) == "héllo".encode()
+    # untagged word lists pass through unchanged (legacy callers)
+    assert codec.decode_value([1, 2, 3]) == [1, 2, 3]
+    assert codec.encode_value([7, 8]) == [7, 8]
+    assert codec.decode_value(None) is None
+    assert codec.encode_value(None) == []
+
+
+def test_raw_word_list_tag_collision_rejected():
+    """A raw word list that would masquerade as a tagged byte payload is
+    rejected at encode time; near-misses stay raw lists on decode."""
+    tagged_like = [(codec.VALUE_TAG << 48) | 3, 0x636261]   # would be b'abc'
+    with pytest.raises(ValueError):
+        codec.encode_value(tagged_like)
+    # header tag but INCONSISTENT length -> treated as a raw word list
+    assert codec.decode_value([(codec.VALUE_TAG << 48) | 3]) == \
+        [(codec.VALUE_TAG << 48) | 3]
+    assert codec.decode_value([(codec.VALUE_TAG << 48) | 3, 1, 2]) == \
+        [(codec.VALUE_TAG << 48) | 3, 1, 2]
+    # nonzero padding beyond the stated length -> raw word list
+    assert codec.decode_value([(codec.VALUE_TAG << 48) | 1, 2**63]) == \
+        [(codec.VALUE_TAG << 48) | 1, 2**63]
+
+
+def test_store_bytes_roundtrip_through_slabs():
+    """bytes key/value -> slab object words -> bytes, via the real store."""
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=3), num_clients=2)
+    kv = cl.store(0)
+    payloads = {f"key-{i}".encode(): bytes([i]) * (i * 3 + 1)
+                for i in range(12)}
+    for k, v in payloads.items():
+        assert kv.put(k, v).status == OK
+    kv1 = cl.store(1)
+    for k, v in payloads.items():
+        assert kv1.get(k) == v, k
+    assert kv1.get(b"missing") is None
+
+
+# ------------------------------------------------------- pipelined futures --
+def test_submit_batch_pipelines_beyond_depth():
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=2), num_clients=1)
+    kv = cl.store(0, max_inflight=4)
+    futs = kv.submit_batch([Op.put(i, [i]) for i in range(40)])
+    assert all(f.result().status == OK for f in futs)
+    assert kv.scan_stats()["inflight"] == 0
+    assert all(kv.get(i) == [i] for i in range(40))
+
+
+def test_multiple_ops_in_flight_same_client():
+    """>= 4 concurrent ops on ONE client actually overlap in time."""
+    pool = DMPool(DMConfig(num_mns=4, replication=2), num_clients=1)
+    master = Master(pool)
+    c = FuseeClient(0, pool)
+    sched = Scheduler(pool, master)
+    sched.add_client(c)
+    recs = [sched.submit(0, "insert", k, [k]) for k in range(6)]
+    assert sched.inflight(0) == 6
+    sched.run_random(rng=np.random.default_rng(0))
+    assert all(r.result.status == OK for r in recs)
+    # invocation ticks all precede every response tick: the ops overlapped
+    assert max(r.inv_tick for r in recs) < min(r.resp_tick for r in recs)
+
+
+# ------------------------------------------------ pipelined linearizability -
+def _fresh(num_clients=4, r=3, num_mns=4):
+    cfg = DMConfig(num_mns=num_mns, replication=r)
+    pool = DMPool(cfg, num_clients=num_clients)
+    master = Master(pool)
+    clients = [FuseeClient(i, pool) for i in range(num_clients)]
+    sched = Scheduler(pool, master)
+    for c in clients:
+        sched.add_client(c)
+    return pool, master, clients, sched
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_pipelined_mixed_ops_linearizable(seed):
+    """Random schedules over pipelines of >= 4 mixed ops per client on one
+    contended key stay linearizable (the acceptance bar for the pipelined
+    scheduler rework)."""
+    rng = np.random.default_rng(seed)
+    pool, master, clients, sched = _fresh(num_clients=3)
+    rec0 = sched.submit(clients[0].cid, "insert", 7, [1])
+    sched.run_round_robin()
+    assert rec0.result.status == OK
+    kinds = ["update", "search", "delete", "insert"]
+    recs = []
+    val = 10
+    for c in clients[1:]:
+        for _ in range(4):                      # 4 ops in flight per client
+            kind = kinds[int(rng.integers(len(kinds)))]
+            v = [val] if kind in ("update", "insert") else None
+            val += 1
+            recs.append(sched.submit(c.cid, kind, 7, v))
+    for c in clients[1:]:
+        assert sched.inflight(c.cid) == 4
+    sched.run_random(rng=rng)
+    hops = records_to_hops(sched.history, 7)
+    assert check_linearizable(hops, initial=None)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_pipelined_api_batches_linearizable(seed):
+    """Same bar, driven through the public submit_batch surface (which adds
+    the fused multi-key SEARCH records to the history)."""
+    rng = np.random.default_rng(seed)
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=3), num_clients=3,
+                      seed=seed)
+    kv0, kv1, kv2 = (cl.store(i) for i in range(3))
+    key = b"contended"
+    assert kv0.put(key, [1]).status == OK
+    kv1.get(key)
+    kv2.get(key)                               # warm both caches
+    futs = []
+    futs += kv1.submit_batch([Op.get(key), Op.update(key, [2]),
+                              Op.get(key), Op.get(key)])
+    futs += kv2.submit_batch([Op.get(key), Op.update(key, [3]),
+                              Op.get(key), Op.delete(key)])
+    # drive to completion under a random global schedule
+    sched = cl.scheduler
+    while sched.has_work():
+        cids = sched.eligible_cids()
+        sched.step(cids[int(rng.integers(len(cids)))],
+                   pick=int(rng.integers(4)))
+    assert all(f.done() for f in futs)
+    hops = records_to_hops(sched.history, key)
+    assert check_linearizable(hops, initial=None)
+
+
+# ------------------------------------------------- batched SEARCH fast path -
+def test_batch_search_fast_path_one_rtt():
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=3), num_clients=1)
+    kv = cl.store(0)
+    for f in kv.submit_batch([Op.put(i, [i * 7]) for i in range(16)]):
+        assert f.result().status == OK
+    for i in range(16):
+        kv.get(i)                               # warm the adaptive cache
+    mark = len(cl.scheduler.history)
+    res = [f.result() for f in kv.submit_batch([Op.get(i) for i in range(16)])]
+    assert all(r.status == OK for r in res)
+    assert [r.value for r in res] == [[i * 7] for i in range(16)]
+    new = cl.scheduler.history[mark:]
+    fused = [r for r in new if r.kind == "search_batch"]
+    assert len(fused) == 1 and fused[0].rtts == 1
+    # whole batch cost 1 network RTT
+    assert sum(r.rtts for r in new) == 1
+    st_ = kv.scan_stats()
+    assert st_["batch_fast_hits"] == 16 and st_["batch_fallbacks"] == 0
+
+
+def test_batch_search_stale_cache_falls_back():
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=3), num_clients=2)
+    kv0, kv1 = cl.store(0), cl.store(1)
+    for i in range(8):
+        assert kv0.put(i, [i]).status == OK
+        kv0.get(i)
+    # another client overwrites half the keys -> client 0's cache is stale
+    for i in range(0, 8, 2):
+        assert kv1.update(i, [100 + i]).status == OK
+    res = [f.result() for f in kv0.submit_batch([Op.get(i) for i in range(8)])]
+    assert all(r.status == OK for r in res)
+    assert [r.value for r in res] == \
+        [[100 + i] if i % 2 == 0 else [i] for i in range(8)]
+    st_ = kv0.scan_stats()
+    assert st_["batch_fallbacks"] >= 1      # stale entries took the slow path
+
+
+def test_batch_search_misses_report_not_found():
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=2), num_clients=1)
+    kv = cl.store(0)
+    for i in range(6):
+        kv.put(i, [i])
+        kv.get(i)
+    futs = kv.submit_batch([Op.get(i) for i in range(4)]
+                           + [Op.get(999), Op.get(1000)])
+    res = [f.result() for f in futs]
+    assert [r.status for r in res[:4]] == [OK] * 4
+    assert [r.status for r in res[4:]] == [NOT_FOUND] * 2
+
+
+def test_shadow_hash_matches_kernel_ref():
+    """The fast path only works while api._hash32_np stays in lockstep with
+    the race_lookup kernel's hash; drift would silently turn every probe
+    into a fallback, so pin them to each other here."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.core.api import _hash32_np
+    from repro.kernels.race_lookup.ref import hash32
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 2**32, 512, dtype=np.uint32)
+    for seed in (1, 2, 7):
+        ours = _hash32_np(x, seed)
+        kern = np.asarray(hash32(jnp.asarray(x.view(np.int32)), seed))
+        np.testing.assert_array_equal(ours, kern.view(np.uint32))
+
+
+def test_shadow_memo_reuses_table():
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=2), num_clients=1)
+    kv = cl.store(0)
+    for i in range(8):
+        kv.put(i, [i])
+        kv.get(i)
+    ops = [Op.get(i) for i in range(8)]
+    [f.result() for f in kv.submit_batch(ops)]
+    st1 = kv.scan_stats()["shadow_rebuilds"]
+    # cache untouched between identical batches -> no rebuild... but the
+    # fused search bumps access counters, so one more rebuild at most
+    [f.result() for f in kv.submit_batch(ops)]
+    [f.result() for f in kv.submit_batch(ops)]
+    st3 = kv.scan_stats()
+    assert st3["shadow_rebuilds"] <= st1 + 2
+    assert st3["batch_fast_hits"] == 24
+
+
+# ------------------------------------------------------------ device twin ---
+def test_device_backend_same_surface():
+    from repro.serving import DeviceBackend, PoolConfig
+    store = KVStore(DeviceBackend(PoolConfig(n_pages=256, n_buckets=64,
+                                             slots_per_bucket=4, replicas=2)))
+    res = [f.result() for f in
+           store.submit_batch([Op.put(f"blk-{i}", b"v%d" % i)
+                               for i in range(32)])]
+    assert all(r.status == OK for r in res)
+    assert all(r.page is not None and r.page >= 0 for r in res)
+    got = [f.result() for f in
+           store.submit_batch([Op.get(f"blk-{i}") for i in range(32)])]
+    assert [r.value for r in got] == [b"v%d" % i for i in range(32)]
+    assert store.delete("blk-0").status == OK
+    assert store.get("blk-0") is None
+    assert store.scan_stats()["backend"] == "device"
+
+
+def test_device_backend_duplicate_keys_in_one_batch():
+    """Duplicate keys batched together are concurrent upserts: one page,
+    last value wins, and no resolved future holds a freed page."""
+    from repro.serving import DeviceBackend, PoolConfig
+    be = DeviceBackend(PoolConfig(n_pages=64, n_buckets=32,
+                                  slots_per_bucket=4, replicas=2))
+    store = KVStore(be)
+    r1, r2 = [f.result() for f in store.submit_batch(
+        [Op.put(b"k", b"v1"), Op.put(b"k", b"v2")])]
+    assert r1.status == OK and r2.status == OK
+    assert r1.page == r2.page                       # one page, shared result
+    assert np.asarray(be.pool.free_bitmap).sum() == 0   # nothing freed
+    live = store.submit(Op.get(b"k")).result()
+    assert live.page == r1.page and live.value == b"v2"  # last writer wins
+
+
+def test_device_backend_upsert_does_not_leak_pages():
+    """Repeated PUTs of one key supersede the old page each time; the pool
+    must recycle them instead of exhausting (regression: upsert leak)."""
+    from repro.serving import DeviceBackend, PoolConfig
+    store = KVStore(DeviceBackend(PoolConfig(n_pages=64, n_buckets=32,
+                                             slots_per_bucket=4,
+                                             replicas=2, chunk_pages=16)))
+    for i in range(300):        # >> n_pages
+        r = store.put("hot-key", b"v%d" % i)
+        assert r.status == OK, f"pool exhausted at upsert #{i}"
+    assert store.get("hot-key") == b"v299"
+
+
+def test_device_backend_surplus_release():
+    """A page whose index slot was superseded is unreachable; releasing it
+    returns it to the pool (the engine's retire path)."""
+    from repro.serving import DeviceBackend, PoolConfig
+    be = DeviceBackend(PoolConfig(n_pages=256, n_buckets=64,
+                                  slots_per_bucket=4, replicas=2))
+    store = KVStore(be)
+    r1 = store.put("k", b"first")
+    r2 = store.put("k", b"second")          # supersedes page r1.page
+    assert r1.page != r2.page
+    live = store.submit(Op.get("k")).result()
+    assert live.page == r2.page and live.value == b"second"
+    be.release_pages(np.array([r1.page], np.int32))
+    assert be.pool.reclaim(be.cid) >= 1     # surplus page came back

@@ -2,10 +2,15 @@
 two-level allocation, embedded log)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # pragma: no cover - hypothesis-less environments
+    from _hypo import given, settings, strategies as st
 
 from repro.core import layout as L
 from repro.core import race
+from repro.core.api import Op
 from repro.core.client import FuseeClient, evaluate_rules_pure, R1, R2, LOSE, FAILV
 from repro.core.events import OK, NOT_FOUND
 from repro.core.heap import DMConfig, DMPool, INDEX_REGION
@@ -99,10 +104,10 @@ def test_rtt_counts_match_paper(cluster):
     assert r.rtts == 4, "conflict-free INSERT must be 4 RTTs (Fig 9)"
     r = kv.update(2, [21])
     assert r.rtts == 4, "conflict-free UPDATE must be 4 RTTs (Fig 9)"
-    r = kv.search(2)
+    r = kv.submit(Op.get(2)).result()
     assert r.rtts == 1, "cache-hit SEARCH must be 1 RTT (Fig 9)"
     kv2 = cluster.store(1)
-    r = kv2.search(2)
+    r = kv2.submit(Op.get(2)).result()
     assert r.rtts == 2, "cache-miss SEARCH must be 2 RTTs (Fig 9)"
 
 
@@ -113,7 +118,7 @@ def test_insert_search_update_delete(cluster):
     assert kv.update(5, [3]).status == OK
     assert kv.get(5) == [3]
     assert kv.delete(5).status == OK
-    assert kv.search(5).status == NOT_FOUND
+    assert kv.submit(Op.get(5)).result().status == NOT_FOUND
     assert kv.update(5, [9]).status == NOT_FOUND
     assert kv.delete(5).status == NOT_FOUND
 

@@ -5,10 +5,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.serving import (KVPool, PoolConfig, Request, ServeEngine,
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # pragma: no cover - hypothesis-less environments
+    from _hypo import given, settings, strategies as st
+
+from repro.launch.mesh import make_host_mesh
+from repro.serving import (PoolConfig, Request, ServeEngine,
                            snapshot_epoch, snapshot_epoch_np)
+from repro.serving.kvpool import KVPool  # internal substrate (whitebox)
 
 
 # ------------------------------------------------------- SNAPSHOT epoch ----
@@ -166,8 +172,7 @@ def test_pool_recovery_idempotent(pool):
 def test_engine_serves_and_hits_prefix_cache():
     from repro.configs import base as C
     from repro.models import build
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh((1, 1), ("data", "model"))
     r = C.reduced(C.get("llama3-8b"))
     m = build(r, mesh, use_kernels=True)
     params = m.init(jax.random.key(0))

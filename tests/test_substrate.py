@@ -7,9 +7,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # pragma: no cover - hypothesis-less environments
+    from _hypo import given, settings, strategies as st
 
 from repro.ckpt import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.launch.mesh import make_host_mesh
 from repro.optim import (Moment, OptConfig, Optimizer, clip_by_global_norm,
                          global_norm, schedule)
 
@@ -165,8 +170,7 @@ def test_elastic_restore_onto_different_mesh(tmp_path):
     from jax.sharding import PartitionSpec as P
     t = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     save_checkpoint(str(tmp_path), 1, t)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh((1, 1), ("data", "model"))
     loaded, _, _ = load_checkpoint(str(tmp_path), t, mesh=mesh,
                                    specs={"w": P("data", None)})
     np.testing.assert_array_equal(np.asarray(loaded["w"]), np.asarray(t["w"]))
@@ -175,8 +179,7 @@ def test_elastic_restore_onto_different_mesh(tmp_path):
 # ------------------------------------------------------ sharding resolver --
 def test_sharding_resolver_rules_and_fallbacks():
     from repro.models.sharding import BASELINE_RULES, ShardingResolver
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh((1, 1), ("data", "model"))
     res = ShardingResolver(mesh, BASELINE_RULES)
     # 1-device mesh: everything resolves to replicated specs without error
     spec = res.spec(("batch", None, "mlp"), (16, 4, 64))
@@ -188,8 +191,7 @@ def test_sharding_resolver_divisibility_fallback():
     from repro.models.sharding import BASELINE_RULES, ShardingResolver
     # force multi-"device" check via axis sizes in the virtual mesh if
     # available; on 1 device the fallback path is a no-op but must not raise
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_host_mesh((1, 1), ("data", "model"))
     res = ShardingResolver(mesh, BASELINE_RULES)
     res.spec(("heads",), (15,))  # 15 never divides a >1 axis: falls back
 

@@ -16,8 +16,8 @@ from repro.train import TrainConfig, Trainer, make_train_step
 
 
 def mesh1():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh((1, 1), ("data", "model"))
 
 
 def tiny_batch(cfg, model, B=2, S=32, seed=1):
