@@ -14,12 +14,8 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.configs.fusee_paper import FuseePaperConfig
 from repro.core.api import Op
-from repro.core.heap import DMConfig, DMPool, INDEX_REGION
-from repro.core.master import Master
-from repro.core.client import FuseeClient
-from repro.core.sim import Scheduler
+from repro.core.heap import DMConfig
 from repro.core.store import FuseeCluster
 
 from .baselines import clover_tput, pdpm_tput
@@ -233,29 +229,25 @@ def fig1819_replication() -> List[Dict]:
 # -------------------------------------------------------------- figure 20 --
 def fig20_mn_crash() -> List[Dict]:
     """YCSB-C throughput timeline across an MN crash: searches continue on
-    backups; bandwidth halves with one of two data replicas gone."""
-    cfg = DMConfig(num_mns=2, replication=2, region_words=1 << 15,
-                   regions_per_mn=16)
-    pool = DMPool(cfg, num_clients=8)
-    master = Master(pool)
-    clients = [FuseeClient(i, pool, enable_cache=False) for i in range(8)]
-    sched = Scheduler(pool, master)
-    for c in clients:
-        sched.add_client(c)
+    backups; bandwidth halves with one of two data replicas gone.  The
+    crash goes through the cluster fault surface — detection and Alg-3
+    re-homing happen inside the scheduler loop, no master calls."""
+    cl = FuseeCluster(DMConfig(num_mns=2, replication=2,
+                               region_words=1 << 15, regions_per_mn=16),
+                      num_clients=8, enable_cache=False)
+    pool, sched = cl.pool, cl.scheduler
     for k in range(64):
-        sched.submit(clients[k % 8].cid, "insert", k, [k] * 16)
+        sched.submit(k % 8, "insert", k, [k] * 16)
         sched.run_round_robin()
     rows = []
     rng = np.random.default_rng(20)
     for second in range(9):
         if second == 5:
-            sched.crash_mn(1)
-            master.maybe_recover_mns()
+            cl.crash_mn(1)
         pool.mn_bytes[:] = 0
         n_ops = 200
         for i in range(n_ops):
-            sched.submit(clients[i % 8].cid, "search",
-                         int(rng.integers(64)), None)
+            sched.submit(i % 8, "search", int(rng.integers(64)), None)
             sched.run_round_robin()
         recs = sched.history[-n_ops:]
         ok = [r for r in recs if r.result.status == "OK"]
@@ -298,7 +290,8 @@ def tab1_recovery() -> List[Dict]:
     for i in range(1000):
         kv.update(i % 200, [i] * 8)
     cl.crash_client(0)
-    st = cl.recover_client(0, reassign_to_cid=1)
+    cl.recover_client(0, reassign_to_cid=1)
+    st = cl.health().recovery        # cumulative RecoveryStats (health API)
     get_md = st.get_metadata_rtts * PAPER.rpc_rtt_us * 1e-3
     trav = st.traverse_log_rtts * PAPER.rtt_us * 1e-3
     rec = st.recover_requests_rtts * PAPER.rtt_us * 1e-3

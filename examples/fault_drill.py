@@ -1,24 +1,30 @@
 """Fault drill: kill the trainer mid-run, restore from the last committed
-checkpoint, finish, and verify the loss curve is seamless.  Also drills an
-MN crash + client crash in the KV store.
+checkpoint, finish, and verify the loss curve is seamless.  Then drill the
+KV store through the declarative fault surface: an MN crash and a client
+crash fire from a ``FaultPlan`` while a pipelined workload is in flight,
+in-flight futures settle to the typed retriable ``CRASHED`` outcome, the
+crashed client is recovered and replaced via dynamic membership, and
+``cluster.health()`` reports the whole story.
 
-    PYTHONPATH=src python examples/fault_drill.py
+    PYTHONPATH=src python examples/fault_drill.py [--skip-train]
 """
+import argparse
 import shutil
 
-import jax
-import numpy as np
-
-from repro.configs import base as C
-from repro.core import DMConfig, FuseeCluster
-from repro.data import DataConfig, SyntheticLM
-from repro.models import build
-from repro.optim import OptConfig
-from repro.train import TrainConfig, Trainer
-from repro.launch.mesh import make_host_mesh
+from repro.core import (CRASHED, OK, ClientCrashed, DMConfig, FaultPlan,
+                        FuseeCluster, Op)
 
 
 def train_drill():
+    import jax
+
+    from repro.configs import base as C
+    from repro.data import DataConfig, SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import build
+    from repro.optim import OptConfig
+    from repro.train import TrainConfig, Trainer
+
     print("== training fault drill ==")
     shutil.rmtree("/tmp/repro_fault_ckpt", ignore_errors=True)
     cfg = C.reduced(C.get("smollm-360m"))
@@ -38,25 +44,60 @@ def train_drill():
 
 
 def store_drill():
-    print("\n== KV-store crash drill (MN + client) ==")
+    print("\n== KV-store fault drill (declarative MN + client crash) ==")
     cluster = FuseeCluster(DMConfig(num_mns=4, replication=3), num_clients=3)
     kv = cluster.store(0)
     for k in range(32):
         kv.insert(k, [k * 10])
     print(" 32 keys inserted on client 0")
-    cluster.crash_mn(2)
-    cluster.master.maybe_recover_mns()
-    ok = all(cluster.store(1).get(k) == [k * 10] for k in range(32))
-    print(f" MN 2 crashed + master re-homed regions: all keys readable={ok}")
-    cluster.crash_client(0)
+
+    # Declarative plan: MN 2 dies while the UPDATE batch below is in flight
+    # (auto-detected and re-homed by the scheduler loop, no master calls),
+    # then client 0 crash-stops 16 completed ops later, mid-pipeline.
+    injector = cluster.inject(FaultPlan()
+                              .crash_mn(2, after_ops=40)
+                              .crash_client(0, after_ops=48))
+    futs = kv.submit_batch([Op.update(k, [k * 10]) for k in range(32)])
+    res = [f.result() for f in futs]
+    n_ok = sum(r.status == OK for r in res)
+    n_crashed = sum(r.status == CRASHED for r in res)
+    print(f" UPDATE x32 under the plan -> {n_ok} OK, {n_crashed} CRASHED "
+          f"(all retriable="
+          f"{all(r.retriable for r in res if r.status == CRASHED)})")
+    assert injector.done, injector.pending
+
+    try:
+        kv.get(0)
+    except ClientCrashed as e:
+        print(f" submit on the dead client -> typed ClientCrashed "
+              f"(cid={e.cid}, reason={e.reason!r})")
+
+    retried = [cluster.store(1).get(k) for k in range(32)]
+    print(f" retried on live client 1   -> all keys readable="
+          f"{retried == [[k * 10] for k in range(32)]}")
+
     st = cluster.recover_client(0, reassign_to_cid=1)
-    print(f" client 0 crashed: recovery reclaimed {st.reclaimed_objects} "
-          f"objects, redid {st.redone_ops} ops, "
-          f"~{st.reconnect_ms:.0f}ms reconnect")
-    ok = all(cluster.store(2).get(k) == [k * 10] for k in range(32))
-    print(f" data intact after both failures: {ok}")
+    print(f" client 0 recovered: reclaimed {st.reclaimed_objects} objects, "
+          f"redid {st.redone_ops} ops, ~{st.reconnect_ms:.0f}ms reconnect")
+
+    cid = cluster.add_client()            # elastic replacement joins
+    ok = all(cluster.store(cid).get(k) == [k * 10] for k in range(32))
+    print(f" replacement client {cid} joined (epoch "
+          f"{cluster.clients[cid].epoch}): all keys readable={ok}")
+
+    h = cluster.health()
+    print(f" health: {h.summary()}")
+    dead = [m.mid for m in h.mns if not m.alive]
+    print(f" MNs down={dead}, recovery total "
+          f"traverse={h.recovery.traverse_log_rtts} RTTs "
+          f"redo={h.recovery.redone_ops} ops")
 
 
 if __name__ == "__main__":
-    train_drill()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-train", action="store_true",
+                    help="only run the KV-store drill (CI failure-path smoke)")
+    args = ap.parse_args()
+    if not args.skip_train:
+        train_drill()
     store_drill()

@@ -57,6 +57,9 @@ def main():
           f"reclaimed={stats.reclaimed_objects} "
           f"redone={stats.redone_ops} (reconnect {stats.reconnect_ms}ms)")
     print(f" data survives: k=104 -> {cluster.store(1).get(104)}")
+    print(f" health: {cluster.health().summary()}")
+    print(" (examples/fault_drill.py drills the full membership/fault API:"
+          " FaultPlan, CRASHED futures, add/remove_client)")
 
     print("\n== 2. serving pool (same API, batched, device-resident) ==")
     store = KVStore(DeviceBackend(PoolConfig(n_pages=1024, n_buckets=256,

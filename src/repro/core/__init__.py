@@ -1,10 +1,13 @@
 """FUSEE core: the paper's contribution (SNAPSHOT replication, two-level
 memory management, embedded operation logs, failure recovery) plus the
 event-level disaggregated-memory simulation substrate."""
-from .events import EXISTS, FULL, NOT_FOUND, OK, OpResult  # noqa: F401
+from .events import CRASHED, EXISTS, FULL, NOT_FOUND, OK, OpResult  # noqa: F401
 from .heap import DMConfig, DMPool, INDEX_REGION, META_REGION  # noqa: F401
 from .client import FuseeClient  # noqa: F401
-from .master import Master  # noqa: F401
+from .master import Master, RecoveryStats  # noqa: F401
+from .faults import (ClientCrashed, ClientHealth, ClusterError,  # noqa: F401
+                     ClusterHealth, FaultEvent, FaultInjector, FaultPlan,
+                     MNHealth, SchedulerStalled)
 from .sim import Scheduler, run_ops_concurrently  # noqa: F401
 from .api import KVFuture, KVStore, Op, SimBackend  # noqa: F401
 from .store import FuseeCluster  # noqa: F401

@@ -37,7 +37,8 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from . import codec
-from .events import NOT_FOUND, OK, OpResult
+from .events import CRASHED, NOT_FOUND, OK, OpResult
+from .faults import ClientCrashed, SchedulerStalled
 
 __all__ = ["Op", "KVFuture", "KVStore", "SimBackend"]
 
@@ -166,6 +167,14 @@ class SimBackend:
 
     # ------------------------------------------------------------- submit
     def submit_many(self, ops: Sequence[Op]) -> List[KVFuture]:
+        if self.client.crashed:
+            raise ClientCrashed(self.cid)
+        if self.sched.clients.get(self.cid) is not self.client:
+            # stale handle: the client left (or its cid was reused by a
+            # later add_client) — reject rather than run on the wrong client
+            raise ClientCrashed(self.cid,
+                                "removed" if self.cid in self.sched.removed
+                                else "replaced")
         futs = [KVFuture(self) for _ in ops]
         self.counters["ops"] += len(ops)
         batched: Dict[int, Any] = {}
@@ -176,7 +185,18 @@ class SimBackend:
         for i, op in enumerate(ops):
             if i in batched:
                 continue
-            self._submit_one(op, futs[i])
+            try:
+                self._submit_one(op, futs[i])
+            except ClientCrashed:
+                if not (i or batched):
+                    raise      # nothing accepted yet: reject the whole batch
+                # the client died mid-batch (fault injection during the
+                # backpressure pump): the batch was accepted, so its
+                # remaining ops settle CRASHED like any in-flight work.
+                for fut in futs[i:]:
+                    if not fut.done():
+                        fut._resolve(OpResult(CRASHED))
+                break
         return futs
 
     def _submit_one(self, op: Op, fut: KVFuture):
@@ -206,6 +226,14 @@ class SimBackend:
             gen=self.client.op_search_batch(items))
 
         def finish(record, batch=batch, futs=futs):
+            if record.result.status != OK:
+                # client crashed mid-flight: the fused op resolves CRASHED,
+                # and so does every per-key future riding on it — no
+                # resubmits (the client is dead), no leaked futures.
+                res = OpResult(record.result.status)
+                for (i, _key64, _ce) in batch:
+                    futs[i]._resolve(res, record=record)
+                return
             per_key = record.result.value
             for (i, key64, _ce), (stat, val) in zip(batch, per_key):
                 if stat == OK:
@@ -335,7 +363,10 @@ class SimBackend:
         """One round-robin pass over every client with pending work."""
         cids = self.sched.eligible_cids()
         if not cids:
-            raise RuntimeError("scheduler has no work but ops are unresolved")
+            raise SchedulerStalled(
+                f"client {self.cid}: scheduler has no runnable work but "
+                f"{self.sched.inflight(self.cid)} op(s) are unresolved — "
+                "a future detached from its record (wiring bug)")
         for c in cids:
             self.sched.step(c)
 
@@ -357,8 +388,12 @@ class SimBackend:
         return {
             "backend": "sim",
             "cid": self.cid,
+            "crashed": self.client.crashed,
+            "epoch": self.client.epoch,
+            "mns_alive": sum(m.alive for m in self.sched.pool.mns),
             "inflight": self.sched.inflight(self.cid),
             "completed_ops": len(recs),
+            "crashed_ops": sum(r.result.status == CRASHED for r in recs),
             "avg_rtts_by_kind": {k: float(np.mean(v)) for k, v in rtts.items()},
             "cache_entries": len(self.client.cache),
             **self.counters,

@@ -56,6 +56,8 @@ OK = "OK"
 NOT_FOUND = "NOT_FOUND"
 EXISTS = "EXISTS"
 FULL = "FULL"
+CRASHED = "CRASHED"        # op's client crashed mid-flight (crash-stop §5.1);
+                           # retriable on any live client after recovery
 
 
 @dataclass
@@ -66,3 +68,10 @@ class OpResult:
     bg_rtts: int = 0           # background round trips
     rule: Optional[str] = None # winning SNAPSHOT rule, for Fig-9/RTT accounting
     page: Optional[int] = None # device-backend page id backing this key
+
+    @property
+    def retriable(self) -> bool:
+        """True when the op did not report an outcome and may be resubmitted
+        on a live client (CRASHED: any partial effect is repaired or redone
+        by §5.3 client recovery before it becomes observable)."""
+        return self.status == CRASHED

@@ -1,0 +1,214 @@
+"""The first-class failure surface of the FUSEE cluster (§5, Alg. 3-4).
+
+FUSEE's distinguishing claim is that *clients* handle metadata corruption
+and membership changes under failures; this module makes that machinery a
+public API instead of a test backdoor:
+
+* typed errors — ``ClientCrashed`` (submits on a crashed/removed client)
+  and ``SchedulerStalled`` (the backend has unresolved ops but the
+  scheduler has no runnable work), replacing bare asserts/RuntimeErrors;
+* ``CRASHED`` op outcome — in-flight futures of a crashed client resolve
+  to a typed *retriable* ``OpResult`` instead of hanging (events.py);
+* ``FaultPlan`` / ``FaultInjector`` — declarative fault schedules
+  (crash_client / crash_mn / recover_client at tick- or completed-op-count
+  boundaries) that drive the scheduler via its tick hooks, replacing the
+  ad-hoc crash calls previously scattered across tests and benchmarks;
+* ``ClusterHealth`` — the observability snapshot behind
+  ``FuseeCluster.health()``: per-MN liveness, lease epoch, per-client
+  pipeline depth / cache state, and cumulative ``RecoveryStats``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Iterator, List, Optional, Tuple
+
+from .master import RecoveryStats
+
+if TYPE_CHECKING:                      # pragma: no cover - typing only
+    from .sim import Scheduler
+    from .store import FuseeCluster
+
+
+# ------------------------------------------------------------- typed errors
+class ClusterError(RuntimeError):
+    """Base of every typed failure raised by the cluster surface."""
+
+
+class ClientCrashed(ClusterError):
+    """Submit (or store binding) rejected: the client is crashed, removed,
+    or unknown.  Retriable on any live client — the op never entered the
+    pipeline."""
+
+    def __init__(self, cid: int, reason: str = "crashed"):
+        self.cid = cid
+        self.reason = reason
+        super().__init__(
+            f"client {cid} is {reason}; the op was not submitted "
+            f"(resubmit on a live client or add_client() a replacement)")
+
+
+class SchedulerStalled(ClusterError):
+    """The backend holds unresolved ops but the scheduler has no runnable
+    work — a wiring bug (e.g. a future detached from its record), never a
+    legal protocol state."""
+
+
+# ------------------------------------------------------------- fault plans
+_ACTIONS = ("crash_client", "crash_mn", "recover_client")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: ``action`` on ``target`` when the trigger
+    boundary passes.  Exactly one of ``at_tick`` (scheduler tick) or
+    ``after_ops`` (cluster-wide completed-op count) must be set."""
+    action: str
+    target: int
+    at_tick: Optional[int] = None
+    after_ops: Optional[int] = None
+    reassign_to: Optional[int] = None   # recover_client only
+
+    def __post_init__(self):
+        if self.action not in _ACTIONS:
+            raise ValueError(f"unknown fault action {self.action!r}; "
+                             f"expected one of {_ACTIONS}")
+        if (self.at_tick is None) == (self.after_ops is None):
+            raise ValueError("exactly one of at_tick / after_ops required")
+
+    def due(self, sched: "Scheduler") -> bool:
+        if self.at_tick is not None:
+            return sched.tick >= self.at_tick
+        return sched.completed_ops >= self.after_ops
+
+
+class FaultPlan:
+    """Declarative fault schedule; build with the chainable helpers:
+
+        plan = (FaultPlan()
+                .crash_mn(2, after_ops=48)
+                .crash_client(0, after_ops=56)
+                .recover_client(0, reassign_to=1, after_ops=60))
+        injector = cluster.inject(plan)
+
+    Events with the same trigger fire in plan order."""
+
+    def __init__(self, events: Optional[List[FaultEvent]] = None):
+        self.events: List[FaultEvent] = list(events or [])
+
+    def _add(self, ev: FaultEvent) -> "FaultPlan":
+        self.events.append(ev)
+        return self
+
+    def crash_client(self, cid: int, *, at_tick: Optional[int] = None,
+                     after_ops: Optional[int] = None) -> "FaultPlan":
+        return self._add(FaultEvent("crash_client", cid, at_tick=at_tick,
+                                    after_ops=after_ops))
+
+    def crash_mn(self, mid: int, *, at_tick: Optional[int] = None,
+                 after_ops: Optional[int] = None) -> "FaultPlan":
+        return self._add(FaultEvent("crash_mn", mid, at_tick=at_tick,
+                                    after_ops=after_ops))
+
+    def recover_client(self, cid: int, *, reassign_to: Optional[int] = None,
+                       at_tick: Optional[int] = None,
+                       after_ops: Optional[int] = None) -> "FaultPlan":
+        return self._add(FaultEvent("recover_client", cid, at_tick=at_tick,
+                                    after_ops=after_ops,
+                                    reassign_to=reassign_to))
+
+    def __iter__(self) -> Iterator[FaultEvent]:
+        return iter(self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+class FaultInjector:
+    """Binds a ``FaultPlan`` to a cluster: installed as a scheduler tick
+    hook, it fires each event (through the public cluster surface, so
+    recovery stats accumulate) the first time its boundary passes."""
+
+    def __init__(self, cluster: "FuseeCluster", plan: FaultPlan):
+        self.cluster = cluster
+        self.pending: List[FaultEvent] = list(plan)
+        self.fired: List[Tuple[int, FaultEvent]] = []
+
+    @property
+    def done(self) -> bool:
+        return not self.pending
+
+    def poll(self, sched: "Scheduler"):
+        while True:
+            due = next((e for e in self.pending if e.due(sched)), None)
+            if due is None:
+                if not self.pending:   # plan exhausted: stop polling forever
+                    sched.remove_tick_hook(self.poll)
+                return
+            self.pending.remove(due)
+            self._fire(due, sched)
+
+    def _fire(self, ev: FaultEvent, sched: "Scheduler"):
+        if ev.action == "crash_client":
+            self.cluster.crash_client(ev.target)
+        elif ev.action == "crash_mn":
+            self.cluster.crash_mn(ev.target)
+        else:
+            self.cluster.recover_client(ev.target,
+                                        reassign_to_cid=ev.reassign_to)
+        self.fired.append((sched.tick, ev))
+
+
+# ------------------------------------------------------------ health views
+@dataclass
+class MNHealth:
+    mid: int
+    alive: bool
+    primary_regions: int
+    hosted_regions: int
+    bytes_served: int
+
+
+@dataclass
+class ClientHealth:
+    cid: int
+    status: str                 # 'live' | 'crashed' | 'removed'
+    epoch: int
+    inflight: int               # current pipeline depth
+    cache_entries: int
+    completed_ops: int
+    crashed_ops: int            # ops of this client resolved CRASHED
+
+
+@dataclass
+class ClusterHealth:
+    """Snapshot returned by ``FuseeCluster.health()``."""
+    epoch: int
+    tick: int
+    mns: List[MNHealth] = field(default_factory=list)
+    clients: List[ClientHealth] = field(default_factory=list)
+    recovery: RecoveryStats = field(default_factory=RecoveryStats)
+    client_recoveries: int = 0
+    mn_recoveries: int = 0
+    crashed_ops: int = 0
+
+    @property
+    def alive_mns(self) -> int:
+        return sum(m.alive for m in self.mns)
+
+    @property
+    def live_clients(self) -> int:
+        return sum(c.status == "live" for c in self.clients)
+
+    def summary(self) -> str:
+        return (f"epoch={self.epoch} tick={self.tick} "
+                f"mns={self.alive_mns}/{len(self.mns)} alive "
+                f"clients={self.live_clients}/{len(self.clients)} live "
+                f"recoveries={self.client_recoveries}+{self.mn_recoveries}mn "
+                f"crashed_ops={self.crashed_ops}")
+
+
+def accumulate_recovery(total: RecoveryStats, st: RecoveryStats):
+    """Fold one recovery's stats into a cumulative total (health view)."""
+    for f in dataclasses.fields(RecoveryStats):
+        setattr(total, f.name, getattr(total, f.name) + getattr(st, f.name))

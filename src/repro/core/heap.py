@@ -69,6 +69,12 @@ FIRST_DATA_REGION = 2
 
 META_WORDS_PER_CLIENT = 64  # sc list heads + scratch
 
+# BAT owner tag for blocks surrendered by a gracefully-removed client:
+# nonzero (never re-allocated by the MN) and above any cid+1, so a later
+# holder of a reused cid never inherits them; their live objects stay
+# readable through the index.
+BAT_ORPHAN = 1 << 32
+
 
 class MemoryNode:
     """A passive memory node.  Owns replica copies of regions."""

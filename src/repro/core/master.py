@@ -22,7 +22,7 @@ from . import layout as L
 from . import race
 from .client import MASTER_COMMIT_MARK, FuseeClient
 from .events import OK, OpResult
-from .heap import (FIRST_DATA_REGION, INDEX_REGION, META_REGION,
+from .heap import (BAT_ORPHAN, FIRST_DATA_REGION, INDEX_REGION, META_REGION,
                    META_WORDS_PER_CLIENT, DMPool)
 
 
@@ -48,6 +48,31 @@ class Master:
 
     def register(self, client: FuseeClient):
         self.clients[client.cid] = client
+
+    def deregister(self, cid: int):
+        """Drop a removed client from membership (lease surrendered); it no
+        longer receives prepare/commit notifications on recovery epochs."""
+        self.clients.pop(cid, None)
+
+    def release_client(self, cid: int):
+        """Graceful leave (§5.2 membership change): scrub the client's meta
+        words and re-tag its BAT entries as master-managed orphans, so a
+        later holder of a reused cid inherits neither stale size-class list
+        heads nor the leaver's blocks (whose live objects remain reachable
+        through the index)."""
+        pool = self.pool
+        base = cid * META_WORDS_PER_CLIENT
+        for i in range(len(pool.placement[META_REGION])):
+            pool.write(META_REGION, i, base, [0] * META_WORDS_PER_CLIENT)
+        for g in range(FIRST_DATA_REGION, pool.num_regions):
+            for rep_mid in pool.placement[g]:
+                mn = pool.mns[rep_mid]
+                if not mn.alive or g not in mn.regions:
+                    continue
+                bat = mn.regions[g]
+                for b in range(pool.cfg.blocks_per_region):
+                    if int(bat[b]) == cid + 1:
+                        bat[b] = np.uint64(BAT_ORPHAN)
 
     # ------------------------------------------------------------------ MN
     def detect_dead_mns(self) -> List[int]:

@@ -15,8 +15,14 @@ MNs but never reorder on one (client, MN) pair.
 
 Crash injection: ``crash_client`` freezes a client at an arbitrary verb
 boundary (partially executed phase = partially written doorbell batch,
-for *every* op in its pipeline); ``crash_mn`` makes every verb touching
-that MN return FAIL (crash-stop §5.1).
+for *every* op in its pipeline); its in-flight ops resolve to the typed
+retriable ``CRASHED`` outcome (their ``on_done`` hooks fire, so API-level
+futures never leak), and further submits raise ``faults.ClientCrashed``.
+``crash_mn`` makes every verb touching that MN return FAIL (crash-stop
+§5.1); the scheduler detects the dead MN itself ``mn_detect_delay`` ticks
+later and runs the master's Alg-3 recovery — no manual
+``master.maybe_recover_mns()`` calls.  Tick hooks (``add_tick_hook``)
+let a ``faults.FaultInjector`` drive declarative fault schedules.
 
 The scheduler also keeps the raw *history* (invocation/response ticks per op)
 consumed by the linearizability checker in tests, and the RTT / byte traffic
@@ -32,7 +38,8 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from .client import FuseeClient
-from .events import MasterCall, OpResult, Phase, Verb
+from .events import CRASHED, MasterCall, OpResult, Phase, Verb
+from .faults import ClientCrashed
 from .heap import DMPool
 from .master import Master
 
@@ -81,7 +88,8 @@ class _ClientPipe:
 
 
 class Scheduler:
-    def __init__(self, pool: DMPool, master: Master, *, seed: int = 0):
+    def __init__(self, pool: DMPool, master: Master, *, seed: int = 0,
+                 mn_detect_delay: int = 0, auto_mn_recovery: bool = True):
         self.pool = pool
         self.master = master
         self.rng = np.random.default_rng(seed)
@@ -90,12 +98,48 @@ class Scheduler:
         self.history: List[OpRecord] = []
         self._op_counter = itertools.count()
         self.clients: Dict[int, FuseeClient] = {}
+        self.removed: set = set()                    # cids removed gracefully
+        self.completed_ops = 0                       # ops that responded OK-ish
+        self.crashed_ops = 0                         # ops resolved CRASHED
+        self.mn_recoveries = 0
+        # automatic MN failure detection: crash_mn() arms a deadline; the
+        # master's Alg-3 recovery runs inside step() once it passes.
+        self.auto_mn_recovery = auto_mn_recovery
+        self.mn_detect_delay = mn_detect_delay
+        self._mn_detect_at: Optional[int] = None
+        self._tick_hooks: List[Callable[["Scheduler"], None]] = []
 
     # ------------------------------------------------------------- spawning
     def add_client(self, client: FuseeClient):
         self.clients[client.cid] = client
+        self.removed.discard(client.cid)
         self.pipes.setdefault(client.cid, _ClientPipe())
         self.master.register(client)
+
+    def remove_client(self, cid: int):
+        """Deregister a drained client.  The cluster surface drains first;
+        at this level a non-empty pipeline is a caller bug."""
+        if cid not in self.clients:
+            raise ClientCrashed(cid, "removed" if cid in self.removed
+                                else "unknown")
+        pipe = self.pipes.get(cid)
+        if pipe is not None and pipe.runs:
+            raise ClientCrashed(cid, f"busy ({len(pipe.runs)} ops in flight; "
+                                     "drain before remove)")
+        self.clients.pop(cid)
+        self.pipes.pop(cid, None)
+        self.removed.add(cid)
+        self.master.deregister(cid)
+
+    def add_tick_hook(self, hook: Callable[["Scheduler"], None]):
+        """Invoke ``hook(self)`` at every tick (FaultInjector.poll etc.)."""
+        self._tick_hooks.append(hook)
+
+    def remove_tick_hook(self, hook: Callable[["Scheduler"], None]):
+        try:
+            self._tick_hooks.remove(hook)
+        except ValueError:
+            pass
 
     def next_op_id(self) -> int:
         return next(self._op_counter)
@@ -105,9 +149,16 @@ class Scheduler:
         """Enqueue one op on client ``cid``'s pipeline.  Any number of ops
         may be in flight per client; per-(client, MN) verb order is FIFO
         across all of them.  ``gen`` overrides the client op generator
-        (used by the batch API for multi-key fused ops)."""
-        client = self.clients[cid]
-        assert not client.crashed
+        (used by the batch API for multi-key fused ops).
+
+        Raises the typed ``ClientCrashed`` on a crashed, removed, or
+        unknown ``cid`` — the op never enters the pipeline."""
+        client = self.clients.get(cid)
+        if client is None:
+            raise ClientCrashed(cid, "removed" if cid in self.removed
+                                else "unknown")
+        if client.crashed:
+            raise ClientCrashed(cid)
         if gen is None:
             gen = {
                 "search": lambda: client.op_search(key),
@@ -136,6 +187,7 @@ class Scheduler:
                 run.record.result = res
                 run.record.resp_tick = self.tick
                 run.done = True
+                self.completed_ops += 1
                 pipe.runs.pop(run.record.op_id, None)
                 if run.record.on_done is not None:
                     cb, run.record.on_done = run.record.on_done, None
@@ -184,6 +236,13 @@ class Scheduler:
         Returns False if the client has nothing to do.
         """
         self.tick += 1
+        if self._tick_hooks:
+            for hook in tuple(self._tick_hooks):  # hooks may self-remove
+                hook(self)
+        if self._mn_detect_at is not None and self.tick >= self._mn_detect_at:
+            self._mn_detect_at = None
+            if self.master.maybe_recover_mns():
+                self.mn_recoveries += 1
         pipe = self.pipes.get(cid)
         if pipe is None:
             return False
@@ -238,12 +297,43 @@ class Scheduler:
     def crash_client(self, cid: int):
         """Crash-stop at the current verb boundary: every in-flight doorbell
         batch of the client's pipeline stays partially executed (exactly the
-        paper's failure model)."""
+        paper's failure model).  Each in-flight op resolves to the typed
+        retriable ``CRASHED`` outcome — its ``on_done`` hook fires so the
+        API layer can settle futures (including fused-batch expansion)
+        instead of leaking them."""
+        client = self.clients.get(cid)
+        if client is None:
+            raise ClientCrashed(cid, "removed" if cid in self.removed
+                                else "unknown")
+        pipe = self.pipes.get(cid)
+        client.crashed = True
+        if pipe is None:
+            return
+        runs = list(pipe.runs.values())
         self.pipes[cid] = _ClientPipe()
-        self.clients[cid].crashed = True
+        for run in runs:
+            rec = run.record
+            rec.result = OpResult(CRASHED, rtts=rec.rtts,
+                                  bg_rtts=rec.bg_rtts)
+            rec.resp_tick = self.tick
+            run.done = True
+            self.crashed_ops += 1
+            if rec.on_done is not None:
+                cb, rec.on_done = rec.on_done, None
+                cb(rec)
 
     def crash_mn(self, mid: int):
+        """Crash-stop an MN.  Detection + Alg-3 recovery run automatically
+        inside the scheduler loop ``mn_detect_delay`` ticks later (the
+        lease window); clients that touch the dead MN before then see FAIL
+        verbs and take the Alg-4 degraded path."""
         self.pool.crash_mn(mid)
+        if self.auto_mn_recovery:
+            deadline = self.tick + self.mn_detect_delay
+            if self._mn_detect_at is None:
+                self._mn_detect_at = deadline
+            else:
+                self._mn_detect_at = min(self._mn_detect_at, deadline)
 
     # ------------------------------------------------------------- driving
     def run_round_robin(self, max_ticks: int = 1_000_000):

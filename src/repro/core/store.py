@@ -1,17 +1,40 @@
-"""Cluster bootstrap for the FUSEE store.
+"""Cluster surface for the FUSEE store: membership, faults, health.
 
-``FuseeCluster`` wires up the pool + master + N clients.  ``cluster.store(cid)``
-returns the public pipelined ``KVStore`` (core/api.py) bound to one client —
-the ergonomic entry point for examples, benchmarks, and non-concurrency
-tests.  Concurrency/crash tests drive ``sim.Scheduler`` directly.
+``FuseeCluster`` wires up the pool + master + scheduler and owns the
+cluster lifecycle as a first-class API (the failure counterpart of the
+PR-1 ``KVStore`` data-path redesign):
+
+* ``cluster.store(cid)`` — the public pipelined ``KVStore`` (core/api.py)
+  bound to one client;
+* **dynamic membership** — ``add_client()`` / ``remove_client()`` at
+  runtime, with lease-epoch propagation (the membership commit of §5.2)
+  so every live client observes the new epoch; removed cids surrender
+  their meta words and blocks to the master and are reused by later joins;
+* **declarative faults** — ``inject(FaultPlan)`` installs a
+  ``FaultInjector`` on the scheduler: crash_client / crash_mn /
+  recover_client fire at tick- or completed-op boundaries while the
+  workload runs.  In-flight futures of a crashed client resolve to the
+  typed retriable ``CRASHED`` outcome; MN crashes are detected and
+  repaired (Alg. 3) inside the scheduler loop;
+* **observability** — ``health()`` returns a ``ClusterHealth`` snapshot:
+  per-MN liveness, lease epoch, per-client pipeline depth and cache
+  state, and cumulative ``RecoveryStats`` across every recovery the
+  cluster performed.
+
+Concurrency/crash tests that need verb-level schedules still drive
+``sim.Scheduler`` directly.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, Optional
 
 from .api import KVStore, SimBackend
 from .client import FuseeClient
-from .heap import DMConfig, DMPool
+from .events import CRASHED
+from .faults import (ClientCrashed, ClientHealth, ClusterHealth, FaultInjector,
+                     FaultPlan, MNHealth, RecoveryStats, SchedulerStalled,
+                     accumulate_recovery)
+from .heap import META_WORDS_PER_CLIENT, DMConfig, DMPool
 from .master import Master
 from .sim import Scheduler
 
@@ -20,31 +43,173 @@ class FuseeCluster:
     def __init__(self, cfg: Optional[DMConfig] = None, *, num_clients: int = 4,
                  seed: int = 0, enable_cache: bool = True,
                  cache_threshold: float = 0.5,
-                 replication_mode: str = "snapshot"):
+                 replication_mode: str = "snapshot",
+                 mn_detect_delay: int = 0):
         self.cfg = cfg or DMConfig()
+        self.seed = seed
+        self._client_kw = dict(enable_cache=enable_cache,
+                               cache_threshold=cache_threshold,
+                               replication_mode=replication_mode)
         self.pool = DMPool(self.cfg, num_clients=num_clients, seed=seed)
         self.master = Master(self.pool)
-        self.clients: List[FuseeClient] = [
-            FuseeClient(cid, self.pool, enable_cache=enable_cache,
-                        cache_threshold=cache_threshold,
-                        replication_mode=replication_mode, seed=seed)
-            for cid in range(num_clients)
-        ]
-        self.scheduler = Scheduler(self.pool, self.master, seed=seed)
-        for c in self.clients:
-            self.scheduler.add_client(c)
+        self.scheduler = Scheduler(self.pool, self.master, seed=seed,
+                                   mn_detect_delay=mn_detect_delay)
+        self.clients: Dict[int, FuseeClient] = {}
+        self._next_cid = 0
+        self._free_cids: list = []          # cids of removed clients, reusable
+        self.recovery_totals = RecoveryStats()
+        self.client_recoveries = 0
+        for _ in range(num_clients):
+            self._spawn_client()
 
+    # --------------------------------------------------------------- stores
     def store(self, cid: int = 0, *, max_inflight: int = 16) -> KVStore:
         """The unified pipelined store API over client ``cid``."""
-        return KVStore(SimBackend(self.scheduler, self.clients[cid],
+        client = self.clients.get(cid)
+        if client is None:
+            raise ClientCrashed(cid, "removed" if cid in self.scheduler.removed
+                                else "unknown")
+        return KVStore(SimBackend(self.scheduler, client,
                                   max_inflight=max_inflight))
 
+    # ----------------------------------------------------------- membership
+    def _spawn_client(self, **overrides) -> int:
+        # reuse cids surrendered by remove_client (their meta words were
+        # scrubbed and their blocks disowned), so add/remove churn never
+        # exhausts the meta region
+        if self._free_cids:
+            cid = self._free_cids.pop(0)
+        else:
+            cid = self._next_cid
+            self._next_cid += 1
+        if (cid + 1) * META_WORDS_PER_CLIENT > self.cfg.region_words:
+            raise ValueError(
+                f"meta region full: cid {cid} needs "
+                f"{(cid + 1) * META_WORDS_PER_CLIENT} words, region has "
+                f"{self.cfg.region_words} (raise DMConfig.region_words)")
+        c = FuseeClient(cid, self.pool, seed=self.seed,
+                        **{**self._client_kw, **overrides})
+        self.clients[cid] = c
+        self.pool.num_clients = max(self.pool.num_clients, cid + 1)
+        self.scheduler.add_client(c)
+        return cid
+
+    def add_client(self, **overrides) -> int:
+        """Join a fresh client at runtime (elasticity, Fig. 21).  Bumps the
+        lease epoch and propagates it to every live client; the new cid is
+        returned — bind a store with ``cluster.store(cid)``.  Per-client
+        keyword overrides (``enable_cache`` etc.) default to the cluster's
+        construction settings."""
+        cid = self._spawn_client(**overrides)
+        self._bump_epoch()
+        return cid
+
+    def remove_client(self, cid: int, *, drain: bool = True):
+        """Leave gracefully: drain the client's in-flight pipeline, then
+        deregister it and bump the lease epoch.  Subsequent submits (or
+        ``store(cid)`` bindings) raise the typed ``ClientCrashed`` with
+        reason ``'removed'``."""
+        client = self.clients.get(cid)
+        if client is None:
+            raise ClientCrashed(cid, "removed" if cid in self.scheduler.removed
+                                else "unknown")
+        if drain and not client.crashed:
+            # round-robin the WHOLE cluster: an in-flight op of this client
+            # may legally wait on another client's progress (e.g. a SNAPSHOT
+            # loser polling for the winner's commit)
+            guard = 0
+            while self.scheduler.inflight(cid):
+                progressed = False
+                for ecid in self.scheduler.eligible_cids():
+                    progressed |= self.scheduler.step(ecid)
+                if not progressed or (guard := guard + 1) > 10**6:
+                    raise SchedulerStalled(
+                        f"client {cid}: could not drain before removal")
+        self.scheduler.remove_client(cid)
+        self.master.release_client(cid)
+        self.clients.pop(cid)
+        self._free_cids.append(cid)
+        self._bump_epoch()
+
+    def _bump_epoch(self):
+        """Commit a lease-epoch bump to every live client — the same
+        membership commit the master performs after MN recovery (§5.2)."""
+        self.pool.epoch += 1
+        for c in self.clients.values():
+            if not c.crashed:
+                c.epoch = self.pool.epoch
+
+    # --------------------------------------------------------------- faults
     def crash_mn(self, mid: int):
+        """Crash-stop an MN; the scheduler auto-detects and the master
+        re-homes its regions (Alg. 3) ``mn_detect_delay`` ticks later."""
         self.scheduler.crash_mn(mid)
 
     def crash_client(self, cid: int):
+        """Crash-stop a client; its in-flight futures resolve ``CRASHED``
+        (retriable) and later submits raise ``ClientCrashed``."""
         self.scheduler.crash_client(cid)
 
-    def recover_client(self, cid: int, reassign_to_cid: Optional[int] = None):
-        target = self.clients[reassign_to_cid] if reassign_to_cid is not None else None
-        return self.master.recover_client(cid, reassign_to=target)
+    def recover_client(self, cid: int, reassign_to_cid: Optional[int] = None
+                       ) -> RecoveryStats:
+        """§5.3 recovery of a crashed client from its embedded operation
+        logs; stats also accumulate into ``health().recovery``."""
+        target = (self.clients[reassign_to_cid]
+                  if reassign_to_cid is not None else None)
+        st = self.master.recover_client(cid, reassign_to=target)
+        accumulate_recovery(self.recovery_totals, st)
+        self.client_recoveries += 1
+        return st
+
+    def inject(self, plan: FaultPlan) -> FaultInjector:
+        """Install a declarative fault schedule on the scheduler loop."""
+        injector = FaultInjector(self, plan)
+        self.scheduler.add_tick_hook(injector.poll)
+        return injector
+
+    # -------------------------------------------------------------- driving
+    def drain(self):
+        """Drive every in-flight op of every live client to completion."""
+        self.scheduler.run_round_robin()
+
+    # ---------------------------------------------------------------- health
+    def health(self) -> ClusterHealth:
+        """Cluster observability snapshot: MN liveness, lease epoch,
+        per-client pipeline depth / cache stats, cumulative recovery."""
+        sched = self.scheduler
+        done_by_cid: Dict[int, int] = {}
+        crashed_by_cid: Dict[int, int] = {}
+        for r in sched.history:
+            if r.result is None:
+                continue
+            if r.result.status == CRASHED:
+                crashed_by_cid[r.cid] = crashed_by_cid.get(r.cid, 0) + 1
+            else:
+                done_by_cid[r.cid] = done_by_cid.get(r.cid, 0) + 1
+        clients = [
+            ClientHealth(cid=cid, status="crashed" if c.crashed else "live",
+                         epoch=c.epoch, inflight=sched.inflight(cid),
+                         cache_entries=len(c.cache),
+                         completed_ops=done_by_cid.get(cid, 0),
+                         crashed_ops=crashed_by_cid.get(cid, 0))
+            for cid, c in sorted(self.clients.items())
+        ] + [
+            ClientHealth(cid=cid, status="removed", epoch=-1, inflight=0,
+                         cache_entries=0,
+                         completed_ops=done_by_cid.get(cid, 0),
+                         crashed_ops=crashed_by_cid.get(cid, 0))
+            for cid in sorted(sched.removed)
+        ]
+        mns = [MNHealth(mid=m.mid, alive=m.alive,
+                        primary_regions=sum(
+                            reps[0] == m.mid
+                            for reps in self.pool.placement.values()),
+                        hosted_regions=len(m.regions),
+                        bytes_served=int(self.pool.mn_bytes[m.mid]))
+               for m in self.pool.mns]
+        return ClusterHealth(epoch=self.pool.epoch, tick=sched.tick,
+                             mns=mns, clients=clients,
+                             recovery=self.recovery_totals,
+                             client_recoveries=self.client_recoveries,
+                             mn_recoveries=sched.mn_recoveries,
+                             crashed_ops=sched.crashed_ops)

@@ -22,6 +22,7 @@ import numpy as np
 from repro.core import codec
 from repro.core.api import KVFuture, Op
 from repro.core.events import FULL, NOT_FOUND, OK, OpResult
+from repro.core.faults import ClientCrashed
 
 from .kvpool import KVPool, OP_INSERT, OP_UPDATE, PoolConfig
 
@@ -40,10 +41,15 @@ class DeviceBackend:
         self.pool = pool if pool is not None else KVPool(cfg or PoolConfig(),
                                                          seed=seed)
         self.cid = cid
+        self.crashed = False                 # set by ServeEngine.crash_worker
         self._values: Dict[int, Any] = {}    # page -> encoded value words
 
     # ------------------------------------------------------------- submit
     def submit_many(self, ops: Sequence[Op]) -> List[KVFuture]:
+        if self.crashed:
+            # same typed error as the event-level substrate: one failure
+            # surface across both backends
+            raise ClientCrashed(self.cid)
         futs = [KVFuture(self) for _ in ops]
         # execute maximal same-kind runs as one device batch, preserving
         # cross-kind program order
@@ -142,4 +148,5 @@ class DeviceBackend:
     # ---------------------------------------------------------------- stats
     def stats(self) -> Dict[str, Any]:
         return {"backend": "device", "cid": self.cid, "inflight": 0,
+                "crashed": self.crashed,
                 "pages_valued": len(self._values), **self.pool.stats}

@@ -93,6 +93,38 @@ class ServeEngine:
     def submit(self, req: Request):
         self.queue.append(req)
 
+    # -------------------------------------------------- worker recovery --
+    def crash_worker(self, cid: Optional[int] = None):
+        """Crash-stop an engine worker: its slab state is dropped and, if
+        it is THIS engine's worker, further store submits raise the typed
+        ``ClientCrashed`` — the serving twin of the event-level surface."""
+        cid = self.cid if cid is None else cid
+        self.pool.crash_client(cid)
+        if cid == self.cid:
+            self._backend.crashed = True
+
+    def recover_worker(self, cid: Optional[int] = None,
+                       reassign_to: Optional[int] = None) -> Dict[str, int]:
+        """§5.3 recovery from the embedded page log: re-own chunks, reclaim
+        unused pages, redo uncommitted winner index writes.  Recovering
+        this engine's own worker (or reassigning onto it) reopens its
+        store for submits."""
+        cid = self.cid if cid is None else cid
+        st = self.pool.recover_client(cid, reassign_to=reassign_to)
+        new_owner = reassign_to if reassign_to is not None else cid
+        if new_owner == self.cid:
+            self._backend.crashed = False
+        return st
+
+    def health(self) -> Dict:
+        """Engine observability: slot occupancy + pool/backend counters
+        (the serving counterpart of ``FuseeCluster.health()``)."""
+        return {
+            "active": len(self.active), "queued": len(self.queue),
+            "finished": len(self.finished), "slots_free": len(self.slots_free),
+            "steps": self.steps, **self._backend.stats(),
+        }
+
     # ------------------------------------------------------------- ticks --
     def _admit(self):
         admitted = False

@@ -1,0 +1,345 @@
+"""Tests for the first-class cluster failure surface (core/faults.py +
+core/store.py + the scheduler's failure semantics).
+
+Covers: typed ``ClientCrashed`` / ``SchedulerStalled`` errors, in-flight
+futures of a crashed client resolving to the retriable ``CRASHED``
+outcome (including the batched-SEARCH fast path and its per-key fallback
+resubmits), dynamic membership with lease-epoch propagation, declarative
+``FaultPlan`` injection at tick/op boundaries, automatic MN-crash
+detection inside the scheduler loop, and the ``health()`` snapshot."""
+import numpy as np
+import pytest
+
+from repro.core import (CRASHED, OK, ClientCrashed, DMConfig, FaultEvent,
+                        FaultPlan, FuseeCluster, KVFuture, Op,
+                        SchedulerStalled)
+
+
+def _cluster(**kw):
+    kw.setdefault("num_clients", 3)
+    return FuseeCluster(DMConfig(num_mns=4, replication=3), **kw)
+
+
+# ------------------------------------------------------- crashed futures ----
+def test_inflight_futures_resolve_crashed_retriable():
+    """The acceptance bar: in-flight futures of a crashed client resolve
+    with a typed retriable status instead of hanging or raising."""
+    cl = _cluster()
+    kv = cl.store(0)
+    futs = kv.submit_batch([Op.put(i, [i]) for i in range(6)])
+    assert cl.scheduler.inflight(0) > 0
+    cl.crash_client(0)
+    res = [f.result() for f in futs]           # must not raise
+    assert all(f.done() for f in futs)
+    assert {r.status for r in res} == {CRASHED}
+    assert all(r.retriable for r in res)
+    # the ops are retriable on a live client
+    kv1 = cl.store(1)
+    assert all(kv1.put(i, [i]).status == OK for i in range(6))
+
+
+def test_submit_on_crashed_client_raises_typed():
+    cl = _cluster()
+    kv = cl.store(0)
+    kv.put(1, [1])
+    cl.crash_client(0)
+    with pytest.raises(ClientCrashed) as ei:
+        kv.put(2, [2])
+    assert ei.value.cid == 0 and ei.value.reason == "crashed"
+    # the raw scheduler surface raises the same typed error (no bare assert)
+    with pytest.raises(ClientCrashed):
+        cl.scheduler.submit(0, "insert", 3, [3])
+    with pytest.raises(ClientCrashed):
+        cl.scheduler.submit(999, "insert", 3, [3])
+
+
+def test_crash_mid_batch_settles_remaining_futures():
+    """A client dying while a pipelined batch is still being submitted
+    (fault injection during the backpressure pump) settles every accepted
+    future as CRASHED instead of leaving futures dangling."""
+    cl = _cluster()
+    kv = cl.store(0, max_inflight=4)
+    cl.inject(FaultPlan().crash_client(0, after_ops=8))
+    futs = kv.submit_batch([Op.put(i, [i]) for i in range(32)])
+    assert len(futs) == 32
+    res = [f.result() for f in futs]
+    assert all(f.done() for f in futs)
+    n_ok = sum(r.status == OK for r in res)
+    assert n_ok >= 8 and sum(r.status == CRASHED for r in res) == 32 - n_ok
+
+
+# --------------------------------------- batched SEARCH fast path crash ----
+def test_batch_search_fused_crash_resolves_all_futures():
+    """Client crashes while a fused multi-key SEARCH is in flight: the
+    fused op's on_done expansion resolves every per-key future CRASHED —
+    nothing leaks, nothing raises."""
+    cl = _cluster()
+    kv = cl.store(0)
+    for i in range(8):
+        assert kv.put(i, [i * 3]).status == OK
+        kv.get(i)                               # warm the adaptive cache
+    futs = kv.submit_batch([Op.get(i) for i in range(8)])
+    fused = [r for r in cl.scheduler.history if r.kind == "search_batch"]
+    assert len(fused) == 1 and fused[0].result is None   # fused op in flight
+    cl.crash_client(0)
+    assert all(f.done() for f in futs)          # resolved by crash, no drive
+    res = [f.result() for f in futs]
+    assert {r.status for r in res} == {CRASHED}
+    assert all(r.retriable for r in res)
+    assert fused[0].result.status == CRASHED
+    assert fused[0].on_done is None             # expansion hook fired+cleared
+
+
+def test_batch_search_fallback_resubmits_crash_mid_flight():
+    """Crash lands AFTER the fused op expanded but while per-key fallback
+    resubmits (stale cache entries) are still in flight: fast-path hits
+    stay OK, fallbacks report CRASHED, no future is left unresolved."""
+    cl = _cluster()
+    kv0, kv1 = cl.store(0), cl.store(1)
+    for i in range(8):
+        assert kv0.put(i, [i]).status == OK
+        kv0.get(i)
+    for i in range(0, 8, 2):                    # stale half of client 0 cache
+        assert kv1.update(i, [100 + i]).status == OK
+    futs = kv0.submit_batch([Op.get(i) for i in range(8)])
+    sched = cl.scheduler
+    # drive client 0 until the fused parent responds (fallbacks resubmitted
+    # at that tick), then crash before the fallbacks can finish
+    fused = next(r for r in sched.history if r.kind == "search_batch")
+    guard = 0
+    while fused.result is None:
+        assert sched.step(0) and (guard := guard + 1) < 10**5
+    assert sched.inflight(0) > 0                # fallback searches in flight
+    cl.crash_client(0)
+    assert all(f.done() for f in futs)
+    res = [f.result() for f in futs]
+    statuses = {r.status for r in res}
+    assert statuses <= {OK, CRASHED} and CRASHED in statuses
+    assert [r.value for r in res if r.status == OK] == \
+        [[i] for i in range(1, 8, 2)]           # fast-path hits kept their value
+
+
+# ------------------------------------------------------------ typed stall ---
+def test_scheduler_stalled_is_typed():
+    cl = _cluster()
+    be = cl.store(0).backend
+    orphan = KVFuture(be)                       # future with no record
+    with pytest.raises(SchedulerStalled):
+        be.drive(orphan)
+
+
+# ------------------------------------------------------ dynamic membership --
+def test_add_client_at_runtime_propagates_epoch():
+    cl = _cluster(num_clients=2)
+    kv = cl.store(0)
+    for i in range(10):
+        kv.put(i, [i])
+    epoch0 = cl.pool.epoch
+    cid = cl.add_client()
+    assert cid == 2
+    assert cl.pool.epoch == epoch0 + 1
+    # every live client observed the new lease epoch (prepare committed)
+    assert all(c.epoch == cl.pool.epoch and not c.notified_prepare
+               for c in cl.clients.values())
+    # the joiner serves reads immediately
+    assert all(cl.store(cid).get(i) == [i] for i in range(10))
+    # and writes through the same pipelined surface
+    assert cl.store(cid).put(b"new", b"v").status == OK
+    assert kv.get(b"new") == b"v"
+
+
+def test_remove_client_drains_then_rejects():
+    cl = _cluster()
+    kv = cl.store(1)
+    futs = kv.submit_batch([Op.put(i, [i]) for i in range(12)])
+    epoch0 = cl.pool.epoch
+    cl.remove_client(1)                         # drains in-flight ops first
+    assert all(f.done() for f in futs)
+    assert all(f.result().status == OK for f in futs)
+    assert cl.pool.epoch == epoch0 + 1
+    with pytest.raises(ClientCrashed) as ei:
+        cl.store(1)
+    assert ei.value.reason == "removed"
+    with pytest.raises(ClientCrashed) as ei:
+        cl.scheduler.submit(1, "insert", 99, [1])
+    assert ei.value.reason == "removed"
+    # the data it wrote survives; health reports the removal
+    assert all(cl.store(0).get(i) == [i] for i in range(12))
+    h = cl.health()
+    assert [c.status for c in h.clients if c.cid == 1] == ["removed"]
+
+
+def test_stale_store_handle_after_removal_raises():
+    """A KVStore bound before remove_client must reject submits with the
+    typed error — never silently settle CRASHED or run on a reused cid."""
+    cl = _cluster()
+    kv = cl.store(1)
+    kv.put(5, [5])
+    cl.remove_client(1)
+    with pytest.raises(ClientCrashed) as ei:
+        kv.put(6, [6])
+    assert ei.value.reason == "removed"
+    with pytest.raises(ClientCrashed):
+        kv.get(5)
+    # the cid is reused by a later join; the stale handle still rejects
+    assert cl.add_client() == 1
+    with pytest.raises(ClientCrashed) as ei:
+        kv.put(7, [7])
+    assert ei.value.reason == "replaced"
+    assert cl.store(1).get(5) == [5]            # fresh binding works
+
+
+def test_removed_cid_reused_without_inheritance():
+    """add/remove churn reuses cids; the reused cid inherits neither the
+    leaver's meta list heads nor its blocks, and the leaver's data stays
+    reachable through the index."""
+    from repro.core.heap import FIRST_DATA_REGION
+    cl = _cluster(num_clients=2)
+    kv1 = cl.store(1)
+    for i in range(8):
+        assert kv1.put(i, [i]).status == OK
+    cl.remove_client(1)
+    # no BAT entry still names the departed client
+    for g in range(FIRST_DATA_REGION, cl.pool.num_regions):
+        bat = cl.pool.mns[cl.pool.primary_mn(g)].regions[g]
+        assert not any(int(bat[b]) == 2
+                       for b in range(cl.pool.cfg.blocks_per_region))
+    for _ in range(3):                          # churn: never exhausts cids
+        cid = cl.add_client()
+        assert cid == 1
+        kv = cl.store(cid)
+        assert all(kv.get(i) == [i] for i in range(8))   # data survived
+        assert kv.put(100, [100]).status == OK           # fresh allocations
+        cl.remove_client(cid)
+    assert cl._next_cid == 2                    # no meta-region creep
+
+
+def test_crash_unknown_or_removed_cid_typed():
+    cl = _cluster()
+    with pytest.raises(ClientCrashed) as ei:
+        cl.crash_client(99)
+    assert ei.value.reason == "unknown"
+    cl.remove_client(2)
+    with pytest.raises(ClientCrashed) as ei:
+        cl.crash_client(2)
+    assert ei.value.reason == "removed"
+
+
+def test_remove_client_drains_amid_other_clients_work():
+    cl = _cluster()
+    kv0, kv1 = cl.store(0), cl.store(1)
+    f0 = kv0.submit_batch([Op.put(i, [i]) for i in range(8)])
+    f1 = kv1.submit_batch([Op.put(10 + i, [i]) for i in range(8)])
+    cl.remove_client(0)          # drain round-robins the whole cluster
+    assert all(f.done() and f.result().status == OK for f in f0)
+    [f.result() for f in f1]     # the survivor's pipeline is unharmed
+    assert all(cl.store(1).get(i) == [i] for i in range(8))
+
+
+# --------------------------------------------------------- fault injection --
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultEvent("explode", 0, at_tick=1)
+    with pytest.raises(ValueError):
+        FaultEvent("crash_mn", 0)               # no trigger
+    with pytest.raises(ValueError):
+        FaultEvent("crash_mn", 0, at_tick=1, after_ops=1)
+    plan = FaultPlan().crash_mn(1, at_tick=5).crash_client(0, after_ops=3)
+    assert len(plan) == 2
+
+
+def test_injector_fires_at_boundaries_and_auto_recovers_mn():
+    """crash_mn fires mid-workload from the plan; the scheduler detects the
+    dead MN itself (no master.maybe_recover_mns() anywhere) and the
+    workload completes; crash_client fires later at an op boundary."""
+    cl = _cluster(num_clients=2)
+    kv = cl.store(0)
+    inj = cl.inject(FaultPlan()
+                    .crash_mn(2, after_ops=10)
+                    .crash_client(0, after_ops=20))
+    statuses = []
+    for i in range(40):
+        try:
+            statuses.append(kv.put(i, [i]).status)
+        except ClientCrashed:
+            statuses.append("REJECTED")
+    assert inj.done and len(inj.fired) == 2
+    assert inj.poll not in cl.scheduler._tick_hooks   # spent hook pruned
+    assert cl.scheduler.mn_recoveries == 1      # auto-detected, Alg-3 ran
+    assert not cl.pool.mns[2].alive
+    n_ok = statuses.count(OK)
+    assert n_ok >= 20                           # survived the MN crash
+    assert statuses.count("REJECTED") == 40 - n_ok - statuses.count(CRASHED)
+    # every OK'd key is readable on the surviving client despite both faults
+    kv1 = cl.store(1)
+    assert all(kv1.get(i) == [i]
+               for i, s in enumerate(statuses) if s == OK)
+
+
+def test_mn_detect_delay_defers_recovery():
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=3), num_clients=1,
+                      mn_detect_delay=10_000)
+    kv = cl.store(0)
+    for i in range(4):
+        kv.put(i, [i])
+    cl.crash_mn(1)
+    kv.get(0)                                   # ops run inside the window
+    assert cl.scheduler.mn_recoveries == 0      # lease not yet expired
+    assert cl.health().alive_mns == 3
+
+
+# ------------------------------------------------------------------ health --
+def test_health_snapshot_contents():
+    cl = _cluster()
+    kv = cl.store(0)
+    for i in range(6):
+        kv.put(i, [i])
+    futs = kv.submit_batch([Op.put(10 + i, [i]) for i in range(4)])
+    cl.crash_client(0)
+    [f.result() for f in futs]
+    cl.recover_client(0, reassign_to_cid=1)
+    cl.crash_mn(3)
+    cl.store(1).get(0)                          # a step -> MN auto-recovery
+    h = cl.health()
+    assert h.epoch == cl.pool.epoch and h.tick == cl.scheduler.tick
+    assert h.alive_mns == 3 and len(h.mns) == 4
+    assert not h.mns[3].alive
+    assert sum(m.primary_regions for m in h.mns if m.alive) == \
+        cl.pool.num_regions
+    by_cid = {c.cid: c for c in h.clients}
+    assert by_cid[0].status == "crashed" and by_cid[1].status == "live"
+    assert by_cid[0].completed_ops == 6 and by_cid[0].crashed_ops == 4
+    assert h.crashed_ops == 4
+    assert h.client_recoveries == 1 and h.mn_recoveries == 1
+    assert h.recovery.reconnect_ms > 0          # cumulative RecoveryStats
+    assert "epoch=" in h.summary()
+
+
+def test_scan_stats_reports_failure_state():
+    cl = _cluster()
+    kv = cl.store(0)
+    kv.put(1, [1])
+    cl.crash_mn(1)
+    kv.get(1)
+    st = kv.scan_stats()
+    assert st["mns_alive"] == 3 and st["crashed"] is False
+    assert st["epoch"] == cl.pool.epoch
+
+
+# ------------------------------------------------------------ device twin ---
+def test_device_backend_crashed_worker_raises_typed():
+    from repro.serving import DeviceBackend, PoolConfig
+    from repro.core.api import KVStore
+    be = DeviceBackend(PoolConfig(n_pages=64, n_buckets=32,
+                                  slots_per_bucket=4, replicas=2))
+    store = KVStore(be)
+    assert store.put(b"k", b"v").status == OK
+    be.pool.crash_client(be.cid)
+    be.crashed = True                           # ServeEngine.crash_worker path
+    with pytest.raises(ClientCrashed) as ei:
+        store.put(b"k2", b"v2")
+    assert ei.value.cid == be.cid
+    assert store.scan_stats()["crashed"] is True
+    be.pool.recover_client(be.cid)
+    be.crashed = False                          # ServeEngine.recover_worker path
+    assert store.put(b"k2", b"v2").status == OK
