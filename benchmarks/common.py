@@ -24,10 +24,12 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.fusee_paper import FuseePaperConfig
+from repro.core.api import Op
 from repro.core.heap import DMConfig, DMPool
 from repro.core.master import Master
 from repro.core.client import FuseeClient
 from repro.core.sim import Scheduler
+from repro.core.store import FuseeCluster
 
 PAPER = FuseePaperConfig()
 
@@ -156,3 +158,148 @@ YCSB = {
     "C": {"search": 1.0},
     "D": {"search": 0.95, "insert": 0.05},
 }
+
+
+# =========================================================== fleet workloads
+@dataclass
+class FleetStats(WorkloadStats):
+    """WorkloadStats + the fleet-mode extras: per-op latency percentiles
+    (from vectorized RTT accounting over the whole history) and the batched
+    tick / probe counters that certify one-array-call-per-tick execution."""
+    lat_p50_us: float = 0.0
+    lat_p99_us: float = 0.0
+    ticks: int = 0
+    verbs_per_tick: float = 0.0
+    array_calls_per_tick: float = 0.0
+    probe_invocations: int = 0
+    probe_hits: int = 0
+    n_clients: int = 0
+
+
+def fleet_dmconfig(n_clients: int, n_keys: int, *, n_mns: int = 4,
+                   replication: int = 2) -> DMConfig:
+    """Size a DMConfig for a fleet: index slots ≥ 4x keys, meta region
+    covering every client's 64 metadata words, and ≥ 4 blocks of slab
+    headroom per client."""
+    buckets = 256
+    while buckets * 7 < 4 * n_keys:
+        buckets *= 2
+    region_words = 1 << 14
+    while region_words < max(buckets * 7, n_clients * 64):
+        region_words <<= 1
+    block_words = 1 << 9
+    bpr = region_words // (block_words + 1)
+    regions_per_mn = max(8, -(-4 * n_clients // (bpr * n_mns)) + 1)
+    return DMConfig(num_mns=n_mns, replication=replication,
+                    region_words=region_words, block_words=block_words,
+                    regions_per_mn=regions_per_mn, index_buckets=buckets)
+
+
+def run_fleet_workload(*, n_clients: int, n_mns: int = 4,
+                       replication: int = 2, mix: Dict[str, float],
+                       ops_per_client: int = 8, n_keys: Optional[int] = None,
+                       theta: float = 0.99, value_words: int = 8,
+                       seed: int = 0, pipeline_depth: int = 4,
+                       batch_gets: bool = True, enable_cache: bool = True,
+                       use_kernel: bool = True) -> FleetStats:
+    """Run a mixed workload at fleet scale: every client keeps
+    ``pipeline_depth`` ops in flight, and every tick advances ALL clients'
+    op-phases as batched array operations (core/fleet.py) — one kernel /
+    array call per verb-kind per tick, not one per op.  Cache-resident
+    GETs of a wave are probed with ONE cluster-wide race_lookup
+    invocation and fused into 1-RTT multi-key SEARCHes.
+
+    Fully deterministic from ``(seed, config)``: workload generation draws
+    from the cluster's SimRng 'workload' stream, fleet ticks are
+    schedule-free."""
+    t0 = time.perf_counter()
+    n_keys = n_keys if n_keys is not None else max(256, 2 * n_clients)
+    cfg = fleet_dmconfig(n_clients, n_keys, n_mns=n_mns,
+                         replication=replication)
+    cluster = FuseeCluster(cfg, num_clients=n_clients, seed=seed,
+                           enable_cache=enable_cache)
+    fleet = cluster.fleet(use_kernel=use_kernel)
+    sched = cluster.scheduler
+    pool = cluster.pool
+    backends = [cluster.store(c, max_inflight=0).backend
+                for c in range(n_clients)]
+    wl = cluster.rng.stream("workload")
+
+    # preload the key space (distinct keys -> bounded contention), fleet-driven
+    for k in range(n_keys):
+        sched.submit(k % n_clients, "insert", k, [k] * value_words)
+    fleet.run()
+    pool.mn_bytes[:] = 0
+    base_cpu = sum(m.cpu_ops for m in pool.mns)
+    mark = len(sched.history)
+
+    # per-client op plans, drawn from the seeded workload stream
+    kinds = sorted(mix.keys())
+    probs = np.array([mix[k] for k in kinds], float)
+    probs /= probs.sum()
+    n_ops = ops_per_client * n_clients
+    kind_draw = [kinds[i] for i in wl.choice(len(kinds), size=n_ops, p=probs)]
+    zipf_draw = zipf_keys(n_keys, theta, n_ops, wl)
+    plans: List[List[Op]] = [[] for _ in range(n_clients)]
+    fresh = n_keys
+    for i in range(n_ops):
+        kind = kind_draw[i]
+        if kind == "insert":
+            key, fresh = fresh, fresh + 1
+        else:
+            key = int(zipf_draw[i])
+        val = [i] * value_words if kind in ("insert", "update") else None
+        plans[i % n_clients].append(Op(kind, key, val))
+
+    # closed loop: refill every client to pipeline_depth, tick the fleet
+    cursor = [0] * n_clients
+    while True:
+        wave = []
+        for c in range(n_clients):
+            room = pipeline_depth - sched.inflight(c)
+            if room > 0 and cursor[c] < len(plans[c]):
+                ops = plans[c][cursor[c]:cursor[c] + room]
+                cursor[c] += len(ops)
+                wave.append((backends[c], ops))
+        if wave:
+            if batch_gets:
+                fleet.submit_wave(wave)
+            else:
+                for be, ops in wave:
+                    be.submit_many(ops)
+        if not sched.has_work():
+            break
+        fleet.tick()
+
+    # ---- vectorized RTT accounting over the history tail ------------------
+    recs = [r for r in sched.history[mark:] if r.result is not None]
+    kind_a = np.array([r.kind for r in recs])
+    rtts_a = np.array([r.rtts for r in recs], np.int64)
+    res_rtts = np.array([r.result.rtts for r in recs], np.int64)
+    bg_a = np.array([r.bg_rtts for r in recs], np.int64)
+    # per-op critical-path latency: executed phases; a key served by a fused
+    # multi-key SEARCH observed the batch's single RTT (recorded on its
+    # result), the parent search_batch record is bookkeeping, not a user op
+    user = kind_a != "search_batch"
+    lat = np.where(rtts_a > 0, rtts_a, res_rtts)[user]
+    ks = kind_a[user]
+    rtts_by_kind = {k: float(lat[ks == k].mean()) for k in np.unique(ks)}
+    bg_by_kind = {k: float(bg_a[user][ks == k].mean()) for k in np.unique(ks)}
+    n = max(int(user.sum()), 1)
+    fst = fleet.stats()
+    return FleetStats(
+        n_ops=int(user.sum()),
+        rtts_by_kind=rtts_by_kind,
+        bg_rtts_by_kind=bg_by_kind,
+        mix={k: float((ks == k).sum()) / n for k in np.unique(ks)},
+        mn_bytes_per_op=pool.mn_bytes / n,
+        alloc_rpcs_per_op=(sum(m.cpu_ops for m in pool.mns) - base_cpu) / n,
+        wall_s=time.perf_counter() - t0,
+        lat_p50_us=float(np.percentile(lat, 50)) * PAPER.rtt_us,
+        lat_p99_us=float(np.percentile(lat, 99)) * PAPER.rtt_us,
+        ticks=fst["ticks"], verbs_per_tick=fst["verbs_per_tick"],
+        array_calls_per_tick=fst["array_calls_per_tick"],
+        probe_invocations=fst["probe_invocations"],
+        probe_hits=fst["probe_hits"],
+        n_clients=n_clients,
+    )

@@ -19,7 +19,8 @@ from repro.core.heap import DMConfig
 from repro.core.store import FuseeCluster
 
 from .baselines import clover_tput, pdpm_tput
-from .common import PAPER, YCSB, run_workload, throughput_mops
+from .common import (PAPER, YCSB, run_fleet_workload, run_workload,
+                     throughput_mops)
 
 MIX_MICRO = {"insert": 0.25, "update": 0.25, "search": 0.25, "delete": 0.25}
 
@@ -111,15 +112,34 @@ def fig12_kv_sizes() -> List[Dict]:
 
 
 # -------------------------------------------------------------- figure 13 --
+FIG13_CLIENTS = (16, 32, 64, 128, 256, 512, 1024)
+
+
 def fig13_ycsb_scale() -> List[Dict]:
+    """Throughput + per-op latency vs client count, 16 -> 1024 clients.
+
+    Every point is a *real* fleet simulation at that client count
+    (core/fleet.py: batched per-tick execution, one cluster-wide
+    race_lookup probe per tick) — not an analytic rescale of a small run.
+    Rows carry the measured p50/p99 per-op latency histogram and the
+    batched-execution counters alongside the composed Mops."""
     rows = []
     for wl in ("A", "B", "C", "D"):
-        st = run_workload(n_clients=16, n_mns=2, mix=YCSB[wl], n_ops=1500,
-                          seed=13)
-        for n_clients in (8, 16, 32, 64, 128):
+        for n_clients in FIG13_CLIENTS:
+            st = run_fleet_workload(
+                n_clients=n_clients, mix=YCSB[wl], seed=13,
+                ops_per_client=max(4, 2048 // n_clients))
             r = throughput_mops(st, n_clients=n_clients)
             rows.append({"bench": "fig13", "ycsb": wl, "clients": n_clients,
-                         "system": "fusee", "mops": r["mops"]})
+                         "system": "fusee", "mops": r["mops"],
+                         "avg_rtts": r["avg_rtts"],
+                         "lat_p50_us": st.lat_p50_us,
+                         "lat_p99_us": st.lat_p99_us,
+                         "sim_ops": st.n_ops, "sim_ticks": st.ticks,
+                         "verbs_per_tick": st.verbs_per_tick,
+                         "array_calls_per_tick": st.array_calls_per_tick,
+                         "probe_invocations": st.probe_invocations,
+                         "wall_s": st.wall_s})
             rows.append({"bench": "fig13", "ycsb": wl, "clients": n_clients,
                          "system": "clover",
                          "mops": clover_tput(n_clients=n_clients,

@@ -26,11 +26,18 @@ def main(argv=None):
         from . import serving_bench
         benches.append(("serving", serving_bench.run))
 
+    if args.only:
+        selected = [(n, f) for n, f in benches if args.only in n]
+        if not selected:
+            # exit non-zero with the menu instead of silently running
+            # nothing and writing an empty results file
+            ap.error(f"--only {args.only!r} matches no benchmark; "
+                     f"available: {', '.join(n for n, _ in benches)}")
+        benches = selected
+
     all_rows = []
     print("name,us_per_call,derived")
     for name, fn in benches:
-        if args.only and args.only not in name:
-            continue
         t0 = time.perf_counter()
         try:
             rows = fn()

@@ -8,7 +8,10 @@ from .master import Master, RecoveryStats  # noqa: F401
 from .faults import (ClientCrashed, ClientHealth, ClusterError,  # noqa: F401
                      ClusterHealth, FaultEvent, FaultInjector, FaultPlan,
                      MNHealth, SchedulerStalled)
-from .sim import Scheduler, run_ops_concurrently  # noqa: F401
+from .rng import SimRng  # noqa: F401
+from .sim import Scheduler, SimTrace, run_ops_concurrently  # noqa: F401
 from .api import KVFuture, KVStore, Op, SimBackend  # noqa: F401
+from .fleet import FleetEngine  # noqa: F401
 from .store import FuseeCluster  # noqa: F401
 from . import codec  # noqa: F401
+from .codec import CodecError  # noqa: F401

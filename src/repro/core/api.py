@@ -127,14 +127,10 @@ class KVFuture:
 
 
 # -------------------------------------------------------------- sim backend
-def _hash32_np(x: np.ndarray, seed: int) -> np.ndarray:
-    """NumPy mirror of kernels/race_lookup/ref.py::hash32 (uint32 lanes)."""
-    with np.errstate(over="ignore"):
-        x = x.astype(np.uint32) + np.uint32((0x9E3779B9 * (seed + 1))
-                                            & 0xFFFFFFFF)
-        x = (x ^ (x >> np.uint32(16))) * np.uint32(0x85EBCA6B)
-        x = (x ^ (x >> np.uint32(13))) * np.uint32(0xC2B2AE35)
-        return (x ^ (x >> np.uint32(16))).astype(np.uint32)
+# one shared hash/probe implementation with the kernel stack (core/shadow.py;
+# bit-exactness pinned by tests/test_api.py::test_shadow_hash_matches_kernel_ref)
+from .shadow import build_shadow, race_lookup_np  # noqa: E402
+from .shadow import hash32_np as _hash32_np  # noqa: E402
 
 
 def _fold32(key64: int) -> int:
@@ -166,7 +162,13 @@ class SimBackend:
         self._shadow = (None, None, None)
 
     # ------------------------------------------------------------- submit
-    def submit_many(self, ops: Sequence[Op]) -> List[KVFuture]:
+    def submit_many(self, ops: Sequence[Op], *,
+                    probed: Optional[list] = None) -> List[KVFuture]:
+        """Submit a batch.  ``probed`` optionally carries precomputed cache
+        probe results for the batch's GET keys (CacheEntry-or-None aligned
+        with the GETs, in op order) — the fleet engine passes these so ONE
+        cluster-wide ``race_lookup`` invocation serves every client's batch
+        in a tick instead of one probe per client."""
         if self.client.crashed:
             raise ClientCrashed(self.cid)
         if self.sched.clients.get(self.cid) is not self.client:
@@ -181,7 +183,7 @@ class SimBackend:
         gets = [i for i, op in enumerate(ops) if op.kind == "search"]
         if (len(gets) >= self.batch_search_min and self.client.enable_cache
                 and not self.client.crashed):
-            batched = self._try_batch_search(ops, gets, futs)
+            batched = self._try_batch_search(ops, gets, futs, probed=probed)
         for i, op in enumerate(ops):
             if i in batched:
                 continue
@@ -208,13 +210,15 @@ class SimBackend:
         fut.record = self.sched.submit(self.cid, op.kind, key, value)
 
     # --------------------------------------------- batched SEARCH fast path
-    def _try_batch_search(self, ops, gets, futs) -> Dict[int, Any]:
+    def _try_batch_search(self, ops, gets, futs, *,
+                          probed: Optional[list] = None) -> Dict[int, Any]:
         """Probe the batch's GET keys against a shadow of the client's index
         cache via the race_lookup kernel; fuse all confirmed-resident keys
         into one 1-RTT multi-key SEARCH.  Returns {op_index: key64} for the
         ops consumed by the fused path."""
         keys64 = [codec.encode_key(ops[i].key) for i in gets]
-        hit_entries = self._kernel_probe(keys64)
+        hit_entries = probed if probed is not None \
+            else self._kernel_probe(keys64)
         batch = [(i, k, ce) for i, k, ce in
                  zip(gets, keys64, hit_entries) if ce is not None]
         if len(batch) < self.batch_search_min:
@@ -277,31 +281,11 @@ class SimBackend:
         return (len(cache), acc, inv)
 
     def _shadow_index(self, entries):
-        """Build (or reuse) the 32-bit shadow RACE index over the cache."""
-        spb = self.SHADOW_SPB
-        nb = 16
-        while nb * spb < 4 * len(entries):
-            nb *= 2
-        tbl = np.array([_fold32(k) for k, _ in entries], np.uint32)
-        fp = (_hash32_np(tbl, 7) >> np.uint32(24)).astype(np.uint32)
-        fp = np.where(fp == 0, np.uint32(1), fp)
-        b1 = _hash32_np(tbl, 1) % nb
-        b2 = _hash32_np(tbl, 2) % nb
-        b2 = np.where(b2 == b1, (b1 + 1) % nb, b2)
-        shadow = np.zeros((nb, spb), np.uint32)
-        for idx in range(len(entries)):
-            placed = False
-            for b in (int(b1[idx]), int(b2[idx])):
-                for s in range(spb):
-                    if shadow[b, s] == 0:
-                        shadow[b, s] = (fp[idx] << np.uint32(24)) \
-                            | np.uint32(idx + 1)
-                        placed = True
-                        break
-                if placed:
-                    break
-            # overflow: entry simply not reachable via the fast path
-        return shadow
+        """Build the 32-bit shadow RACE index over the cache (vectorized;
+        core/shadow.py).  Overflow entries are unreachable via the fast
+        path — a miss, never a wrong hit."""
+        keys32 = np.array([_fold32(k) for k, _ in entries], np.uint32)
+        return build_shadow(keys32, spb=self.SHADOW_SPB)
 
     def _kernel_probe(self, keys64):
         """Match ``keys64`` against the client's index cache with one
@@ -334,29 +318,13 @@ class SimBackend:
     def _race_lookup(self, q: np.ndarray, shadow: np.ndarray):
         if self.use_kernel:
             try:
-                import jax.numpy as jnp
-                from repro.kernels import race_lookup
-                n = len(q)
-                pad = -(-n // 256) * 256 - n
-                qp = jnp.asarray(np.concatenate(
-                    [q, np.zeros(pad, np.uint32)]).view(np.int32))
-                ptr, found = race_lookup(qp, jnp.asarray(shadow.view(np.int32)))
-                return np.asarray(ptr[:n]), np.asarray(found[:n])
+                # batched kernel entry point: Pallas on TPU, the bit-exact
+                # numpy mirror elsewhere (kernels/race_lookup/ops.py)
+                from repro.kernels import race_lookup_batch
+                return race_lookup_batch(q, shadow)
             except Exception:       # pragma: no cover - jax-less fallback
                 pass
-        # numpy fallback mirroring race_lookup_ref
-        fpq = (_hash32_np(q, 7) >> np.uint32(24)).astype(np.uint32)
-        fpq = np.where(fpq == 0, np.uint32(1), fpq)
-        nb = shadow.shape[0]
-        b1 = _hash32_np(q, 1) % nb
-        b2 = _hash32_np(q, 2) % nb
-        b2 = np.where(b2 == b1, (b1 + 1) % nb, b2)
-        rows = np.concatenate([shadow[b1], shadow[b2]], axis=1)
-        match = (rows >> np.uint32(24)) == fpq[:, None]
-        any_m = match.any(axis=1)
-        first = match.argmax(axis=1)
-        picked = np.take_along_axis(rows, first[:, None], axis=1)[:, 0]
-        return np.where(any_m, picked & np.uint32((1 << 24) - 1), 0), any_m
+        return race_lookup_np(q, shadow)
 
     # -------------------------------------------------------------- driving
     def _pump(self):

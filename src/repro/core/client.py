@@ -36,6 +36,19 @@ MASTER_COMMIT_MARK = 1
 R1, R2, R3 = "Rule1", "Rule2", "Rule3"
 LOSE, FINISH, FAILV = "LOSE", "FINISH", "FAIL"
 
+# Bounded-retry cap for index races (stale candidates, lost empty-slot CAS
+# rounds).  Exists only to turn a livelock into a typed FULL; it must
+# comfortably exceed the worst per-bucket concurrency — a 1024-client fleet
+# tick can legally pile a whole bucket's load onto one empty slot at once.
+MAX_OP_RETRIES = 64
+
+# A SNAPSHOT loser polls the primary waiting for the winner's commit (Alg 1
+# lines 17-22).  If the winner crashed mid-commit the slot never moves, so
+# after this many polls the loser escalates to the master's fail_query
+# (Alg 4 / §A.4.3), which arbitrates the stalled round.  Generous enough
+# that a merely slow-scheduled winner almost always commits first.
+MAX_LOSE_POLLS = 48
+
 
 def evaluate_rules_pure(v_list: List[Optional[int]], v_new: int):
     """Pure part of Alg. 2 (no Rule-3 primary check).  ``None`` = FAIL.
@@ -131,6 +144,10 @@ class FuseeClient:
 
     def _ensure_free(self, sc: int):
         """Keep >=2 free objects so the pre-positioned next_ptr always exists."""
+        if self.cfg.block_payload_words // L.size_class_words(sc) == 0:
+            # the object class exceeds a block's payload: no grant can ever
+            # yield an object — typed FULL, and no block is leaked trying
+            return FULL
         st = self._sc_state(sc)
         attempts = 0
         while len(st.free) < 2:
@@ -288,10 +305,14 @@ class FuseeClient:
             return OK, FINISH, None
 
         # LOSE: poll the primary until the winner commits (Alg 1, lines 17-22)
+        polls = 0
         while True:
-            if self.notified_prepare:
+            if self.notified_prepare or polls >= MAX_LOSE_POLLS:
+                # membership change, or the winner is taking suspiciously
+                # long (crashed mid-commit?): escalate to the master
                 return (yield from self._fail_path(slot_off, v_old, v_new,
                                                    obj_ptr, obj_sc, prev_ptr))
+            polls += 1
             chk = yield Phase([self._slot_verb_read_primary(slot_off)],
                               label="lose_poll")
             if chk[0] is None:
@@ -420,7 +441,14 @@ class FuseeClient:
             obj = L.parse_object(list(raw))
             if obj["key"] == key and obj["used"] and not obj["invalid"] and obj["crc_ok"]:
                 return off_v[0], off_v[1], obj, False
-            stale = True  # fp matched but object did not verify cleanly
+            if obj["key"] != key and obj["used"] and obj["crc_ok"]:
+                # a *different* key's live object behind a matching 8-bit
+                # fingerprint: a permanent collision, not staleness —
+                # retrying the index read would spin forever (at fleet key
+                # counts fp collisions are routine, and treating them as
+                # stale starves the op into a spurious FULL)
+                continue
+            stale = True  # mid-write / freed / invalidated: re-read helps
         return None, None, None, stale
 
     # ------------------------------------------------------------- SEARCH
@@ -585,7 +613,7 @@ class FuseeClient:
                     target, v_old = slot_off2, slot_val2
                 elif stale:
                     retries += 1
-                    if retries > 16:
+                    if retries > MAX_OP_RETRIES:
                         return OpResult(FULL)
                     continue
             if target is None:
@@ -601,11 +629,23 @@ class FuseeClient:
                 target, v_old, v_new, ptr, sc, prev_ptr)
             if status == "RETRY":
                 retries += 1
-                if retries > 16:
+                if retries > MAX_OP_RETRIES:
                     return OpResult(FULL)
                 continue
             if status != OK:
                 return OpResult(status, rule=rule)
+            if v_old == 0 and rule in (LOSE, FINISH, "MASTER_LOSE"):
+                # Lost an *empty-slot* race: the winner may have inserted a
+                # DIFFERENT key there, so returning OK would acknowledge a
+                # write that is nowhere in the index.  Retry from the top
+                # (RACE insert retry): the index re-read either finds our
+                # key (a same-key racer won -> upsert that slot) or a fresh
+                # empty slot; the object words are rewritten first, since
+                # the loser path reset our used bit.
+                retries += 1
+                if retries > MAX_OP_RETRIES:
+                    return OpResult(FULL)
+                continue
             bg = []
             if rule in (R1, R2, R3, "MASTER_WIN", "CR") and v_old != 0:
                 bg += self._free_obj_verbs(v_old)          # free overwritten obj
@@ -673,7 +713,7 @@ class FuseeClient:
                     if stale:
                         retries += 1
                         use_cache = False
-                        if retries > 16:
+                        if retries > MAX_OP_RETRIES:
                             return OpResult(FULL)
                         continue
                     yield Phase(self._reset_used_verbs(ptr, sc, prev_ptr),
@@ -685,7 +725,7 @@ class FuseeClient:
             if status == "RETRY":
                 retries += 1
                 use_cache = False
-                if retries > 16:
+                if retries > MAX_OP_RETRIES:
                     return OpResult(FULL)
                 continue
             if status != OK:
@@ -721,7 +761,7 @@ class FuseeClient:
             if obj2 is None:
                 if stale:
                     retries += 1
-                    if retries > 16:
+                    if retries > MAX_OP_RETRIES:
                         return OpResult(FULL)
                     continue
                 yield Phase(self._reset_used_verbs(ptr, sc, prev_ptr),
@@ -731,7 +771,7 @@ class FuseeClient:
                 slot_off2, slot_val2, 0, ptr, sc, prev_ptr)
             if status == "RETRY":
                 retries += 1
-                if retries > 16:
+                if retries > MAX_OP_RETRIES:
                     return OpResult(FULL)
                 continue
             if status != OK:

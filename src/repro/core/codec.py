@@ -36,6 +36,13 @@ _TAG_SHIFT = 48
 _LEN_MASK = (1 << 40) - 1     # byte length field (plenty for slab objects)
 
 
+class CodecError(TypeError, ValueError):
+    """Typed error for anything the codec boundary rejects: non-key types,
+    ambiguous raw word lists that masquerade as tagged byte payloads, and
+    (in strict decode) malformed tags.  Subclasses both TypeError and
+    ValueError so legacy ``except`` clauses keep working."""
+
+
 def encode_key(key: Key) -> int:
     """Map a user key to the 64-bit protocol key space."""
     if isinstance(key, int):
@@ -43,7 +50,7 @@ def encode_key(key: Key) -> int:
     if isinstance(key, str):
         key = key.encode("utf-8")
     if not isinstance(key, (bytes, bytearray)):
-        raise TypeError(f"key must be bytes/str/int, got {type(key)!r}")
+        raise CodecError(f"key must be bytes/str/int, got {type(key)!r}")
     # SplitMix64 absorption over 8-byte chunks; avalanche via layout.hash64.
     h = 0x9E3779B97F4A7C15 ^ (len(key) << 1)
     for i in range(0, len(key), 8):
@@ -68,7 +75,7 @@ def encode_value(value: Optional[Value]) -> List[int]:
     # raw word list (legacy / protocol-level callers)
     words = [int(v) & _MASK64 for v in value]
     if _looks_tagged(words):
-        raise ValueError(
+        raise CodecError(
             "raw word list is ambiguous: word 0 carries the byte-payload "
             "tag and a consistent length; pass the payload as bytes instead")
     return words
@@ -89,12 +96,26 @@ def _looks_tagged(words: List[int]) -> bool:
     return True
 
 
-def decode_value(words) -> Optional[Value]:
-    """Inverse of ``encode_value``; untagged word lists return unchanged."""
+def decode_value(words, *, strict: bool = False) -> Optional[Value]:
+    """Inverse of ``encode_value``; untagged word lists return unchanged.
+
+    ``strict=True`` turns a *malformed* tag — the header word carries the
+    byte-payload magic but the length field disagrees with the word count,
+    or padding bytes beyond the stated length are nonzero — into a typed
+    ``CodecError`` instead of the lenient raw-word-list fallback.  Use it
+    wherever the words are known to come from ``encode_value`` (store
+    round trips), keep the default for legacy protocol-word callers."""
     if words is None:
         return None
     words = [int(w) for w in words]
     if not _looks_tagged(words):
+        if (strict and words
+                and (words[0] >> _TAG_SHIFT) & 0xFFFF == VALUE_TAG):
+            raise CodecError(
+                f"malformed value tag: header declares a "
+                f"{words[0] & _LEN_MASK}-byte payload but "
+                f"{len(words) - 1} data word(s) follow (or padding beyond "
+                f"the stated length is nonzero)")
         return words
     nbytes = words[0] & _LEN_MASK
     raw = b"".join(int(w).to_bytes(8, "little") for w in words[1:])

@@ -26,6 +26,16 @@ class Verb:
     new: int = 0
     delta: int = 0
     mn: int = -1              # alloc/free RPC target
+    # Lease epoch at issue time (stamped by the scheduler when the phase's
+    # doorbell batch is posted).  A verb whose epoch is stale by execution
+    # time FAILs instead of silently resolving its replica index against
+    # the *new* placement — the §5.2 membership-change model: re-homing a
+    # region invalidates outstanding MRs, so in-flight verbs bounce and
+    # the client retries against the committed new epoch.  Without this, a
+    # write issued as "replica 1" before an MN crash can land on whatever
+    # node becomes replica 1 afterwards, and an acknowledged KV object can
+    # be missing from the post-recovery primary.
+    epoch: int = -1
 
     def target_mn(self, pool) -> int:
         if self.kind in ("alloc", "free"):

@@ -117,6 +117,48 @@ class FaultPlan:
                                     after_ops=after_ops,
                                     reassign_to=reassign_to))
 
+    @staticmethod
+    def storm(rng, *, clients, mns: int, replication: int = 2,
+              n_client_crashes: int = 2, n_mn_crashes: int = 1,
+              first_op: int = 8, spacing: int = 10,
+              recover_delay: int = 8) -> "FaultPlan":
+        """A randomized fault storm, fully determined by ``rng`` (pass a
+        ``SimRng`` substream — ``cluster.rng.stream('faults')`` — so the
+        storm replays bit-identically from the run seed).
+
+        Crashes ``n_client_crashes`` distinct clients at spaced
+        completed-op boundaries, each recovered ``recover_delay`` ops
+        later with its log reassigned to a never-crashed survivor; crashes
+        up to ``n_mn_crashes`` MNs, capped at ``mns - replication`` so no
+        region ever loses all its replicas.  Safety of the caps — not the
+        timing — is what makes "no acknowledged write is lost" a fair
+        invariant to assert after the storm."""
+        clients = list(clients)
+        n_cc = min(n_client_crashes, max(len(clients) - 1, 0))
+        victims = [clients[int(i)] for i in
+                   rng.choice(len(clients), size=n_cc, replace=False)]
+        survivors = [c for c in clients if c not in victims]
+        n_mc = max(0, min(n_mn_crashes, mns - replication))
+        mn_victims = [int(m) for m in
+                      rng.choice(mns, size=n_mc, replace=False)]
+        timeline: List[Tuple[str, int]] = \
+            [("client", c) for c in victims] + [("mn", m) for m in mn_victims]
+        order = rng.permutation(len(timeline))
+        plan = FaultPlan()
+        t = first_op
+        for i in order:
+            kind, target = timeline[int(i)]
+            if kind == "client":
+                heir = survivors[int(rng.integers(len(survivors)))] \
+                    if survivors else None
+                plan.crash_client(target, after_ops=t)
+                plan.recover_client(target, reassign_to=heir,
+                                    after_ops=t + recover_delay)
+            else:
+                plan.crash_mn(target, after_ops=t)
+            t += spacing
+        return plan
+
     def __iter__(self) -> Iterator[FaultEvent]:
         return iter(self.events)
 

@@ -1,0 +1,285 @@
+"""Fleet mode: vectorized thousand-client ticks for the FUSEE simulator.
+
+The step scheduler (sim.py) executes **one verb per tick** — perfect for
+schedule-exploring correctness tests, hopeless for the paper's headline
+claim that client-centric metadata management *scales with the number of
+clients* (Fig. 13 tops out at 4.5x over Clover at 128 clients, and the
+ROADMAP north star wants orders of magnitude more).  ``FleetEngine``
+reworks the hot path: one tick advances **every** client's in-flight
+op-phases at once,
+
+* popping the head verb of every ``(client, MN)`` QP lane (the RDMA
+  queue-pair FIFO — verbs of one lane never reorder, verbs of different
+  lanes are concurrent, exactly the §4.5 used-bit ordering argument);
+* executing the tick's verbs as *batched array operations* grouped by
+  verb kind — one gather/scatter/CAS sweep per (region, replica[, len])
+  group on the pool (heap.DMPool.read_batch & co.) instead of one Python
+  pool call per verb;
+* serving **every client's cache-resident GET probe with one batched
+  ``race_lookup`` invocation** (``probe_wave``): all clients' keys are
+  salted per-cid, folded into one shared shadow index, and probed in a
+  single kernel call (Pallas on TPU, its bit-exact numpy mirror
+  elsewhere) — one invocation per tick, not one per client.
+
+Determinism: a fleet tick makes no random choices — gathering walks
+clients and lanes in sorted order, batched verbs serialize same-word
+conflicts in that same order — so a fleet run is bit-identically
+replayable from ``(seed, config)`` alone (the seed feeds workload
+generation and fault plans through core/rng.SimRng; the engine itself is
+schedule-free).  ``sim.Scheduler.trace()`` therefore records nothing for
+fleet ticks; it captures only step-mode decisions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import codec
+from .api import KVFuture, Op, SimBackend, _fold32
+from .faults import SchedulerStalled
+from .heap import INDEX_REGION
+from .shadow import build_shadow, hash32_np, race_lookup_np
+from .sim import Scheduler
+
+__all__ = ["FleetEngine"]
+
+_VERB_ORDER = ("read", "write", "cas", "faa", "alloc", "free")
+
+
+def _cid_salt(cid: int) -> int:
+    """Per-client 32-bit salt so one shared shadow index can hold every
+    client's (private) cache entries without cross-client key collisions
+    becoming hits: probe keys are ``fold32(key) ^ salt(cid)``; a residual
+    fp/fold collision is rejected by the exact (cid, key) guard."""
+    return int(hash32_np(np.array([cid], np.uint32), 5)[0])
+
+
+class FleetEngine:
+    """Batched tick driver over a ``sim.Scheduler``.  See module docstring.
+
+    One engine per scheduler; mixing ``tick()`` with per-verb ``step()``
+    driving is legal (both are valid schedules of the same machine) —
+    benchmarks use pure fleet ticks, correctness tests mix freely.
+    """
+
+    def __init__(self, scheduler: Scheduler, *, use_kernel: bool = True):
+        self.sched = scheduler
+        self.use_kernel = use_kernel
+        self.counters: Dict[str, int] = {
+            "ticks": 0, "verbs": 0, "array_calls": 0, "master_calls": 0,
+            "index_probe_verbs": 0, "probe_invocations": 0, "probe_keys": 0,
+            "probe_hits": 0, "shadow_rebuilds": 0, "max_lanes": 0,
+        }
+        # memoized combined shadow: (per-backend fingerprints, entries, table)
+        self._probe_memo = (None, None, None)
+
+    # ------------------------------------------------------------- ticking
+    def tick(self) -> int:
+        """One fleet tick: scheduler tick preamble (fault hooks, MN-failure
+        detection), then the head verb of EVERY (client, MN) lane plus one
+        queued master call per client, executed as batched array ops.
+        Returns the number of verbs + master calls executed."""
+        sched = self.sched
+        sched.begin_tick()
+        by_kind: Dict[str, List[Tuple[int, Any, int, Any]]] = {}
+        master_runs: List[Tuple[int, Any]] = []
+        lanes = 0
+        for cid in sorted(sched.pipes):
+            pipe = sched.pipes[cid]
+            if pipe.master_q:
+                master_runs.append((cid, pipe.master_q.popleft()))
+            for mn in sorted(pipe.qp):
+                q = pipe.qp[mn]
+                run, idx, verb = q.popleft()
+                if not q:
+                    del pipe.qp[mn]
+                by_kind.setdefault(verb.kind, []).append((cid, run, idx, verb))
+                lanes += 1
+        executed = lanes + len(master_runs)
+        self.counters["ticks"] += 1
+        self.counters["verbs"] += lanes
+        self.counters["master_calls"] += len(master_runs)
+        self.counters["max_lanes"] = max(self.counters["max_lanes"], lanes)
+
+        finished: List[Tuple[int, Any]] = []
+        epoch = sched.pool.epoch
+        for kind in _VERB_ORDER:
+            items = by_kind.get(kind)
+            if not items:
+                continue
+            # stale-epoch verbs FAIL without touching the pool (§5.2 —
+            # mirrors sim._exec_verb's guard)
+            live = [it for it in items
+                    if not (0 <= it[3].epoch != epoch)]
+            res_by_id = {id(it): r
+                         for it, r in zip(live, self._exec_kind(kind, live))} \
+                if live else {}
+            for it in items:
+                cid, run, idx, _verb = it
+                run.results[idx] = res_by_id.get(id(it))
+                run.pending -= 1
+                if run.pending == 0:
+                    finished.append((cid, run))
+        # resume generators only after every verb of the tick executed, in
+        # deterministic (gather) order: master answers first (step() gives
+        # master_q priority), then completed phases
+        for cid, run in master_runs:
+            call, run.master_call = run.master_call, None
+            sched._advance(cid, run, sched._master_dispatch(call))
+        for cid, run in finished:
+            sched._advance(cid, run, run.results)
+        return executed
+
+    def _exec_kind(self, kind: str, items) -> list:
+        pool = self.sched.pool
+        verbs = [v for (_c, _r, _i, v) in items]
+        if kind == "read":
+            self.counters["array_calls"] += 1
+            self.counters["index_probe_verbs"] += sum(
+                v.region == INDEX_REGION for v in verbs)
+            return pool.read_batch([v.region for v in verbs],
+                                   [v.replica for v in verbs],
+                                   [v.off for v in verbs],
+                                   [v.n for v in verbs])
+        if kind == "write":
+            self.counters["array_calls"] += 1
+            oks = pool.write_batch([v.region for v in verbs],
+                                   [v.replica for v in verbs],
+                                   [v.off for v in verbs],
+                                   [v.words for v in verbs])
+            return [True if ok else None for ok in oks]
+        if kind == "cas":
+            self.counters["array_calls"] += 1
+            return pool.cas_batch([v.region for v in verbs],
+                                  [v.replica for v in verbs],
+                                  [v.off for v in verbs],
+                                  [v.exp for v in verbs],
+                                  [v.new for v in verbs])
+        if kind == "faa":
+            self.counters["array_calls"] += 1
+            return pool.faa_batch([v.region for v in verbs],
+                                  [v.replica for v in verbs],
+                                  [v.off for v in verbs],
+                                  [v.delta for v in verbs])
+        if kind == "alloc":
+            return [pool.alloc_block(v.mn, cid)
+                    for (cid, _r, _i, v) in items]
+        if kind == "free":
+            return [pool.free_block(v.mn, v.region, v.off) for v in verbs]
+        raise ValueError(kind)
+
+    # ------------------------------------------------------------- driving
+    def run(self, max_ticks: int = 1_000_000) -> int:
+        """Drive every in-flight op of every client to completion with
+        batched ticks; returns ticks spent."""
+        sched = self.sched
+        ticks = 0
+        while sched.has_work():
+            if ticks >= max_ticks or self.tick() == 0:
+                raise SchedulerStalled(
+                    f"fleet run did not converge after {ticks} ticks "
+                    f"(possible livelock)")
+            ticks += 1
+        return ticks
+
+    # ------------------------------------- cluster-wide batched GET probe
+    def probe_wave(self, wants: Sequence[Tuple[SimBackend, Sequence[int]]]
+                   ) -> List[list]:
+        """ONE batched ``race_lookup`` invocation across every client
+        probing the index this tick.
+
+        ``wants`` is ``[(backend, [key64, ...]), ...]``.  Every backend's
+        eligible cache entries are folded (salted per cid) into one shared
+        shadow index; all keys are probed in a single kernel call.
+        Returns, per backend, a CacheEntry-or-None list aligned with its
+        keys — exactly what ``SimBackend.submit_many(probed=...)`` takes.
+        """
+        # (re)build the combined shadow only when some probing client's
+        # cache moved since the last wave (same dirty signal as the
+        # per-backend memo in SimBackend._kernel_probe)
+        fprint = tuple(sorted((be.cid, be._cache_fingerprint())
+                              for be, _k in wants))
+        if self._probe_memo[0] == fprint:
+            _, entries_all, shadow = self._probe_memo
+        else:
+            entries_all = []                   # (cid, key64, entry)
+            keys32: List[int] = []
+            cap = (1 << 24) - 2                # shadow ptr field is 24 bits
+            for be, _keys in wants:
+                salt = _cid_salt(be.cid)
+                for k, ce in be._cache_entries():
+                    if len(entries_all) >= cap:
+                        break
+                    entries_all.append((be.cid, k, ce))
+                    keys32.append(_fold32(k) ^ salt)
+            shadow = build_shadow(np.array(keys32, np.uint32))
+            self._probe_memo = (fprint, entries_all, shadow)
+            self.counters["shadow_rebuilds"] += 1
+        q: List[int] = []
+        spans: List[Tuple[int, int]] = []
+        for be, keys64 in wants:
+            salt = _cid_salt(be.cid)
+            spans.append((len(q), len(keys64)))
+            q.extend(_fold32(k) ^ salt for k in keys64)
+        self.counters["probe_invocations"] += 1
+        self.counters["probe_keys"] += len(q)
+        if not entries_all or not q:
+            return [[None] * n for (_s, n) in spans]
+        ptr, found = self._race_lookup(np.array(q, np.uint32), shadow)
+        out: List[list] = []
+        for (be, keys64), (start, n) in zip(wants, spans):
+            hits = []
+            for j, key64 in enumerate(keys64):
+                ce = None
+                p = int(ptr[start + j])
+                if found[start + j] and p > 0:
+                    ecid, ekey, entry = entries_all[p - 1]
+                    # exact guard: the shadow hit must be THIS client's key
+                    if ecid == be.cid and ekey == key64:
+                        ce = entry
+                hits.append(ce)
+                if ce is not None:
+                    self.counters["probe_hits"] += 1
+            out.append(hits)
+        return out
+
+    def _race_lookup(self, q: np.ndarray, shadow: np.ndarray):
+        if self.use_kernel:
+            try:
+                from repro.kernels import race_lookup_batch
+                return race_lookup_batch(q, shadow)
+            except Exception:       # pragma: no cover - jax-less fallback
+                pass
+        return race_lookup_np(q, shadow)
+
+    def submit_wave(self, wave: Sequence[Tuple[SimBackend, Sequence[Op]]]
+                    ) -> List[List[KVFuture]]:
+        """Submit one op batch per backend with all cache-resident GET
+        probes served by a single cluster-wide kernel invocation (instead
+        of one probe per client, which is what per-backend
+        ``submit_batch`` would do).  Backends should be constructed with
+        ``max_inflight=0`` (unlimited) — fleet mode paces admission by
+        waves, not by per-client backpressure pumps."""
+        wants = []
+        rows = []                      # per wave row: index into wants or -1
+        for be, ops in wave:
+            keys64 = [codec.encode_key(op.key) for op in ops
+                      if op.kind == "search"]
+            if (len(keys64) >= be.batch_search_min and be.client.enable_cache
+                    and not be.client.crashed):
+                rows.append(len(wants))
+                wants.append((be, keys64))
+            else:
+                rows.append(-1)
+        probes = self.probe_wave(wants) if wants else []
+        return [be.submit_many(list(ops),
+                               probed=probes[row] if row >= 0 else None)
+                for (be, ops), row in zip(wave, rows)]
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> Dict[str, Any]:
+        c = dict(self.counters)
+        c["verbs_per_tick"] = c["verbs"] / max(c["ticks"], 1)
+        c["array_calls_per_tick"] = c["array_calls"] / max(c["ticks"], 1)
+        return c

@@ -183,6 +183,137 @@ class DMPool:
         self.mn_bytes[self.placement[region][replica]] += 2 * L.WORD
         return np.uint64(old)
 
+    # ---------------- batched verbs (fleet mode) ---------------------------
+    # One scheduler tick in fleet mode (core/fleet.py) executes the head verb
+    # of EVERY (client, MN) queue pair at once.  These entry points serve a
+    # whole tick's verbs of one kind with a handful of numpy array calls —
+    # one gather/scatter per (region, replica[, length]) group — instead of
+    # one Python-level pool call per verb.  Semantics per element are
+    # identical to read/write/cas/faa above (including the None-on-dead-MN
+    # crash-stop behavior and byte accounting).
+
+    def read_batch(self, regions, replicas, offs, ns) -> list:
+        """Vectorized READ.  Returns a list aligned with the inputs: a copy
+        of the words per verb, or None where the target replica is dead."""
+        regions = np.asarray(regions, np.int64)
+        replicas = np.asarray(replicas, np.int64)
+        offs = np.asarray(offs, np.int64)
+        ns = np.asarray(ns, np.int64)
+        out: list = [None] * len(regions)
+        group = (regions << 36) | (replicas << 32) | ns
+        for g in np.unique(group):
+            sel = np.nonzero(group == g)[0]
+            region, replica = int(regions[sel[0]]), int(replicas[sel[0]])
+            n = int(ns[sel[0]])
+            mem = self._mem(region, replica)
+            if mem is None or n <= 0:
+                continue                     # FAIL -> stays None
+            rows = mem[offs[sel][:, None] + np.arange(n)]
+            self.mn_bytes[self.placement[region][replica]] += \
+                n * len(sel) * L.WORD
+            for k, i in enumerate(sel):
+                out[int(i)] = rows[k]
+        return out
+
+    def write_batch(self, regions, replicas, offs, words_list) -> list:
+        """Vectorized WRITE of per-verb word lists.  Overlapping writes
+        within one batch land in a fixed deterministic order — groups in
+        sorted (region, replica, length) order, input order within a group
+        — which is a legal serialization of same-tick concurrent writes
+        (they are unordered RDMA-wise), and replayable because it depends
+        only on the batch contents."""
+        regions = np.asarray(regions, np.int64)
+        replicas = np.asarray(replicas, np.int64)
+        offs = np.asarray(offs, np.int64)
+        ns = np.array([len(w) for w in words_list], np.int64)
+        out = [False] * len(regions)
+        group = (regions << 36) | (replicas << 32) | ns
+        for g in np.unique(group):
+            sel = np.nonzero(group == g)[0]
+            region, replica = int(regions[sel[0]]), int(replicas[sel[0]])
+            n = int(ns[sel[0]])
+            mem = self._mem(region, replica)
+            if mem is None:
+                continue
+            if n:
+                vals = np.array(
+                    [[int(x) & 0xFFFF_FFFF_FFFF_FFFF for x in words_list[i]]
+                     for i in sel], np.uint64)
+                mem[offs[sel][:, None] + np.arange(n)] = vals
+            self.mn_bytes[self.placement[region][replica]] += \
+                n * len(sel) * L.WORD
+            for i in sel:
+                out[int(i)] = True
+        return out
+
+    def cas_batch(self, regions, replicas, offs, exps, news) -> list:
+        """Vectorized CAS; returns old values (RDMA semantics) or None.
+        Verbs targeting the *same word* are serialized in input order (the
+        second CAS observes the first's outcome), exactly like sequential
+        ``cas`` calls."""
+        regions = np.asarray(regions, np.int64)
+        replicas = np.asarray(replicas, np.int64)
+        offs = np.asarray(offs, np.int64)
+        exps = np.array([int(e) & 0xFFFF_FFFF_FFFF_FFFF for e in exps],
+                        np.uint64)
+        news = np.array([int(v) & 0xFFFF_FFFF_FFFF_FFFF for v in news],
+                        np.uint64)
+        out: list = [None] * len(regions)
+        group = (regions << 36) | replicas
+        for g in np.unique(group):
+            sel = np.nonzero(group == g)[0]
+            region, replica = int(regions[sel[0]]), int(replicas[sel[0]])
+            mem = self._mem(region, replica)
+            if mem is None:
+                continue
+            o = offs[sel]
+            if len(np.unique(o)) == len(o):          # conflict-free fast path
+                old = mem[o].copy()
+                hit = old == exps[sel]
+                mem[o[hit]] = news[sel][hit]
+                for k, i in enumerate(sel):
+                    out[int(i)] = np.uint64(old[k])
+            else:                                    # same-word races: serialize
+                for i in sel:
+                    old = np.uint64(mem[offs[i]])
+                    if int(old) == int(exps[i]):
+                        mem[offs[i]] = news[i]
+                    out[int(i)] = old
+            self.mn_bytes[self.placement[region][replica]] += \
+                2 * len(sel) * L.WORD
+        return out
+
+    def faa_batch(self, regions, replicas, offs, deltas) -> list:
+        """Vectorized FAA; returns old values or None.  Same-word verbs
+        accumulate in input order (each sees the running sum)."""
+        regions = np.asarray(regions, np.int64)
+        replicas = np.asarray(replicas, np.int64)
+        offs = np.asarray(offs, np.int64)
+        deltas = np.array([int(d) & 0xFFFF_FFFF_FFFF_FFFF for d in deltas],
+                          np.uint64)
+        out: list = [None] * len(regions)
+        group = (regions << 36) | replicas
+        for g in np.unique(group):
+            sel = np.nonzero(group == g)[0]
+            region, replica = int(regions[sel[0]]), int(replicas[sel[0]])
+            mem = self._mem(region, replica)
+            if mem is None:
+                continue
+            o = offs[sel]
+            if len(np.unique(o)) == len(o):
+                old = mem[o].copy()
+                mem[o] = old + deltas[sel]           # uint64 wraparound
+                for k, i in enumerate(sel):
+                    out[int(i)] = np.uint64(old[k])
+            else:
+                for i in sel:
+                    old = np.uint64(mem[offs[i]])
+                    mem[offs[i]] = old + deltas[i]
+                    out[int(i)] = old
+            self.mn_bytes[self.placement[region][replica]] += \
+                2 * len(sel) * L.WORD
+        return out
+
     # ---------------- MN-side coarse allocation (ALLOC RPC, §4.4) ----------
     def alloc_block(self, mid: int, cid: int):
         """MN-side handler: grab a free block from one of this MN's primary

@@ -151,11 +151,39 @@ class Master:
 
     # ------------------------------------------------------------- queries
     def fail_query(self, slot_off: int, **_) -> Optional[int]:
-        """Alg 4 line 35: return the decided value for a slot (post-repair)."""
+        """Alg 4 line 35 + §A.4.3: decide (and complete) a contested slot.
+
+        If the backups agree on a value the primary does not hold, an
+        in-flight SNAPSHOT round stalled — its winner crashed between the
+        backup broadcast and the primary CAS, so pollers would wait
+        forever.  The master arbitrates: it installs the backup-majority
+        value on every replica and commits that round's embedded log (so
+        §5.3 recovery never redoes it), then returns the decided value.
+        Otherwise the primary value stands."""
         self.maybe_recover_mns()
-        v = self.pool.read(INDEX_REGION, 0, slot_off, 1)
-        assert v is not None, "primary index replica unavailable after recovery"
-        return int(v[0])
+        pool = self.pool
+        reps = pool.placement[INDEX_REGION]
+        vals = []
+        for i in range(len(reps)):
+            v = pool.read(INDEX_REGION, i, slot_off, 1)
+            vals.append(None if v is None else int(v[0]))
+        primary = vals[0]
+        assert primary is not None, \
+            "primary index replica unavailable after recovery"
+        backups = [v for v in vals[1:] if v is not None]
+        if backups:
+            counts: Dict[int, int] = {}
+            for v in backups:
+                counts[v] = counts.get(v, 0) + 1
+            v_maj = max(counts, key=lambda k: (counts[k], -k))
+            if (2 * counts[v_maj] >= len(backups)
+                    and v_maj not in (primary, 0)):
+                for i, v in enumerate(vals):
+                    if v is not None:
+                        pool.write(INDEX_REGION, i, slot_off, [v_maj])
+                self._commit_log_of(v_maj)
+                return v_maj
+        return primary
 
     def bucket_query(self, off: int):
         self.maybe_recover_mns()

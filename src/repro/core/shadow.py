@@ -1,0 +1,93 @@
+"""Jax-free NumPy mirror of the RACE probe (kernels/race_lookup/ref.py),
+bit-exact, plus the vectorized shadow-index builder.
+
+Lives in core (not kernels) so the event-level simulator (core/api.py,
+core/fleet.py) shares one hash/probe implementation with the kernel stack
+without importing jax — the simulator must stay runnable in jax-less
+environments, and a thousand-client fleet tick must not pay
+interpret-mode Pallas on CPU.  kernels/race_lookup/ops.py imports these
+as the host-side fallback of its batched entry point; the bit-exactness
+of ``hash32_np`` against the in-kernel hash is pinned by
+tests/test_api.py::test_shadow_hash_matches_kernel_ref.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+MASK24 = (1 << 24) - 1
+
+
+def hash32_np(x: np.ndarray, seed: int) -> np.ndarray:
+    """NumPy mirror of ref.py::hash32 (uint32 lanes)."""
+    with np.errstate(over="ignore"):
+        x = x.astype(np.uint32) + np.uint32((0x9E3779B9 * (seed + 1))
+                                            & 0xFFFFFFFF)
+        x = (x ^ (x >> np.uint32(16))) * np.uint32(0x85EBCA6B)
+        x = (x ^ (x >> np.uint32(13))) * np.uint32(0xC2B2AE35)
+        return (x ^ (x >> np.uint32(16))).astype(np.uint32)
+
+
+def race_lookup_np(q: np.ndarray, table: np.ndarray):
+    """NumPy mirror of race_lookup_ref: one vectorized gather + match.
+
+    q: (N,) uint32 keys; table: (nb, spb) uint32 slots (fp:8 | ptr:24).
+    Returns (ptr (N,) uint32 — 0 on miss, found (N,) bool)."""
+    q = np.asarray(q, np.uint32)
+    fpq = (hash32_np(q, 7) >> np.uint32(24)).astype(np.uint32)
+    fpq = np.where(fpq == 0, np.uint32(1), fpq)
+    nb = table.shape[0]
+    b1 = hash32_np(q, 1) % nb
+    b2 = hash32_np(q, 2) % nb
+    b2 = np.where(b2 == b1, (b1 + 1) % nb, b2)
+    rows = np.concatenate([table[b1], table[b2]], axis=1)
+    match = (rows >> np.uint32(24)) == fpq[:, None]
+    any_m = match.any(axis=1)
+    first = match.argmax(axis=1)
+    picked = np.take_along_axis(rows, first[:, None], axis=1)[:, 0]
+    return np.where(any_m, picked & np.uint32(MASK24), np.uint32(0)), any_m
+
+
+def build_shadow(keys32: np.ndarray, *, spb: int = 8,
+                 min_buckets: int = 16) -> np.ndarray:
+    """Vectorized construction of a 32-bit shadow RACE index over ``keys32``
+    (entry i is stored as ``fp<<24 | i+1``).  Cuckoo-lite placement, fully
+    array-level (no per-entry Python loop — this runs on every fleet tick
+    whose caches moved): pass 1 ranks entries within their first-choice
+    bucket; overflow retries in the second-choice bucket on top of pass-1
+    occupancy; residual overflow is simply unreachable via the fast path
+    (callers fall back to a full SEARCH), never wrong."""
+    keys32 = np.asarray(keys32, np.uint32)
+    n = len(keys32)
+    nb = min_buckets
+    while nb * spb < 4 * n:
+        nb *= 2
+    shadow = np.zeros((nb, spb), np.uint32)
+    if n == 0:
+        return shadow
+    fp = (hash32_np(keys32, 7) >> np.uint32(24)).astype(np.uint32)
+    fp = np.where(fp == 0, np.uint32(1), fp)
+    b1 = (hash32_np(keys32, 1) % nb).astype(np.int64)
+    b2 = (hash32_np(keys32, 2) % nb).astype(np.int64)
+    b2 = np.where(b2 == b1, (b1 + 1) % nb, b2)
+    slot = (fp << np.uint32(24)) | (np.arange(1, n + 1, dtype=np.uint32)
+                                    & np.uint32(MASK24))
+
+    def _rank_within(sorted_groups: np.ndarray) -> np.ndarray:
+        first = np.searchsorted(sorted_groups, sorted_groups, side="left")
+        return np.arange(len(sorted_groups)) - first
+
+    order1 = np.argsort(b1, kind="stable")
+    rank1 = _rank_within(b1[order1])
+    fit1 = rank1 < spb
+    placed1 = order1[fit1]
+    shadow[b1[placed1], rank1[fit1]] = slot[placed1]
+
+    spill = order1[~fit1]
+    if len(spill):
+        base = np.minimum(np.bincount(b1, minlength=nb), spb)  # pass-1 fill
+        order2 = spill[np.argsort(b2[spill], kind="stable")]
+        col = _rank_within(b2[order2]) + base[b2[order2]]
+        fit2 = col < spb
+        placed2 = order2[fit2]
+        shadow[b2[placed2], col[fit2]] = slot[placed2]
+    return shadow

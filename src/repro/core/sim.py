@@ -42,6 +42,22 @@ from .events import CRASHED, MasterCall, OpResult, Phase, Verb
 from .faults import ClientCrashed
 from .heap import DMPool
 from .master import Master
+from .rng import SimRng, as_simrng
+
+
+@dataclass(frozen=True)
+class SimTrace:
+    """A replayable schedule: the exact ``(cid, pick)`` sequence a run fed
+    through ``Scheduler.step``.  Together with ``(seed, config)`` and the
+    same submission sequence, ``Scheduler.run_trace`` reproduces the run
+    bit-identically (fleet-mode ticks are schedule-free — deterministic
+    from the seed alone — so they contribute no decisions)."""
+    seed: int
+    decisions: Tuple[Tuple[int, int], ...]
+    ticks: int
+
+    def __len__(self) -> int:
+        return len(self.decisions)
 
 
 @dataclass
@@ -89,10 +105,16 @@ class _ClientPipe:
 
 class Scheduler:
     def __init__(self, pool: DMPool, master: Master, *, seed: int = 0,
+                 rng: Optional[SimRng] = None,
                  mn_detect_delay: int = 0, auto_mn_recovery: bool = True):
         self.pool = pool
         self.master = master
-        self.rng = np.random.default_rng(seed)
+        # every random choice derives from one SimRng root (named
+        # substreams), so a run is bit-identically replayable from
+        # (seed, config); see core/rng.py
+        self.simrng = as_simrng(rng, default_seed=seed)
+        self.rng = self.simrng.stream("scheduler")
+        self.decisions: List[Tuple[int, int]] = []   # every step(cid, pick)
         self.tick = 0
         self.pipes: Dict[int, _ClientPipe] = {}      # cid -> pipeline
         self.history: List[OpRecord] = []
@@ -209,6 +231,7 @@ class Scheduler:
                 send_value = []
                 continue
             for idx, verb in enumerate(item.verbs):
+                verb.epoch = self.pool.epoch   # stale-epoch verbs FAIL (§5.2)
                 mn = verb.target_mn(self.pool)
                 pipe.qp.setdefault(mn, deque()).append((run, idx, verb))
             return
@@ -227,14 +250,10 @@ class Scheduler:
     def eligible_cids(self) -> List[int]:
         return sorted(c for c, p in self.pipes.items() if p.has_work())
 
-    def step(self, cid: int, pick: int = 0) -> bool:
-        """Execute one verb (or master call) of client ``cid``.
-
-        ``pick`` chooses among the client's per-MN FIFO queues, enabling the
-        schedule to explore cross-MN orderings within and across the
-        doorbell batches of the client's in-flight ops.
-        Returns False if the client has nothing to do.
-        """
+    def begin_tick(self):
+        """Advance the clock one tick: run tick hooks (fault injection) and
+        the automatic MN-failure detection.  Shared by the per-verb ``step``
+        path and the fleet engine's batched tick (core/fleet.py)."""
         self.tick += 1
         if self._tick_hooks:
             for hook in tuple(self._tick_hooks):  # hooks may self-remove
@@ -243,6 +262,17 @@ class Scheduler:
             self._mn_detect_at = None
             if self.master.maybe_recover_mns():
                 self.mn_recoveries += 1
+
+    def step(self, cid: int, pick: int = 0) -> bool:
+        """Execute one verb (or master call) of client ``cid``.
+
+        ``pick`` chooses among the client's per-MN FIFO queues, enabling the
+        schedule to explore cross-MN orderings within and across the
+        doorbell batches of the client's in-flight ops.
+        Returns False if the client has nothing to do.
+        """
+        self.decisions.append((cid, pick))
+        self.begin_tick()
         pipe = self.pipes.get(cid)
         if pipe is None:
             return False
@@ -267,6 +297,8 @@ class Scheduler:
 
     def _exec_verb(self, v: Verb, cid: int):
         p = self.pool
+        if 0 <= v.epoch != p.epoch:
+            return None   # posted under an expired lease epoch: MR invalid
         if v.kind == "read":
             return p.read(v.region, v.replica, v.off, v.n)
         if v.kind == "write":
@@ -370,6 +402,21 @@ class Scheduler:
                 return
             self.step(cids[cid % len(cids)], pick=pick)
         self.run_round_robin(max_ticks=max_extra)
+
+    # ------------------------------------------------------------- replay
+    def trace(self) -> SimTrace:
+        """Snapshot of every scheduling decision taken so far (the
+        schedule-replay hook of the deterministic-simulation contract)."""
+        return SimTrace(seed=self.simrng.seed,
+                        decisions=tuple(self.decisions), ticks=self.tick)
+
+    def run_trace(self, trace: SimTrace, *, start: int = 0):
+        """Re-execute a recorded schedule verbatim: ``step(cid, pick)`` for
+        every recorded decision from index ``start`` on.  Replaying against
+        the same ``(seed, config)`` and submission sequence reproduces the
+        original run bit-identically."""
+        for (cid, pick) in trace.decisions[start:]:
+            self.step(cid, pick=pick)
 
 
 def run_ops_concurrently(pool: DMPool, master: Master, ops, *, seed=0,

@@ -36,7 +36,8 @@ from .faults import (ClientCrashed, ClientHealth, ClusterHealth, FaultInjector,
                      accumulate_recovery)
 from .heap import META_WORDS_PER_CLIENT, DMConfig, DMPool
 from .master import Master
-from .sim import Scheduler
+from .rng import SimRng
+from .sim import Scheduler, SimTrace
 
 
 class FuseeCluster:
@@ -47,13 +48,20 @@ class FuseeCluster:
                  mn_detect_delay: int = 0):
         self.cfg = cfg or DMConfig()
         self.seed = seed
+        # single randomness root: every random decision of the run
+        # (scheduler, fault storms, workload generation) derives from
+        # named substreams of this SimRng, making the run bit-identically
+        # replayable from (seed, config) — see core/rng.py
+        self.rng = SimRng(seed)
         self._client_kw = dict(enable_cache=enable_cache,
                                cache_threshold=cache_threshold,
                                replication_mode=replication_mode)
         self.pool = DMPool(self.cfg, num_clients=num_clients, seed=seed)
         self.master = Master(self.pool)
         self.scheduler = Scheduler(self.pool, self.master, seed=seed,
+                                   rng=self.rng,
                                    mn_detect_delay=mn_detect_delay)
+        self._fleet = None
         self.clients: Dict[int, FuseeClient] = {}
         self._next_cid = 0
         self._free_cids: list = []          # cids of removed clients, reusable
@@ -171,6 +179,31 @@ class FuseeCluster:
     def drain(self):
         """Drive every in-flight op of every live client to completion."""
         self.scheduler.run_round_robin()
+
+    def fleet(self, *, use_kernel: bool = True):
+        """The (memoized) fleet engine over this cluster's scheduler: one
+        tick advances every client's in-flight op-phases as batched array
+        operations — the ≥1024-concurrent-client driving mode.  See
+        core/fleet.py."""
+        from .fleet import FleetEngine            # local: avoid import cycle
+        if self._fleet is None:
+            self._fleet = FleetEngine(self.scheduler, use_kernel=use_kernel)
+        else:
+            self._fleet.use_kernel = use_kernel   # honor the latest setting
+        return self._fleet
+
+    # --------------------------------------------------------------- replay
+    def trace(self) -> SimTrace:
+        """Schedule-replay hook: the (cid, pick) decisions taken so far by
+        step-mode driving.  Feed to ``replay`` on a fresh same-(seed,
+        config) cluster given the same submission sequence to reproduce
+        the run bit-identically.  Fleet-mode ticks are schedule-free
+        (deterministic from the seed alone) and contribute no decisions."""
+        return self.scheduler.trace()
+
+    def replay(self, trace: SimTrace, *, start: int = 0):
+        """Re-execute a recorded schedule verbatim (see ``trace``)."""
+        self.scheduler.run_trace(trace, start=start)
 
     # ---------------------------------------------------------------- health
     def health(self) -> ClusterHealth:

@@ -10,4 +10,4 @@ Mosaic.  Correctness is swept over shapes/dtypes in tests/test_kernels.py.
 """
 from .flash_attention import flash_attention, flash_attention_ref  # noqa
 from .paged_attention import paged_attention, paged_attention_ref  # noqa
-from .race_lookup import race_lookup, race_lookup_ref  # noqa
+from .race_lookup import race_lookup, race_lookup_batch, race_lookup_ref  # noqa

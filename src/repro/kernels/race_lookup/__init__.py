@@ -1,3 +1,4 @@
-from .ops import race_lookup  # noqa: F401
+from .ops import (build_shadow, hash32_np, race_lookup,  # noqa: F401
+                  race_lookup_batch, race_lookup_np)
 from .ref import (bucket_pair, fingerprint, hash32,  # noqa: F401
                   race_lookup_ref)

@@ -127,36 +127,54 @@ class ServeEngine:
 
     # ------------------------------------------------------------- ticks --
     def _admit(self):
-        admitted = False
+        """Admit every queued request a free slot allows, then serve ALL
+        their prefix lookups with one batched GET wave (a single
+        pool.search -> race_lookup invocation per admit tick, not one per
+        request) and all their misses with one batched INSERT wave — the
+        serving twin of the simulator's fleet tick (core/fleet.py)."""
+        admitted: List[Request] = []
         while self.queue and self.slots_free:
             req = self.queue.pop(0)
             req.slot = self.slots_free.pop(0)
-            # FUSEE prefix lookup: one batched GET over the block hashes
-            hashes = _block_hashes(req.prompt)
-            if len(hashes):
-                res = [f.result() for f in self.store.submit_batch(
-                    [Op.get(int(h)) for h in hashes])]
-                found = np.array([r.status == OK for r in res])
-                req.prefix_hits = int(found.sum())
-                missing = hashes[~found]
-                if len(missing):
-                    ins = [f.result() for f in self.store.submit_batch(
-                        [Op.insert(int(h), None) for h in missing])]
+            admitted.append(req)
+        if not admitted:
+            return False
+        hashes = [_block_hashes(req.prompt) for req in admitted]
+        flat = [int(h) for hs in hashes for h in hs]
+        if flat:
+            res = [f.result() for f in self.store.submit_batch(
+                [Op.get(h) for h in flat])]
+            found = np.array([r.status == OK for r in res], bool)
+            miss_idx = [i for i in range(len(flat)) if not found[i]]
+            ins_res = {}
+            if miss_idx:
+                # duplicate hashes across requests collapse to one page in
+                # the device batch (concurrent upserts of one key)
+                ins = [f.result() for f in self.store.submit_batch(
+                    [Op.insert(flat[i], None) for i in miss_idx])]
+                ins_res = dict(zip(miss_idx, ins))
+            pos = 0
+            for req, hs in zip(admitted, hashes):
+                fnd = found[pos:pos + len(hs)]
+                req.prefix_hits = int(fnd.sum())
+                rs = [ins_res[pos + j] for j in range(len(hs)) if not fnd[j]]
+                if rs:
                     req.pages = np.array(
-                        [r.page if r.page is not None else -1 for r in ins],
+                        [r.page if r.page is not None else -1 for r in rs],
                         np.int32)
                     # a page whose insert lost (another worker's page won
                     # the slot) is unreferenced by the index: remember it
                     # for release at retire
                     req.surplus = np.array(
-                        [r.page for r in ins
+                        [r.page for r in rs
                          if r.status != OK and r.page is not None
                          and r.page >= 0], np.int32)
+                pos += len(hs)
+        for req in admitted:
             self.slot_tokens[req.slot, :len(req.prompt)] = req.prompt
             self.slot_len[req.slot] = len(req.prompt)
             self.active[req.slot] = req
-            admitted = True
-        return admitted
+        return True
 
     def _prefill_all(self):
         """(Re)prefill the whole active batch into a fresh cache.

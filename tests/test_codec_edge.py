@@ -1,0 +1,116 @@
+"""Codec edge cases (core/codec.py): empty values, maximum-size keys and
+values, non-UTF8 byte keys — all round-tripped through the real store —
+and typed ``CodecError`` on malformed/ambiguous inputs."""
+import numpy as np
+import pytest
+
+from repro.core import CodecError, DMConfig, FuseeCluster, codec
+from repro.core import layout as L
+from repro.core.events import FULL, OK
+
+# Largest byte payload that fits the biggest slab object of the default
+# block geometry: the object (header 2w + value + log 3w) must fit the
+# largest power-of-two size class not exceeding the block payload, and the
+# codec spends one word on the length header.
+_CFG = DMConfig()
+_MAX_SC_WORDS = 1 << (L.MIN_OBJ_WORDS - 1).bit_length()
+while _MAX_SC_WORDS * 2 <= _CFG.block_payload_words:
+    _MAX_SC_WORDS *= 2
+MAX_VALUE_BYTES = (_MAX_SC_WORDS - L.HDR_WORDS - L.LOG_WORDS - 1) * 8
+
+
+def _store():
+    return FuseeCluster(DMConfig(num_mns=4, replication=2),
+                        num_clients=1).store(0)
+
+
+# ------------------------------------------------------------ empty values --
+def test_empty_value_roundtrip():
+    words = codec.encode_value(b"")
+    assert codec.decode_value(words) == b""
+    assert codec.decode_value(codec.encode_value("")) == b""
+
+
+def test_empty_value_through_store():
+    kv = _store()
+    assert kv.put(b"k", b"").status == OK
+    assert kv.get(b"k") == b""                 # empty bytes, not None/missing
+    assert kv.get(b"absent") is None
+
+
+# --------------------------------------------------------- maximum sizes ----
+def test_max_size_value_roundtrip_through_store():
+    kv = _store()
+    big = bytes(range(256)) * (MAX_VALUE_BYTES // 256 + 1)
+    big = big[:MAX_VALUE_BYTES]
+    assert MAX_VALUE_BYTES == 2000             # pin the default geometry
+    assert kv.put(b"big", big).status == OK
+    assert kv.get(b"big") == big
+
+
+def test_oversized_value_reports_full_not_corruption():
+    kv = _store()
+    r = kv.put(b"too-big", b"x" * (MAX_VALUE_BYTES + 8))
+    assert r.status == FULL                    # typed outcome, no crash
+    assert kv.get(b"too-big") is None
+
+
+def test_max_size_keys_roundtrip():
+    kv = _store()
+    k64k = b"\x00\xffkey" * (1 << 14)          # 64 KiB key, hashed to 64 bits
+    assert kv.put(k64k, b"v").status == OK
+    assert kv.get(k64k) == b"v"
+    assert kv.get(k64k[:-1]) is None           # prefix is a different key
+
+
+# -------------------------------------------------------- non-UTF8 keys -----
+def test_non_utf8_byte_keys_roundtrip():
+    kv = _store()
+    keys = [b"\xff\xfe\xfd", b"\x80tail", b"nul\x00mid", bytes(range(256))]
+    for i, k in enumerate(keys):
+        assert kv.put(k, bytes([i]) * 3).status == OK
+    for i, k in enumerate(keys):
+        assert kv.get(k) == bytes([i]) * 3
+    # bytes keys are NOT utf-8 decoded: b"\xc3\xa9" != "é" would be the
+    # same key if they were; encode_key treats str as its utf-8 bytes
+    assert codec.encode_key("é") == codec.encode_key("é".encode())
+    assert codec.encode_key(b"\xc3\xa9") == codec.encode_key("é")
+    assert codec.encode_key(b"\xe9") != codec.encode_key("é")
+
+
+# ------------------------------------------------------------ typed errors --
+def test_bad_key_type_raises_codec_error():
+    with pytest.raises(CodecError):
+        codec.encode_key(3.14)
+    with pytest.raises(CodecError):
+        codec.encode_key(["not", "a", "key"])
+    assert issubclass(CodecError, TypeError)   # legacy except clauses work
+    assert issubclass(CodecError, ValueError)
+
+
+def test_ambiguous_raw_word_list_raises_codec_error():
+    tagged_like = [(codec.VALUE_TAG << 48) | 3, 0x636261]
+    with pytest.raises(CodecError):
+        codec.encode_value(tagged_like)
+
+
+def test_malformed_tag_strict_decode_raises():
+    # tag present but the length field disagrees with the word count
+    bad_len = [(codec.VALUE_TAG << 48) | 3]
+    with pytest.raises(CodecError):
+        codec.decode_value(bad_len, strict=True)
+    # tag present but nonzero padding beyond the stated length
+    bad_pad = [(codec.VALUE_TAG << 48) | 1, 2 ** 63]
+    with pytest.raises(CodecError):
+        codec.decode_value(bad_pad, strict=True)
+    # default (lenient) mode keeps the legacy raw-word-list fallback
+    assert codec.decode_value(bad_len) == bad_len
+    assert codec.decode_value(bad_pad) == bad_pad
+    # well-formed tags decode identically in both modes
+    words = codec.encode_value(b"abc")
+    assert codec.decode_value(words, strict=True) == b"abc"
+
+
+def test_untagged_words_pass_strict_decode():
+    assert codec.decode_value([1, 2, 3], strict=True) == [1, 2, 3]
+    assert codec.decode_value(None, strict=True) is None

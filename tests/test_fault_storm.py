@@ -1,0 +1,117 @@
+"""Seeded fault-storm stress test (tier-1 + the CI seed matrix).
+
+A randomized ``FaultPlan.storm`` — crash/recover clients and crash MNs at
+random completed-op boundaries, all drawn from the run's ``SimRng`` —
+fires while a fleet-driven insert workload runs.  Invariants:
+
+* **no acknowledged write is ever lost** — every key whose insert
+  resolved OK is readable (with its exact value) from a live client
+  after the storm;
+* **every future settles** — no hangs: each submitted op ends OK or
+  CRASHED (crashed-client submits are rejected up front with the typed
+  ``ClientCrashed`` and never enter the pipeline);
+* **health converges** — empty pipelines everywhere, one lease epoch
+  across live clients, every MN crash detected + Alg-3-recovered, and
+  the whole plan fired.
+
+Seeds come from ``FUSEE_STORM_SEEDS`` (comma-separated; CI runs a 3-seed
+matrix).  Every assertion message carries the reproducing seed.
+"""
+import os
+
+import pytest
+
+from repro.core import (CRASHED, OK, ClientCrashed, DMConfig, FaultPlan,
+                        FuseeCluster, Op)
+
+SEEDS = [int(s) for s in
+         os.environ.get("FUSEE_STORM_SEEDS", "0,1").split(",")]
+
+N_CLIENTS, N_MNS, REPL = 6, 5, 3
+TOTAL_OPS = 160
+
+
+def _run_storm(seed):
+    cl = FuseeCluster(DMConfig(num_mns=N_MNS, replication=REPL,
+                               region_words=1 << 15, regions_per_mn=16),
+                      num_clients=N_CLIENTS, seed=seed)
+    plan = FaultPlan.storm(cl.rng.stream("faults"),
+                           clients=range(N_CLIENTS), mns=N_MNS,
+                           replication=REPL, n_client_crashes=2,
+                           n_mn_crashes=2, first_op=10, spacing=14,
+                           recover_delay=8)
+    injector = cl.inject(plan)
+    fleet = cl.fleet()
+    stores = {c: cl.store(c, max_inflight=0) for c in range(N_CLIENTS)}
+    futs, rejected = [], 0
+    submitted = 0
+    while submitted < TOTAL_OPS:
+        for c in range(N_CLIENTS):
+            if submitted >= TOTAL_OPS:
+                break
+            k = submitted
+            submitted += 1
+            try:
+                futs.append((k, c, stores[c].submit(Op.put(k, [k, c]))))
+            except ClientCrashed:
+                rejected += 1          # typed rejection: op never entered
+        for _ in range(4):             # let faults fire mid-workload
+            if cl.scheduler.has_work():
+                fleet.tick()
+    fleet.run()
+    return cl, plan, injector, futs, rejected
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fault_storm_invariants(seed):
+    msg = f"(reproduce with FUSEE_STORM_SEEDS={seed})"
+    cl, plan, injector, futs, rejected = _run_storm(seed)
+
+    # the storm actually happened, in full
+    assert injector.done and len(injector.fired) == len(plan), msg
+    crashes = [e for _, e in injector.fired if e.action == "crash_client"]
+    mn_crashes = [e for _, e in injector.fired if e.action == "crash_mn"]
+    assert crashes and mn_crashes, msg
+
+    # every future settled: OK or typed-retriable CRASHED, nothing hung
+    acked = {}
+    for k, c, f in futs:
+        assert f.done(), f"future for key {k} never settled {msg}"
+        r = f.result()
+        assert r.status in (OK, CRASHED), \
+            f"key {k} ended {r.status} {msg}"
+        if r.status == OK:
+            acked[k] = [k, c]
+    assert acked, msg
+
+    # no acknowledged write is ever lost: every OK'd key is readable with
+    # its exact value from a live client after recovery
+    live = [c for c, cc in cl.clients.items() if not cc.crashed]
+    assert live, msg
+    reader = cl.store(live[0])
+    for k, v in acked.items():
+        got = reader.get(k)
+        assert got == v, f"acked key {k} lost: read {got!r} {msg}"
+
+    # health converges after the storm
+    h = cl.health()
+    assert all(c.inflight == 0 for c in h.clients), msg
+    assert h.alive_mns == N_MNS - len(mn_crashes), msg
+    assert h.mn_recoveries == len(mn_crashes), msg    # Alg-3 ran per crash
+    assert h.client_recoveries == len(crashes), msg   # §5.3 ran per crash
+    epochs = {c.epoch for c in h.clients if c.status == "live"}
+    assert len(epochs) == 1, f"epoch split-brain {epochs} {msg}"
+    assert h.crashed_ops == sum(c.crashed_ops for c in h.clients), msg
+
+
+@pytest.mark.parametrize("seed", SEEDS[:1])
+def test_fault_storm_is_seed_deterministic(seed):
+    """The same storm seed reproduces the same fault schedule and the same
+    op outcomes — the replay contract under fault injection."""
+    def signature(run):
+        cl, _plan, injector, futs, rejected = run
+        return (tuple((t, e.action, e.target) for t, e in injector.fired),
+                tuple((k, c, f.result().status) for k, c, f in futs),
+                rejected, cl.scheduler.tick)
+    assert signature(_run_storm(seed)) == signature(_run_storm(seed)), \
+        f"(reproduce with FUSEE_STORM_SEEDS={seed})"

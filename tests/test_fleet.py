@@ -1,0 +1,255 @@
+"""Tests for fleet mode (core/fleet.py + core/rng.py + trace replay).
+
+Covers: batched ticks advance every client's op-phases per tick (array
+calls bounded per tick, not per op), the cluster-wide single-invocation
+race_lookup probe wave, correctness + per-key linearizability under fleet
+driving, the determinism regression bar (same seed -> bit-identical op
+results / RTT counts / health; different seeds differ), trace()-based
+schedule replay, and a 1024-client smoke."""
+import numpy as np
+import pytest
+
+from repro.core import (CRASHED, OK, DMConfig, FaultPlan, FleetEngine,
+                        FuseeCluster, Op, SimRng)
+from repro.core.linearize import check_linearizable, records_to_hops
+
+
+def _fleet_cluster(n_clients, *, seed=0, num_mns=4, replication=2,
+                   region_words=1 << 15, regions_per_mn=16,
+                   index_buckets=256, **kw):
+    cl = FuseeCluster(DMConfig(num_mns=num_mns, replication=replication,
+                               region_words=region_words,
+                               regions_per_mn=regions_per_mn,
+                               index_buckets=index_buckets),
+                      num_clients=n_clients, seed=seed, **kw)
+    return cl, cl.fleet()
+
+
+def _run_seeded_workload(seed, *, n_clients=6, ops_per_client=6):
+    """A small mixed workload drawn entirely from the cluster's SimRng:
+    everything about the run derives from (seed, config)."""
+    cl, fleet = _fleet_cluster(n_clients, seed=seed)
+    stores = [cl.store(c, max_inflight=0) for c in range(n_clients)]
+    wl = cl.rng.stream("workload")
+    for k in range(16):                      # preload
+        cl.scheduler.submit(k % n_clients, "insert", k, [k])
+    fleet.run()
+    kinds = ["insert", "update", "search", "delete"]
+    futs = []
+    for c in range(n_clients):
+        ops = []
+        for i in range(ops_per_client):
+            kind = kinds[int(wl.integers(len(kinds)))]
+            key = int(wl.integers(16)) if kind != "insert" \
+                else 100 + 10 * c + i
+            val = [int(wl.integers(1000))] if kind in ("insert", "update") \
+                else None
+            ops.append(Op(kind, key, val))
+        futs += stores[c].submit_batch(ops)
+    fleet.run()
+    assert all(f.done() for f in futs)
+    return cl, futs
+
+
+def _history_signature(cl):
+    """Canonical per-op signature: results, RTT counts, timing."""
+    return tuple(
+        (r.cid, r.op_id, r.kind, r.key, r.inv_tick, r.resp_tick, r.rtts,
+         r.bg_rtts, r.result.status,
+         tuple(r.result.value) if isinstance(r.result.value, list) else None)
+        for r in cl.scheduler.history if r.result is not None)
+
+
+def _health_signature(cl):
+    h = cl.health()
+    return (h.epoch, h.tick, h.crashed_ops, h.client_recoveries,
+            h.mn_recoveries,
+            tuple((m.mid, m.alive, m.primary_regions, m.hosted_regions,
+                   m.bytes_served) for m in h.mns),
+            tuple((c.cid, c.status, c.epoch, c.inflight, c.cache_entries,
+                   c.completed_ops, c.crashed_ops) for c in h.clients))
+
+
+# ----------------------------------------------------------- batched ticks --
+def test_fleet_tick_advances_all_clients_batched():
+    """One tick executes the head verb of every (client, MN) lane with a
+    bounded number of array calls — per tick, not per op."""
+    n = 12
+    cl, fleet = _fleet_cluster(n)
+    for c in range(n):
+        for k in range(4):
+            cl.scheduler.submit(c, "insert", 100 * c + k, [c, k])
+    ticks = fleet.run()
+    st = fleet.stats()
+    assert st["verbs"] > 4 * ticks            # many verbs per tick...
+    assert st["max_lanes"] >= n               # ...every client advanced at once
+    # array calls are per (verb-kind) per tick, never per verb: reads +
+    # writes + cas + faa <= 4 batched calls per tick
+    assert st["array_calls"] <= 4 * ticks
+    assert st["verbs_per_tick"] > 8
+    recs = [r for r in cl.scheduler.history if r.result is not None]
+    assert all(r.result.status == OK for r in recs)
+    kv = cl.store(0)
+    for c in range(n):
+        for k in range(4):
+            assert kv.get(100 * c + k) == [c, k]
+
+
+def test_fleet_matches_step_results_on_disjoint_keys():
+    """Fleet driving and per-verb step driving agree wherever the outcome
+    is schedule-independent (disjoint key sets)."""
+    def run(drive_fleet):
+        cl, fleet = _fleet_cluster(4, seed=11)
+        for c in range(4):
+            for k in range(5):
+                cl.scheduler.submit(c, "insert", 10 * c + k, [c + k])
+        if drive_fleet:
+            fleet.run()
+        else:
+            cl.scheduler.run_round_robin()
+        return {(r.cid, r.key): (r.result.status, tuple(r.result.value or []))
+                for r in cl.scheduler.history if r.result is not None}
+    assert run(True) == run(False)
+
+
+def test_fleet_contended_key_linearizable():
+    cl, fleet = _fleet_cluster(5, seed=7)
+    sched = cl.scheduler
+    sched.submit(0, "insert", 42, [0])
+    fleet.run()
+    for c in range(1, 5):
+        sched.submit(c, "update", 42, [10 + c])
+        sched.submit(c, "search", 42)
+        sched.submit(c, "delete" if c == 3 else "update", 42,
+                     None if c == 3 else [20 + c])
+    fleet.run()
+    hops = records_to_hops(sched.history, 42)
+    assert check_linearizable(hops, initial=None)
+
+
+def test_fleet_probe_wave_single_invocation():
+    """All clients' cache-resident GETs in one wave = ONE race_lookup
+    invocation, and every key fuses into a 1-RTT multi-key SEARCH."""
+    n = 6
+    cl, fleet = _fleet_cluster(n)
+    stores = [cl.store(c, max_inflight=0) for c in range(n)]
+    for c, kv in enumerate(stores):
+        for f in kv.submit_batch([Op.put(100 * c + k, [c, k])
+                                  for k in range(8)]):
+            pass
+    fleet.run()
+    for c, kv in enumerate(stores):
+        for k in range(8):
+            assert kv.get(100 * c + k) == [c, k]   # warm adaptive caches
+    mark = len(cl.scheduler.history)
+    wave = [(kv.backend, [Op.get(100 * c + k) for k in range(8)])
+            for c, kv in enumerate(stores)]
+    futs = fleet.submit_wave(wave)
+    fleet.run()
+    st = fleet.stats()
+    assert st["probe_invocations"] == 1
+    assert st["probe_keys"] == 8 * n and st["probe_hits"] == 8 * n
+    for c, fs in enumerate(futs):
+        assert [f.result().value for f in fs] == [[c, k] for k in range(8)]
+    fused = [r for r in cl.scheduler.history[mark:]
+             if r.kind == "search_batch"]
+    assert len(fused) == n and all(r.rtts == 1 for r in fused)
+
+
+def test_fleet_with_fault_injection():
+    """Fault hooks fire inside fleet ticks: a crashed client's in-flight
+    futures settle CRASHED, MN crash auto-recovers, the rest completes."""
+    cl, fleet = _fleet_cluster(4, replication=3)
+    stores = [cl.store(c, max_inflight=0) for c in range(4)]
+    cl.inject(FaultPlan().crash_client(2, after_ops=6).crash_mn(1, after_ops=10))
+    futs = {c: stores[c].submit_batch([Op.put(50 * c + k, [k])
+                                       for k in range(8)]) for c in range(4)}
+    fleet.run()
+    flat = [f for fs in futs.values() for f in fs]
+    assert all(f.done() for f in flat)
+    statuses = {f.result().status for f in flat}
+    assert statuses <= {OK, CRASHED} and CRASHED in statuses
+    assert all(f.result().status == CRASHED for f in futs[2][-1:])
+    assert cl.scheduler.mn_recoveries == 1
+    assert not cl.pool.mns[1].alive
+    kv = cl.store(0)
+    for c in (0, 1, 3):
+        for k, f in enumerate(futs[c]):
+            if f.result().status == OK:
+                assert kv.get(50 * c + k) == [k]
+
+
+# ----------------------------------------------------- determinism replay ---
+def test_same_seed_runs_bit_identical():
+    """The determinism regression bar: same (seed, config) -> identical op
+    results, RTT counts, and health snapshots; different seeds differ."""
+    cl_a, _ = _run_seeded_workload(123)
+    cl_b, _ = _run_seeded_workload(123)
+    assert _history_signature(cl_a) == _history_signature(cl_b)
+    assert _health_signature(cl_a) == _health_signature(cl_b)
+    cl_c, _ = _run_seeded_workload(124)
+    assert _history_signature(cl_a) != _history_signature(cl_c)
+
+
+def test_simrng_streams_independent_and_deterministic():
+    a, b = SimRng(5), SimRng(5)
+    # draws are per-name deterministic...
+    xs = a.stream("workload").integers(1 << 30, size=8)
+    # ...and independent of whether other streams were touched first
+    b.stream("faults").integers(1 << 30, size=100)
+    ys = b.stream("workload").integers(1 << 30, size=8)
+    np.testing.assert_array_equal(xs, ys)
+    assert not np.array_equal(
+        xs, SimRng(6).stream("workload").integers(1 << 30, size=8))
+    # fresh() rewinds to the stream origin without disturbing the memoized one
+    np.testing.assert_array_equal(
+        a.fresh("workload").integers(1 << 30, size=8), xs)
+
+
+def test_trace_replay_reproduces_run():
+    """trace() captures every step-mode (cid, pick) decision; replaying it
+    on a fresh same-(seed, config) cluster with the same submissions
+    reproduces the history bit-identically."""
+    def build(seed):
+        cl = FuseeCluster(DMConfig(num_mns=4, replication=3),
+                          num_clients=3, seed=seed)
+        sched = cl.scheduler
+        sched.submit(0, "insert", 9, [1])
+        for c in range(3):
+            sched.submit(c, "update", 9, [10 + c])
+            sched.submit(c, "search", 9)
+        return cl
+    cl_a = build(77)
+    cl_a.scheduler.run_random()              # seeded scheduler stream
+    trace = cl_a.trace()
+    assert len(trace) == cl_a.scheduler.tick  # one decision per tick
+    cl_b = build(77)
+    cl_b.replay(trace)
+    assert _history_signature(cl_a) == _history_signature(cl_b)
+    assert cl_b.scheduler.tick == cl_a.scheduler.tick
+
+
+# -------------------------------------------------------- 1024-client smoke -
+def test_fleet_scales_to_1024_clients():
+    """≥1024 concurrent clients, all in flight at once, driven to
+    completion with batched ticks (the tentpole acceptance smoke)."""
+    n = 1024
+    cl, fleet = _fleet_cluster(n, region_words=1 << 17, regions_per_mn=10,
+                               replication=2, index_buckets=1024)
+    sched = cl.scheduler
+    for c in range(n):
+        sched.submit(c, "insert", c, [c])
+    assert sum(sched.inflight(c) for c in range(n)) == n
+    ticks = fleet.run()
+    for c in range(n):
+        sched.submit(c, "search", c)
+    ticks += fleet.run()
+    recs = [r for r in sched.history if r.result is not None]
+    assert len(recs) == 2 * n
+    assert all(r.result.status == OK for r in recs)
+    searches = [r for r in recs if r.kind == "search"]
+    assert all(tuple(r.result.value) == (r.key,) for r in searches)
+    # batched execution: ~1024 lanes advanced per tick, not one op per tick
+    st = fleet.stats()
+    assert st["max_lanes"] >= 512
+    assert ticks < 2 * n                      # far fewer ticks than verbs

@@ -1,0 +1,158 @@
+"""Property-based linearizability suite (tier-1, bounded example counts).
+
+Random op mixes, pipeline depths, and interleavings are generated per
+example (hypothesis when installed, the deterministic tests/_hypo.py shim
+otherwise) and every per-key history is checked against the Wing&Gong
+checker in core/linearize.py.  Crash-during-commit histories are covered
+by crashing a client at a random verb boundary mid-pipeline, running §5.3
+recovery, and accepting a history iff SOME subset of the crashed
+(unacknowledged) writes can be linearized as having taken effect — the
+correctness contract of the CRASHED outcome: a crashed op may or may not
+have executed, but never partially and never twice."""
+import itertools
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # pragma: no cover - hypothesis-less environments
+    from _hypo import given, settings, strategies as st
+
+from repro.core.client import FuseeClient
+from repro.core.events import CRASHED, OK
+from repro.core.heap import DMConfig, DMPool
+from repro.core.linearize import HOp, check_linearizable, records_to_hops
+from repro.core.master import Master
+from repro.core.sim import Scheduler
+
+KINDS = ("insert", "update", "search", "delete")
+_FAR_FUTURE = 10 ** 9
+
+
+def _fresh(num_clients=4, r=3, num_mns=4):
+    pool = DMPool(DMConfig(num_mns=num_mns, replication=r),
+                  num_clients=num_clients)
+    master = Master(pool)
+    clients = [FuseeClient(i, pool) for i in range(num_clients)]
+    sched = Scheduler(pool, master)
+    for c in clients:
+        sched.add_client(c)
+    return pool, master, clients, sched
+
+
+def _submit_random_mix(sched, clients, rng, keys, depth):
+    """Fill every client's pipeline to ``depth`` with random ops over
+    ``keys``; returns the submitted records."""
+    recs, val = [], 100
+    for c in clients:
+        for _ in range(depth):
+            kind = KINDS[int(rng.integers(len(KINDS)))]
+            key = keys[int(rng.integers(len(keys)))]
+            v = [val] if kind in ("insert", "update") else None
+            val += 1
+            recs.append(sched.submit(c.cid, kind, key, v))
+    return recs
+
+
+def _crashed_write_subsets_linearizable(hops, crashed_recs, initial):
+    """A history with crashed writes is correct iff SOME subset of them can
+    be treated as applied (resp = far future: a never-responding op may
+    linearize anywhere after its invocation)."""
+    writes = [r for r in crashed_recs
+              if r.kind in ("insert", "update", "delete")]
+    for n in range(len(writes) + 1):
+        for sub in itertools.combinations(writes, n):
+            extra = [HOp(op_id=r.op_id, kind=r.kind, inv=r.inv_tick,
+                         resp=_FAR_FUTURE,
+                         wrote=tuple(r.value) if r.value is not None else None,
+                         read=None, status="OK")
+                     for r in sub]
+            if check_linearizable(hops + extra, initial=initial):
+                return True
+    return False
+
+
+# ------------------------------------------------------------ random mixes --
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100_000), depth=st.integers(1, 5))
+def test_random_mix_any_pipeline_depth_linearizable(seed, depth):
+    """Mixed ops at random pipeline depths over one contended key, driven
+    by a random interleaving, linearize per key."""
+    rng = np.random.default_rng(seed)
+    pool, master, clients, sched = _fresh(num_clients=3)
+    rec0 = sched.submit(clients[0].cid, "insert", 5, [1])
+    sched.run_round_robin()
+    assert rec0.result.status == OK
+    _submit_random_mix(sched, clients, rng, keys=[5], depth=depth)
+    sched.run_random(rng=rng)
+    assert check_linearizable(records_to_hops(sched.history, 5), initial=None)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_random_mix_two_keys_linearizable_per_key(seed):
+    """Per-key linearizability holds for each key of a two-key mix (ops on
+    different keys interleave arbitrarily)."""
+    rng = np.random.default_rng(seed)
+    pool, master, clients, sched = _fresh(num_clients=4)
+    for k in (5, 6):
+        sched.submit(clients[0].cid, "insert", k, [k])
+    sched.run_round_robin()
+    _submit_random_mix(sched, clients, rng, keys=[5, 6], depth=3)
+    sched.run_random(rng=rng)
+    for k in (5, 6):
+        assert check_linearizable(records_to_hops(sched.history, k),
+                                  initial=None), f"key {k} (seed={seed})"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100_000), r=st.integers(1, 4))
+def test_random_mix_replication_sweep_linearizable(seed, r):
+    rng = np.random.default_rng(seed)
+    pool, master, clients, sched = _fresh(num_clients=3, r=r,
+                                          num_mns=max(4, r))
+    sched.submit(clients[0].cid, "insert", 7, [1])
+    sched.run_round_robin()
+    _submit_random_mix(sched, clients, rng, keys=[7], depth=3)
+    sched.run_random(rng=rng)
+    assert check_linearizable(records_to_hops(sched.history, 7), initial=None)
+
+
+# ------------------------------------------------------ crash during commit --
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100_000), steps=st.integers(0, 160))
+def test_crash_during_commit_history_linearizable(seed, steps):
+    """Crash a client at a random verb boundary (possibly mid-SNAPSHOT-
+    commit, mid-doorbell-batch) with a pipeline of writes in flight,
+    recover it via §5.3 (log traversal + redo), finish the survivors, and
+    check the whole per-key history — completed ops exactly once, crashed
+    ops at-most-once — linearizes."""
+    rng = np.random.default_rng(seed)
+    pool, master, clients, sched = _fresh(num_clients=3)
+    rec0 = sched.submit(clients[0].cid, "insert", 9, [1])
+    sched.run_round_robin()
+    assert rec0.result.status == OK
+    # victim pipeline: 2 writes; survivor: mixed ops on the same key
+    sched.submit(clients[1].cid, "update", 9, [20])
+    sched.submit(clients[1].cid, "delete" if seed % 3 == 0 else "update",
+                 9, None if seed % 3 == 0 else [21])
+    sched.submit(clients[2].cid, "update", 9, [30])
+    sched.submit(clients[2].cid, "search", 9)
+    for _ in range(steps):                    # random partial execution
+        cids = sched.eligible_cids()
+        if not cids:
+            break
+        sched.step(cids[int(rng.integers(len(cids)))],
+                   pick=int(rng.integers(4)))
+    sched.crash_client(1)
+    master.recover_client(1, reassign_to=clients[2])
+    sched.run_random(rng=rng)                 # survivors finish
+    # a fresh read observes the post-recovery state
+    final = sched.submit(clients[2].cid, "search", 9)
+    sched.run_round_robin()
+    hops = records_to_hops(sched.history, 9)
+    crashed = [r for r in sched.history
+               if r.key == 9 and r.result is not None
+               and r.result.status == CRASHED]
+    assert _crashed_write_subsets_linearizable(hops, crashed, initial=None), \
+        f"seed={seed} steps={steps} final={final.result}"
