@@ -48,9 +48,13 @@ class WorkloadStats:
     bg_rtts_by_kind: Dict[str, float]
     mix: Dict[str, float]
     mn_bytes_per_op: np.ndarray          # bytes at each MN / op
-    alloc_rpcs_per_op: float
+    alloc_rpcs_per_op: float             # cluster-wide ALLOC RPCs / op
     invalid_fetches: int = 0
     wall_s: float = 0.0
+    # ALLOC RPCs served at each MN / op: the weak-core cap is a per-MN
+    # resource (1-2 cores per MN, §2.1), so MN-CPU capacity — like NIC
+    # bandwidth — binds at the *busiest* MN and scales with MN count
+    mn_alloc_rpcs_per_op: Optional[np.ndarray] = None
 
 
 def run_workload(*, n_clients: int, n_mns: int, replication: int = 2,
@@ -59,15 +63,19 @@ def run_workload(*, n_clients: int, n_mns: int, replication: int = 2,
                  value_words: int = 16, seed: int = 0,
                  enable_cache: bool = True, cache_threshold: float = 0.5,
                  replication_mode: str = "snapshot",
-                 preload: int = 256, pipeline_depth: int = 1) -> WorkloadStats:
+                 preload: int = 256, pipeline_depth: int = 1,
+                 index_shards: int = 1) -> WorkloadStats:
     """Run a mixed workload on the event simulator; return measured stats.
 
     ``pipeline_depth`` = ops each closed-loop client keeps in flight
     (the (cid, op_id) pipelines of core/sim.py; 1 = the classic
-    one-op-per-client loop the paper figures assume)."""
+    one-op-per-client loop the paper figures assume).  ``index_shards``
+    splits the RACE index into S shard regions spread over the MN ring
+    (heap.py; S=1 = the paper's single-table layout)."""
     t0 = time.perf_counter()
     cfg = DMConfig(num_mns=n_mns, replication=replication,
-                   region_words=1 << 15, regions_per_mn=16)
+                   region_words=1 << 15, regions_per_mn=16,
+                   index_shards=index_shards)
     pool = DMPool(cfg, num_clients=n_clients, seed=seed)
     master = Master(pool)
     clients = [FuseeClient(i, pool, enable_cache=enable_cache,
@@ -86,6 +94,7 @@ def run_workload(*, n_clients: int, n_mns: int, replication: int = 2,
         sched.run_round_robin()
     pool.mn_bytes[:] = 0
     base_cpu = sum(m.cpu_ops for m in pool.mns)
+    base_cpu_per_mn = np.array([m.cpu_ops for m in pool.mns], np.int64)
 
     kinds = list(mix.keys())
     probs = np.array([mix[k] for k in kinds], float)
@@ -119,6 +128,8 @@ def run_workload(*, n_clients: int, n_mns: int, replication: int = 2,
         cnt[r.kind] = cnt.get(r.kind, 0) + 1
     n = max(len(recs), 1)
     alloc_rpcs = sum(m.cpu_ops for m in pool.mns) - base_cpu
+    cpu_per_mn = np.array([m.cpu_ops for m in pool.mns], np.int64) \
+        - base_cpu_per_mn
     return WorkloadStats(
         n_ops=len(recs),
         rtts_by_kind={k: rtts[k] / cnt[k] for k in rtts},
@@ -126,6 +137,7 @@ def run_workload(*, n_clients: int, n_mns: int, replication: int = 2,
         mix={k: cnt[k] / n for k in cnt},
         mn_bytes_per_op=pool.mn_bytes / n,
         alloc_rpcs_per_op=alloc_rpcs / n,
+        mn_alloc_rpcs_per_op=cpu_per_mn / n,
         wall_s=time.perf_counter() - t0,
     )
 
@@ -143,7 +155,12 @@ def throughput_mops(stats: WorkloadStats, *, n_clients: int,
     if busiest > 0:
         nic_cap = (paper.link_gbps * 1e9 / 8) / busiest
     cpu_cap = np.inf
-    if stats.alloc_rpcs_per_op > 0:
+    if stats.mn_alloc_rpcs_per_op is not None:
+        # per-MN weak cores: the cap binds at the busiest MN's share
+        busiest_alloc = stats.mn_alloc_rpcs_per_op.max()
+        if busiest_alloc > 0:
+            cpu_cap = paper.mn_alloc_ops_per_s / busiest_alloc
+    elif stats.alloc_rpcs_per_op > 0:
         cpu_cap = paper.mn_alloc_ops_per_s / stats.alloc_rpcs_per_op
     overall = min(client_cap, nic_cap, cpu_cap)
     return {"mops": overall / 1e6, "latency_us": avg_rtts * paper.rtt_us,
@@ -177,7 +194,7 @@ class FleetStats(WorkloadStats):
 
 
 def fleet_dmconfig(n_clients: int, n_keys: int, *, n_mns: int = 4,
-                   replication: int = 2) -> DMConfig:
+                   replication: int = 2, index_shards: int = 1) -> DMConfig:
     """Size a DMConfig for a fleet: index slots ≥ 4x keys, meta region
     covering every client's 64 metadata words, and ≥ 4 blocks of slab
     headroom per client."""
@@ -192,7 +209,8 @@ def fleet_dmconfig(n_clients: int, n_keys: int, *, n_mns: int = 4,
     regions_per_mn = max(8, -(-4 * n_clients // (bpr * n_mns)) + 1)
     return DMConfig(num_mns=n_mns, replication=replication,
                     region_words=region_words, block_words=block_words,
-                    regions_per_mn=regions_per_mn, index_buckets=buckets)
+                    regions_per_mn=regions_per_mn, index_buckets=buckets,
+                    index_shards=index_shards)
 
 
 def run_fleet_workload(*, n_clients: int, n_mns: int = 4,
@@ -231,6 +249,7 @@ def run_fleet_workload(*, n_clients: int, n_mns: int = 4,
     fleet.run()
     pool.mn_bytes[:] = 0
     base_cpu = sum(m.cpu_ops for m in pool.mns)
+    base_cpu_per_mn = np.array([m.cpu_ops for m in pool.mns], np.int64)
     mark = len(sched.history)
 
     # per-client op plans, drawn from the seeded workload stream
@@ -294,6 +313,10 @@ def run_fleet_workload(*, n_clients: int, n_mns: int = 4,
         mix={k: float((ks == k).sum()) / n for k in np.unique(ks)},
         mn_bytes_per_op=pool.mn_bytes / n,
         alloc_rpcs_per_op=(sum(m.cpu_ops for m in pool.mns) - base_cpu) / n,
+        mn_alloc_rpcs_per_op=(
+            np.array([m.cpu_ops for m in pool.mns], np.int64)
+            - np.pad(base_cpu_per_mn,          # MNs may have joined mid-run
+                     (0, len(pool.mns) - len(base_cpu_per_mn)))) / n,
         wall_s=time.perf_counter() - t0,
         lat_p50_us=float(np.percentile(lat, 50)) * PAPER.rtt_us,
         lat_p99_us=float(np.percentile(lat, 99)) * PAPER.rtt_us,

@@ -62,6 +62,19 @@ def summarize(name: str, rows) -> str:
         sp_p = f[("A", 128, "fusee")] / max(f[("A", 128, "pdpm")], 1e-9)
         return (f"YCSB-A@128: fusee={f[('A', 128, 'fusee')]:.2f}Mops "
                 f"{sp_c:.1f}x-clover {sp_p:.1f}x-pdpm")
+    if name == "fig14_mn_scale":
+        f = {(r["ycsb"], r["shards"], r["mns"]): r["mops"] for r in rows}
+        s = f[("A", 8, 8)] / max(f[("A", 8, 2)], 1e-9)
+        flat = f[("A", 1, 8)] / max(f[("A", 1, 2)], 1e-9)
+        return (f"YCSB-A 2->8 MNs: S=8 {s:.1f}x scaling "
+                f"(S=1 baseline {flat:.2f}x)")
+    if name == "elastic_timeline":
+        ev = {r["window"]: r for r in rows}
+        worst = min((r["ok_frac"] for r in rows if r["ops_done"]),
+                    default=0.0)
+        return (f"{len(rows) - 1} windows, 2->4->3 MNs online; "
+                f"min ok_frac {worst:.2f}, final migrations "
+                f"{ev['final']['migrating_regions']}")
     if name == "tab1_recovery":
         t = {r["step"]: r for r in rows}
         return (f"total={t['total']['ms']:.1f}ms "
@@ -97,6 +110,24 @@ def validate_claims(rows):
         spp = f13[("A", 128, "fusee")] / max(f13[("A", 128, "pdpm")], 1e-9)
         checks.append(("fusee >> pdpm @128 clients (paper: 117x)",
                        spp >= 20.0, f"{spp:.0f}x"))
+    f14 = {(r.get("ycsb"), r.get("shards"), r.get("mns")): r["mops"]
+           for r in rows if r.get("bench") == "fig14"}
+    if f14:
+        sp = f14[("A", 8, 8)] / max(f14[("A", 8, 2)], 1e-9)
+        checks.append(("sharded index scales with MNs (>=1.5x, 2->8 MNs, S=8)",
+                       sp >= 1.5, f"{sp:.1f}x"))
+    el = [r for r in rows if r.get("bench") == "elastic"
+          and r.get("window") != "final"]
+    if el:
+        alive = min((r["ok_frac"] for r in el if r["ops_done"]),
+                    default=0.0)
+        fin = [r for r in rows if r.get("bench") == "elastic"
+               and r.get("window") == "final"]
+        checks.append(("store stays available through add/remove MN",
+                       alive > 0.9 and bool(fin)
+                       and all(r["ops_done"] > 0 for r in el)
+                       and fin[0]["migrating_regions"] == 0,
+                       f"min ok_frac {alive:.2f}"))
     f19 = [(r["r"], r["system"], r["latency_us"]) for r in rows
            if r.get("bench") == "fig19" and r.get("op") == "update"]
     if f19:

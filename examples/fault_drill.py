@@ -93,11 +93,63 @@ def store_drill():
           f"redo={h.recovery.redone_ops} ops")
 
 
+def elastic_drill():
+    """Online MN scale-out under load: 2 -> 4 MNs while a fleet workload
+    keeps writing.  Index shards re-home by live migration (bulk copy +
+    dual-write window + epoch-bump cutover); nothing acked is lost."""
+    print("\n== elastic drill (2 -> 4 MNs under live load) ==")
+    n_clients = 8
+    cluster = FuseeCluster(DMConfig(num_mns=2, replication=2, index_shards=8,
+                                    region_words=1 << 15, regions_per_mn=8),
+                           num_clients=n_clients, seed=3)
+    fleet = cluster.fleet()
+    sched = cluster.scheduler
+    backends = [cluster.store(c, max_inflight=0).backend
+                for c in range(n_clients)]
+    print(f" index shards: {len(cluster.pool.index_regions)} over "
+          f"{len(cluster.pool.mns)} MNs "
+          f"{dict((g, cluster.pool.placement[g]) for g in cluster.pool.index_regions[:3])}...")
+    futs, k = [], 0
+    added = []
+    while k < 256 or cluster.migrator.busy or sched.has_work():
+        for c in range(n_clients):
+            if k < 256 and sched.inflight(c) < 4:
+                futs.append((k, backends[c].submit_many([Op.put(k, [k])])[0]))
+                k += 1
+        if k >= 64 and len(added) == 0:
+            added.append(cluster.add_mn(wait=False))
+            print(f" MN {added[-1]} joined at op {k} (migration rides the "
+                  f"workload ticks)")
+        if k >= 128 and len(added) == 1:
+            added.append(cluster.add_mn(wait=False))
+            print(f" MN {added[-1]} joined at op {k}")
+        fleet.tick()
+    ok = sum(f.result().status == OK for _, f in futs)
+    print(f" {ok}/{len(futs)} writes OK across both scale-outs, "
+          f"{cluster.migrator.counters['cutovers']} shard cutovers, "
+          f"{cluster.migrator.counters['copied_words']} words copied")
+    reader = cluster.store(1)
+    lost = [kk for kk, f in futs
+            if f.result().status == OK and reader.get(kk) != [kk]]
+    print(f" acked-write loss after migration: {len(lost)} (expect 0)")
+    assert not lost, lost
+    shards_by_mn = {}
+    for g in cluster.pool.index_regions:
+        shards_by_mn.setdefault(cluster.pool.placement[g][0], []).append(g)
+    print(f" shard primaries by MN: "
+          f"{ {m: len(gs) for m, gs in sorted(shards_by_mn.items())} }")
+    print(f" health: {cluster.health().summary()}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-train", action="store_true",
                     help="only run the KV-store drill (CI failure-path smoke)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="also run the online MN scale-out drill")
     args = ap.parse_args()
     if not args.skip_train:
         train_drill()
     store_drill()
+    if args.elastic:
+        elastic_drill()

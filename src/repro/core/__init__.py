@@ -7,8 +7,10 @@ from .client import FuseeClient  # noqa: F401
 from .master import Master, RecoveryStats  # noqa: F401
 from .faults import (ClientCrashed, ClientHealth, ClusterError,  # noqa: F401
                      ClusterHealth, FaultEvent, FaultInjector, FaultPlan,
-                     MNHealth, SchedulerStalled)
+                     InsufficientReplicas, MNHealth, SchedulerStalled)
+from .ring import PlacementDirectory  # noqa: F401
 from .rng import SimRng  # noqa: F401
+from .migrate import MigrationEngine  # noqa: F401
 from .sim import Scheduler, SimTrace, run_ops_concurrently  # noqa: F401
 from .api import KVFuture, KVStore, Op, SimBackend  # noqa: F401
 from .fleet import FleetEngine  # noqa: F401

@@ -264,21 +264,30 @@ class SimBackend:
         return {i: k for (i, k, _ce) in batch}
 
     def _cache_entries(self):
+        """Cache entries eligible for the fused 1-RTT fast path: healthy
+        invalid-ratio AND a current shard version — entries whose index
+        shard migrated since fill are left to the full SEARCH path for
+        revalidation (the keyed-by-shard-epoch cache contract)."""
         thr = self.client.cache_threshold
+        directory = self.client.pool.directory
         return [(k, ce) for k, ce in self.client.cache.items()
-                if ce.invalid_ratio <= thr][:(1 << 24) - 2]
+                if ce.invalid_ratio <= thr
+                and ce.shard_ver == directory.version(ce.region)
+                ][:(1 << 24) - 2]
 
     def _cache_fingerprint(self):
         """Cheap dirty signal for the shadow memo: every cache mutation in
         client.py either changes the entry count or bumps an access /
-        invalid counter.  A (rare) stale hit is safe — op_search_batch
-        re-validates every entry against the heap and falls back."""
+        invalid counter, and every placement change (migration cutover,
+        Alg-3 re-homing) bumps the directory generation.  A (rare) stale
+        hit is safe — op_search_batch re-validates every entry against
+        the heap and falls back."""
         cache = self.client.cache
         acc = inv = 0
         for ce in cache.values():
             acc += ce.access
             inv += ce.invalid
-        return (len(cache), acc, inv)
+        return (len(cache), acc, inv, self.client.pool.directory.gen)
 
     def _shadow_index(self, entries):
         """Build the 32-bit shadow RACE index over the cache (vectorized;

@@ -81,6 +81,14 @@ class CacheEntry:
     slot_val: int
     access: int = 0
     invalid: int = 0
+    # The key's index shard region and its placement-directory version at
+    # fill time (§4.6 cache + elasticity): after the shard migrates or is
+    # re-homed by recovery, the entry is no longer trusted for the 1-RTT
+    # fast path until a full SEARCH revalidates it under the new
+    # placement.  ``region`` is cached so the API layer's shadow-probe
+    # eligibility filter never re-hashes keys to shards.
+    region: int = 0
+    shard_ver: int = 0
 
     @property
     def invalid_ratio(self) -> float:
@@ -123,8 +131,22 @@ class FuseeClient:
     def r(self) -> int:
         return len(self.pool.placement[INDEX_REGION])
 
-    def _slot_verb_read_primary(self, off: int) -> Verb:
-        return Verb("read", region=INDEX_REGION, replica=0, off=off, n=1)
+    def _index_region(self, key: int) -> int:
+        """Shard routing: the index region holding this key's buckets (a
+        pure key hash over the S shard regions; S=1 -> INDEX_REGION)."""
+        return self.pool.index_region_of(key)
+
+    def _shard_ver(self, region: int) -> int:
+        return self.pool.directory.version(region)
+
+    def _cache_fresh(self, ce: CacheEntry, region: int) -> bool:
+        """A cache entry is trusted for the 1-RTT fast path only while its
+        shard's placement version is unchanged (keyed-by-shard-epoch cache
+        contract; a migrated shard forces one full SEARCH revalidation)."""
+        return ce.shard_ver == self._shard_ver(region)
+
+    def _slot_verb_read_primary(self, region: int, off: int) -> Verb:
+        return Verb("read", region=region, replica=0, off=off, n=1)
 
     def _obj_region_replicas(self, region: int) -> int:
         return len(self.pool.placement[region])
@@ -229,26 +251,30 @@ class FuseeClient:
                 for i in range(self._obj_region_replicas(region))]
 
     # ------------------------------------------------- SNAPSHOT WRITE (Alg 1)
-    def _snapshot_write(self, slot_off: int, v_old: int, v_new: int,
-                        obj_ptr: int, obj_sc: int, prev_ptr: int):
+    def _snapshot_write(self, region: int, slot_off: int, v_old: int,
+                        v_new: int, obj_ptr: int, obj_sc: int, prev_ptr: int):
         """Returns (status, rule, committed_value_now_in_primary_or_None).
 
-        ``obj_ptr/obj_sc/prev_ptr`` identify this writer's object so the
-        commit (phase 3) and loser used-bit reset target the embedded log.
+        ``region`` is the key's index shard (shard routing); the whole
+        round — backup broadcast, rule 3 check, primary CAS, fail path —
+        addresses that shard's replicas.  ``obj_ptr/obj_sc/prev_ptr``
+        identify this writer's object so the commit (phase 3) and loser
+        used-bit reset target the embedded log.
         """
         if self.replication_mode == "cr":
-            return (yield from self._cr_write(slot_off, v_old, v_new))
-        r = self.r
+            return (yield from self._cr_write(region, slot_off, v_old, v_new))
+        r = len(self.pool.placement[region])   # this shard's replica count
         extra = 0
         if r == 1:
             # Degenerate: no backups; CAS primary directly; the log commit is
             # skipped (§6.1, single-index-replica comparison mode).
-            res = yield Phase([Verb("cas", region=INDEX_REGION, replica=0,
+            res = yield Phase([Verb("cas", region=region, replica=0,
                                     off=slot_off, exp=v_old, new=v_new)],
                               label="4:cas_primary")
             if res[0] is None:
-                return (yield from self._fail_path(slot_off, v_old, v_new,
-                                                   obj_ptr, obj_sc, prev_ptr))
+                return (yield from self._fail_path(region, slot_off, v_old,
+                                                   v_new, obj_ptr, obj_sc,
+                                                   prev_ptr))
             if int(res[0]) == int(v_old):
                 return OK, R1, v_new
             # lost the race; linearize just before the winner
@@ -257,7 +283,7 @@ class FuseeClient:
             return OK, LOSE, int(res[0])
 
         # Phase 2: broadcast CAS to all backups (Alg 1, line 7)
-        res = yield Phase([Verb("cas", region=INDEX_REGION, replica=i,
+        res = yield Phase([Verb("cas", region=region, replica=i,
                                 off=slot_off, exp=v_old, new=v_new)
                            for i in range(1, r)], label="2:cas_backups")
         v_list = [None if v is None else
@@ -266,7 +292,7 @@ class FuseeClient:
         win = evaluate_rules_pure(v_list, v_new)
         if win == "NEED_CHECK":
             # Rule 3 pre-check (Alg 2, line 12): has the primary moved?
-            chk = yield Phase([self._slot_verb_read_primary(slot_off)],
+            chk = yield Phase([self._slot_verb_read_primary(region, slot_off)],
                               label="rule3_check")
             if chk[0] is None:
                 win = FAILV
@@ -278,7 +304,7 @@ class FuseeClient:
                 win = LOSE
 
         if win == FAILV:
-            return (yield from self._fail_path(slot_off, v_old, v_new,
+            return (yield from self._fail_path(region, slot_off, v_old, v_new,
                                                obj_ptr, obj_sc, prev_ptr))
 
         if win in (R1, R2, R3):
@@ -287,16 +313,17 @@ class FuseeClient:
             # backups in the same doorbell batch.
             verbs = self._commit_log_verbs(obj_ptr, obj_sc, v_old)
             if win in (R2, R3):
-                verbs += [Verb("cas", region=INDEX_REGION, replica=i + 1,
+                verbs += [Verb("cas", region=region, replica=i + 1,
                                off=slot_off, exp=v_list[i], new=v_new)
                           for i in range(r - 1) if v_list[i] != int(v_new)]
             yield Phase(verbs, label="3:commit+fix")
-            res = yield Phase([Verb("cas", region=INDEX_REGION, replica=0,
+            res = yield Phase([Verb("cas", region=region, replica=0,
                                     off=slot_off, exp=v_old, new=v_new)],
                               label="4:cas_primary")
             if res[0] is None:
-                return (yield from self._fail_path(slot_off, v_old, v_new,
-                                                   obj_ptr, obj_sc, prev_ptr))
+                return (yield from self._fail_path(region, slot_off, v_old,
+                                                   v_new, obj_ptr, obj_sc,
+                                                   prev_ptr))
             return OK, win, v_new
 
         if win == FINISH:
@@ -310,14 +337,16 @@ class FuseeClient:
             if self.notified_prepare or polls >= MAX_LOSE_POLLS:
                 # membership change, or the winner is taking suspiciously
                 # long (crashed mid-commit?): escalate to the master
-                return (yield from self._fail_path(slot_off, v_old, v_new,
-                                                   obj_ptr, obj_sc, prev_ptr))
+                return (yield from self._fail_path(region, slot_off, v_old,
+                                                   v_new, obj_ptr, obj_sc,
+                                                   prev_ptr))
             polls += 1
-            chk = yield Phase([self._slot_verb_read_primary(slot_off)],
+            chk = yield Phase([self._slot_verb_read_primary(region, slot_off)],
                               label="lose_poll")
             if chk[0] is None:
-                return (yield from self._fail_path(slot_off, v_old, v_new,
-                                                   obj_ptr, obj_sc, prev_ptr))
+                return (yield from self._fail_path(region, slot_off, v_old,
+                                                   v_new, obj_ptr, obj_sc,
+                                                   prev_ptr))
             if int(chk[0][0]) != int(v_old):
                 break
         # reset our used bit before returning so recovery never redoes a
@@ -326,15 +355,15 @@ class FuseeClient:
                     label="loser_reset")
         return OK, LOSE, int(chk[0][0])
 
-    def _cr_write(self, slot_off: int, v_old: int, v_new: int):
+    def _cr_write(self, region: int, slot_off: int, v_old: int, v_new: int):
         """FUSEE-CR baseline (§6.1): sequentially CAS every replica.
 
         One CAS per RTT, primary last — latency grows linearly with r.
         """
-        r = self.r
+        r = len(self.pool.placement[region])
         for i in range(r - 1, -1, -1):
             while True:
-                res = yield Phase([Verb("cas", region=INDEX_REGION, replica=i,
+                res = yield Phase([Verb("cas", region=region, replica=i,
                                         off=slot_off, exp=v_old, new=v_new)],
                                   label=f"cr:cas_{i}")
                 if res[0] is None:
@@ -367,12 +396,13 @@ class FuseeClient:
         return verbs
 
     # ------------------------------------------------------- failure path
-    def _fail_path(self, slot_off: int, v_old: int, v_new: int,
+    def _fail_path(self, region: int, slot_off: int, v_old: int, v_new: int,
                    obj_ptr: int, obj_sc: int, prev_ptr: int):
         """Alg 4 lines 34-38: ask the master, retry if our write is too new."""
         while True:
             ans = yield MasterCall("fail_query", payload=dict(
-                slot_off=slot_off, v_old=v_old, v_new=v_new, cid=self.cid))
+                region=region, slot_off=slot_off, v_old=v_old, v_new=v_new,
+                cid=self.cid))
             if ans is None:
                 # master has not yet detected/recovered; wait a beat
                 yield Phase([], label="wait_master")
@@ -393,18 +423,20 @@ class FuseeClient:
 
     # ------------------------------------------------------------ index read
     def _read_index_for(self, key: int, extra_verbs: List[Verb]):
-        """Phase 1 helper: read both candidate buckets of the primary index
-        (+ any op-specific verbs folded into the same doorbell batch).
+        """Phase 1 helper: read both candidate buckets of the key's index
+        shard (+ any op-specific verbs folded into the same doorbell
+        batch).  Shard routing happens here for every op's index read.
 
         Returns (bucket_words, base_offs, extra_results).
         """
         cfg = self.cfg
+        region = self._index_region(key)
         b1, b2 = race.bucket_pair(key, cfg.index_buckets)
         o1 = race.bucket_off(b1, cfg.slots_per_bucket)
         o2 = race.bucket_off(b2, cfg.slots_per_bucket)
-        verbs = [Verb("read", region=INDEX_REGION, replica=0, off=o1,
+        verbs = [Verb("read", region=region, replica=0, off=o1,
                       n=cfg.slots_per_bucket),
-                 Verb("read", region=INDEX_REGION, replica=0, off=o2,
+                 Verb("read", region=region, replica=0, off=o2,
                       n=cfg.slots_per_bucket)] + extra_verbs
         res = yield Phase(verbs, label="1:read_index")
         if res[0] is None or res[1] is None:
@@ -454,14 +486,17 @@ class FuseeClient:
     # ------------------------------------------------------------- SEARCH
     def op_search(self, key: int):
         rtts = [0]
+        region = self._index_region(key)
         ce = self.cache.get(key) if self.enable_cache else None
-        use_cache = ce is not None and ce.invalid_ratio <= self.cache_threshold
+        use_cache = (ce is not None
+                     and ce.invalid_ratio <= self.cache_threshold
+                     and self._cache_fresh(ce, region))
         if ce is not None:
             ce.access += 1
         if use_cache:
             # 1 RTT fast path: read the cached slot + the cached KV in parallel
             sv = ce.slot_val
-            verbs = [Verb("read", region=INDEX_REGION, replica=0,
+            verbs = [Verb("read", region=region, replica=0,
                           off=ce.slot_off, n=1),
                      self._read_obj_verb(L.slot_ptr(sv), L.slot_size_class(sv))]
             res = yield Phase(verbs, label="1:cached_read")
@@ -494,6 +529,7 @@ class FuseeClient:
                 if self.enable_cache:
                     e = self.cache.setdefault(key, CacheEntry(slot_off, slot_val))
                     e.slot_off, e.slot_val = slot_off, slot_val
+                    e.region, e.shard_ver = region, self._shard_ver(region)
                 return OpResult(OK, value=obj["value"], rtts=2)
             if not stale:
                 return OpResult(NOT_FOUND, rtts=2)
@@ -517,8 +553,8 @@ class FuseeClient:
         """
         verbs = []
         for (key, slot_off, slot_val) in items:
-            verbs.append(Verb("read", region=INDEX_REGION, replica=0,
-                              off=slot_off, n=1))
+            verbs.append(Verb("read", region=self._index_region(key),
+                              replica=0, off=slot_off, n=1))
             verbs.append(self._read_obj_verb(L.slot_ptr(slot_val),
                                              L.slot_size_class(slot_val)))
         res = yield Phase(verbs, label="1:batch_cached_read")
@@ -544,34 +580,58 @@ class FuseeClient:
         return OpResult(OK, value=out, rtts=1)
 
     def _search_degraded(self, key: int):
-        """§5.2 READ under a crashed primary: read all alive backups; if they
-        agree, return that value; otherwise ask the master."""
+        """§5.2 READ when the primary read failed: read all replicas of
+        the key's shard; if they agree, use that value; otherwise ask the
+        master.
+
+        Every replica returning FAIL does NOT mean the key is absent — it
+        almost always means the lease epoch moved mid-flight (MN recovery
+        or a migration cutover committed between issue and execution, and
+        several can land back-to-back during a scale-out), so the phase
+        is re-issued under the committed epoch rather than concluding
+        NOT_FOUND for a key that exists."""
         cfg = self.cfg
+        region = self._index_region(key)
         b1, b2 = race.bucket_pair(key, cfg.index_buckets)
         offs = [race.bucket_off(b1, cfg.slots_per_bucket),
                 race.bucket_off(b2, cfg.slots_per_bucket)]
-        r = self.r
-        verbs = [Verb("read", region=INDEX_REGION, replica=i, off=o,
-                      n=cfg.slots_per_bucket)
-                 for o in offs for i in range(r)]
-        res = yield Phase(verbs, label="deg:read_all")
-        per_bucket = {}
-        for j, o in enumerate(offs):
-            reps = [res[j * r + i] for i in range(r)]
-            alive = [list(x) for x in reps if x is not None]
-            if not alive:
-                return OpResult(NOT_FOUND, rtts=2)
-            if all(a == alive[0] for a in alive):
-                per_bucket[o] = alive[0]
-            else:
-                ans = yield MasterCall("bucket_query", payload=dict(off=o))
-                per_bucket[o] = list(ans)
-        buckets = [per_bucket[offs[0]], per_bucket[offs[1]]]
-        cands = self._locate(key, buckets, offs)
-        slot_off, slot_val, obj, _stale = yield from self._verify_candidates(key, cands)
-        if obj is None:
-            return OpResult(NOT_FOUND, rtts=3)
-        return OpResult(OK, value=obj["value"], rtts=3)
+        attempts = 0
+        while True:
+            attempts += 1
+            r = len(self.pool.placement[region])  # re-read: may change
+            verbs = [Verb("read", region=region, replica=i, off=o,
+                          n=cfg.slots_per_bucket)
+                     for o in offs for i in range(r)]
+            res = yield Phase(verbs, label="deg:read_all")
+            per_bucket, bounced = {}, False
+            for j, o in enumerate(offs):
+                reps = [res[j * r + i] for i in range(r)]
+                alive = [list(x) for x in reps if x is not None]
+                if not alive:
+                    bounced = True
+                    break
+                if all(a == alive[0] for a in alive):
+                    per_bucket[o] = alive[0]
+                else:
+                    ans = yield MasterCall("bucket_query",
+                                           payload=dict(off=o, region=region))
+                    per_bucket[o] = list(ans)
+            if bounced:
+                if attempts > MAX_OP_RETRIES:
+                    # genuinely unreachable (> r-1 failures): best effort
+                    return OpResult(NOT_FOUND, rtts=2)
+                yield MasterCall("fail_report", payload=dict(cid=self.cid))
+                yield Phase([], label="wait_membership")
+                continue
+            buckets = [per_bucket[offs[0]], per_bucket[offs[1]]]
+            cands = self._locate(key, buckets, offs)
+            slot_off, slot_val, obj, stale = \
+                yield from self._verify_candidates(key, cands)
+            if obj is None:
+                if stale and attempts <= MAX_OP_RETRIES:
+                    continue             # mid-write / bounced object read
+                return OpResult(NOT_FOUND, rtts=3)
+            return OpResult(OK, value=obj["value"], rtts=3)
 
     # ----------------------------------------------------------- write ops
     def _prepare_object(self, key: int, value, opcode: int):
@@ -593,13 +653,19 @@ class FuseeClient:
             return OpResult(FULL)
         ptr, sc, prev_ptr, words = prep
         fp = L.fingerprint(key)
+        region = self._index_region(key)
         v_new = int(L.pack_slot(fp, sc, ptr))
         retries = 0
         while True:
             # Phase 1: write KV (all replicas) + read both index buckets
             out = yield from self._read_index_for(key, self._write_obj_verbs(ptr, words))
-            buckets, base_offs, _ = out
-            if buckets is None:
+            buckets, base_offs, wres = out
+            if buckets is None or any(w is None for w in wres):
+                # index read or an object-replica write bounced: a dead MN
+                # (crash-stop) or a stale lease epoch (membership change /
+                # migration cutover committed mid-phase).  Acking with a
+                # replica hole would lose the write on the next re-homing
+                # — report, wait for the membership commit, start over.
                 yield MasterCall("fail_report", payload=dict(cid=self.cid))
                 yield Phase([], label="wait_membership")
                 continue
@@ -626,7 +692,7 @@ class FuseeClient:
                     return OpResult(FULL)
                 target, v_old = empty, 0
             status, rule, fin = yield from self._snapshot_write(
-                target, v_old, v_new, ptr, sc, prev_ptr)
+                region, target, v_old, v_new, ptr, sc, prev_ptr)
             if status == "RETRY":
                 retries += 1
                 if retries > MAX_OP_RETRIES:
@@ -653,7 +719,9 @@ class FuseeClient:
             if bg:
                 yield Phase(bg, label="bg:free_old", background=True)
             if self.enable_cache:
-                self.cache[key] = CacheEntry(target, v_new, access=1)
+                self.cache[key] = CacheEntry(target, v_new, access=1,
+                                             region=region,
+                                             shard_ver=self._shard_ver(region))
             return OpResult(OK, rule=rule)
 
     def op_update(self, key: int, value):
@@ -662,10 +730,13 @@ class FuseeClient:
             return OpResult(FULL)
         ptr, sc, prev_ptr, words = prep
         fp = L.fingerprint(key)
+        region = self._index_region(key)
         v_new = int(L.pack_slot(fp, sc, ptr))
         retries = 0
         ce = self.cache.get(key) if self.enable_cache else None
-        use_cache = ce is not None and ce.invalid_ratio <= self.cache_threshold
+        use_cache = (ce is not None
+                     and ce.invalid_ratio <= self.cache_threshold
+                     and self._cache_fresh(ce, region))
         if ce is not None:
             ce.access += 1
         while True:
@@ -673,11 +744,17 @@ class FuseeClient:
             if use_cache and retries == 0:
                 sv = ce.slot_val
                 verbs = (self._write_obj_verbs(ptr, words)
-                         + [Verb("read", region=INDEX_REGION, replica=0,
+                         + [Verb("read", region=region, replica=0,
                                  off=ce.slot_off, n=1),
                             self._read_obj_verb(L.slot_ptr(sv), L.slot_size_class(sv))])
                 res = yield Phase(verbs, label="1:write+cached_read")
                 nrep = self._obj_region_replicas(L.ptr_region(ptr))
+                if any(w is None for w in res[:nrep]):
+                    # an object-replica write bounced (dead MN / stale
+                    # epoch): never ack with a replica hole — see op_insert
+                    yield MasterCall("fail_report", payload=dict(cid=self.cid))
+                    yield Phase([], label="wait_membership")
+                    continue
                 slot_raw, kv_raw = res[nrep], res[nrep + 1]
                 if slot_raw is not None and kv_raw is not None:
                     cur = int(slot_raw[0])
@@ -702,8 +779,8 @@ class FuseeClient:
             if target is None:
                 extra = self._write_obj_verbs(ptr, words) if (not use_cache or retries > 0) else []
                 out = yield from self._read_index_for(key, extra)
-                buckets, base_offs, _ = out
-                if buckets is None:
+                buckets, base_offs, wres = out
+                if buckets is None or any(w is None for w in wres):
                     yield MasterCall("fail_report", payload=dict(cid=self.cid))
                     yield Phase([], label="wait_membership")
                     continue
@@ -721,7 +798,7 @@ class FuseeClient:
                     return OpResult(NOT_FOUND)
                 target, v_old = slot_off2, slot_val2
             status, rule, fin = yield from self._snapshot_write(
-                target, v_old, v_new, ptr, sc, prev_ptr)
+                region, target, v_old, v_new, ptr, sc, prev_ptr)
             if status == "RETRY":
                 retries += 1
                 use_cache = False
@@ -739,6 +816,7 @@ class FuseeClient:
             if self.enable_cache:
                 e = self.cache.setdefault(key, CacheEntry(target, v_new))
                 e.slot_off, e.slot_val = target, v_new
+                e.region, e.shard_ver = region, self._shard_ver(region)
             return OpResult(OK, rule=rule)
 
     def op_delete(self, key: int):
@@ -748,11 +826,12 @@ class FuseeClient:
         if prep is None:
             return OpResult(FULL)
         ptr, sc, prev_ptr, words = prep
+        region = self._index_region(key)
         retries = 0
         while True:
             out = yield from self._read_index_for(key, self._write_obj_verbs(ptr, words))
-            buckets, base_offs, _ = out
-            if buckets is None:
+            buckets, base_offs, wres = out
+            if buckets is None or any(w is None for w in wres):
                 yield MasterCall("fail_report", payload=dict(cid=self.cid))
                 yield Phase([], label="wait_membership")
                 continue
@@ -768,7 +847,7 @@ class FuseeClient:
                             label="abort_reset", background=True)
                 return OpResult(NOT_FOUND)
             status, rule, fin = yield from self._snapshot_write(
-                slot_off2, slot_val2, 0, ptr, sc, prev_ptr)
+                region, slot_off2, slot_val2, 0, ptr, sc, prev_ptr)
             if status == "RETRY":
                 retries += 1
                 if retries > MAX_OP_RETRIES:

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Iterator, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, Iterator, List, Optional, Tuple
 
 from .master import RecoveryStats
 
@@ -54,8 +54,15 @@ class SchedulerStalled(ClusterError):
     legal protocol state."""
 
 
+class InsufficientReplicas(ClusterError):
+    """``remove_mn`` rejected: draining the node would leave fewer ring
+    members than the replication factor, so some region could not keep r
+    replicas.  The membership is unchanged — add an MN first."""
+
+
 # ------------------------------------------------------------- fault plans
-_ACTIONS = ("crash_client", "crash_mn", "recover_client")
+_ACTIONS = ("crash_client", "crash_mn", "recover_client",
+            "add_mn", "remove_mn")
 
 
 @dataclass(frozen=True)
@@ -117,11 +124,26 @@ class FaultPlan:
                                     after_ops=after_ops,
                                     reassign_to=reassign_to))
 
+    def add_mn(self, *, at_tick: Optional[int] = None,
+               after_ops: Optional[int] = None) -> "FaultPlan":
+        """Membership event: join a fresh MN mid-run; shard migrations
+        ride the workload's scheduler ticks (core/migrate.py)."""
+        return self._add(FaultEvent("add_mn", -1, at_tick=at_tick,
+                                    after_ops=after_ops))
+
+    def remove_mn(self, mid: int, *, at_tick: Optional[int] = None,
+                  after_ops: Optional[int] = None) -> "FaultPlan":
+        """Membership event: gracefully drain + retire an MN mid-run."""
+        return self._add(FaultEvent("remove_mn", mid, at_tick=at_tick,
+                                    after_ops=after_ops))
+
     @staticmethod
     def storm(rng, *, clients, mns: int, replication: int = 2,
               n_client_crashes: int = 2, n_mn_crashes: int = 1,
               first_op: int = 8, spacing: int = 10,
-              recover_delay: int = 8) -> "FaultPlan":
+              recover_delay: int = 8, n_add_mns: int = 0,
+              remove_added: bool = False,
+              crash_during_migration: bool = False) -> "FaultPlan":
         """A randomized fault storm, fully determined by ``rng`` (pass a
         ``SimRng`` substream — ``cluster.rng.stream('faults')`` — so the
         storm replays bit-identically from the run seed).
@@ -132,7 +154,15 @@ class FaultPlan:
         up to ``n_mn_crashes`` MNs, capped at ``mns - replication`` so no
         region ever loses all its replicas.  Safety of the caps — not the
         timing — is what makes "no acknowledged write is lost" a fair
-        invariant to assert after the storm."""
+        invariant to assert after the storm.
+
+        Membership churn: ``n_add_mns`` joins fresh MNs mid-storm (shard
+        migrations ride the workload ticks); ``remove_added`` drains each
+        added MN again one spacing later (a full scale-out/scale-in
+        cycle across live cutovers); ``crash_during_migration`` crashes
+        one extra original MN two ops after the first join — i.e. while
+        shard copies are in flight — capped so no region can lose all
+        replicas (the post-join member count covers the extra crash)."""
         clients = list(clients)
         n_cc = min(n_client_crashes, max(len(clients) - 1, 0))
         victims = [clients[int(i)] for i in
@@ -157,6 +187,26 @@ class FaultPlan:
             else:
                 plan.crash_mn(target, after_ops=t)
             t += spacing
+        # membership churn rides after the base storm (draws only happen
+        # when requested, so churn-free storms keep their seed sequences)
+        crashed = set(mn_victims)
+        n_removals = n_add_mns if remove_added else 0
+        for i in range(n_add_mns):
+            plan.add_mn(after_ops=t)
+            if crash_during_migration and i == 0:
+                cand = [m for m in range(mns) if m not in crashed]
+                # one extra crash is safe iff the ring keeps >= replication
+                # members after ALL planned churn (adds, this crash, and
+                # any later removals of the added MNs)
+                if cand and (mns + n_add_mns - len(crashed) - 1
+                             - n_removals) >= replication:
+                    vm = cand[int(rng.integers(len(cand)))]
+                    crashed.add(vm)
+                    plan.crash_mn(vm, after_ops=t + 2)
+            t += spacing
+            if remove_added:
+                plan.remove_mn(mns + i, after_ops=t)
+                t += spacing
         return plan
 
     def __iter__(self) -> Iterator[FaultEvent]:
@@ -195,6 +245,10 @@ class FaultInjector:
             self.cluster.crash_client(ev.target)
         elif ev.action == "crash_mn":
             self.cluster.crash_mn(ev.target)
+        elif ev.action == "add_mn":
+            self.cluster.add_mn(wait=False)
+        elif ev.action == "remove_mn":
+            self.cluster.remove_mn(ev.target, wait=False)
         else:
             self.cluster.recover_client(ev.target,
                                         reassign_to_cid=ev.reassign_to)
@@ -209,6 +263,7 @@ class MNHealth:
     primary_regions: int
     hosted_regions: int
     bytes_served: int
+    retired: bool = False       # gracefully removed (remove_mn), not crashed
 
 
 @dataclass
@@ -233,10 +288,16 @@ class ClusterHealth:
     client_recoveries: int = 0
     mn_recoveries: int = 0
     crashed_ops: int = 0
+    migrating_regions: int = 0      # regions inside a live-migration window
+    migrations: List[Dict] = field(default_factory=list)  # per-region detail
 
     @property
     def alive_mns(self) -> int:
         return sum(m.alive for m in self.mns)
+
+    @property
+    def retired_mns(self) -> int:
+        return sum(m.retired for m in self.mns)
 
     @property
     def live_clients(self) -> int:

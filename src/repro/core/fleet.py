@@ -38,7 +38,6 @@ import numpy as np
 from . import codec
 from .api import KVFuture, Op, SimBackend, _fold32
 from .faults import SchedulerStalled
-from .heap import INDEX_REGION
 from .shadow import build_shadow, hash32_np, race_lookup_np
 from .sim import Scheduler
 
@@ -136,8 +135,9 @@ class FleetEngine:
         verbs = [v for (_c, _r, _i, v) in items]
         if kind == "read":
             self.counters["array_calls"] += 1
+            shard_set = pool.index_region_set
             self.counters["index_probe_verbs"] += sum(
-                v.region == INDEX_REGION for v in verbs)
+                v.region in shard_set for v in verbs)
             return pool.read_batch([v.region for v in verbs],
                                    [v.replica for v in verbs],
                                    [v.off for v in verbs],

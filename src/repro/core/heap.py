@@ -17,6 +17,14 @@ Faithfulness notes
 * Memory is organized as 2GB-analogue *regions*, consistent-hashed onto r MNs
   (FaRM-style, §4.4).  A 48-bit pointer names (region, offset) so one pointer
   resolves to all r physical replicas.
+* The hash index is split into ``index_shards`` shard regions (S=1 is the
+  degenerate classic layout).  A key's shard is a pure hash of the key;
+  each shard is a full RACE table placed independently on the ring
+  (core/ring.py) so index traffic and CAS hot words spread across
+  min(S, num_mns) MNs instead of all landing on the same r nodes.
+* Placement is **pinned** in an epoch-versioned ``PlacementDirectory`` and
+  changes only through Alg-3 recovery or the migration engine's cutover
+  (core/migrate.py) — never by recomputing a ring over the alive list.
 """
 from __future__ import annotations
 
@@ -26,6 +34,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from . import layout as L
+from .ring import PlacementDirectory, ring_replicas
 
 
 @dataclass
@@ -38,6 +47,7 @@ class DMConfig:
     index_buckets: int = 256        # RACE: combined-bucket count (power of 2)
     slots_per_bucket: int = 7
     size_classes: int = 6
+    index_shards: int = 1           # S: independent RACE shard regions
     # network model constants live in netmodel.py; kept out of the pool.
 
     @property
@@ -63,9 +73,11 @@ class DMConfig:
         return self.index_buckets * self.slots_per_bucket
 
 
-INDEX_REGION = 0   # replicated hash-index region
+INDEX_REGION = 0   # replicated hash-index region (shard 0; extra shards get
+                   # their own region ids after the initial data regions)
 META_REGION = 1    # per-client metadata (per-size-class list heads)
 FIRST_DATA_REGION = 2
+SHARD_HASH_SEED = 11   # key -> index shard (pure hash, never placement)
 
 META_WORDS_PER_CLIENT = 64  # sc list heads + scratch
 
@@ -83,6 +95,7 @@ class MemoryNode:
         self.mid = mid
         self.cfg = cfg
         self.alive = True
+        self.retired = False            # gracefully removed (not crashed)
         self.regions: Dict[int, np.ndarray] = {}
         # MN-side coarse allocation cursor per primary region (compute-light)
         self.alloc_cursor: Dict[int, int] = {}
@@ -103,39 +116,163 @@ class DMPool:
         self.num_clients = num_clients
         self.mns = [MemoryNode(i, cfg) for i in range(cfg.num_mns)]
         self.epoch = 0
-        # region -> ordered list of MN ids (replica 0 = primary)
-        self.placement: Dict[int, List[int]] = {}
+        # pinned, epoch-versioned region -> ordered MN list (replica 0 =
+        # primary); mutated ONLY by recovery/migration (ring.py)
+        self.directory = PlacementDirectory(cfg.replication,
+                                            list(range(cfg.num_mns)))
+        # regions undergoing live migration: region -> migrate.RegionMigration
+        # (writes to the primary replica are mirrored into the targets —
+        # the dual-write window of the shard migration state machine)
+        self.migrations: Dict[int, object] = {}
         self._place_initial(seed)
         # traffic accounting (bytes in+out per MN) for the network model
         self.mn_bytes = np.zeros(cfg.num_mns, dtype=np.int64)
 
     # ---------------- placement -------------------------------------------
-    def _ring_replicas(self, region_id: int) -> List[int]:
-        """Consistent hashing: region -> r successive MNs on the hash ring."""
-        alive = [m.mid for m in self.mns]
-        start = L.hash64(region_id, seed=3) % len(alive)
-        r = min(self.cfg.replication, len(alive))
-        return [alive[(start + i) % len(alive)] for i in range(r)]
+    @property
+    def placement(self) -> Dict[int, List[int]]:
+        """The pinned placement table (read-only view; mutate through
+        ``directory.rehome`` / ``recover_mn_placement`` only)."""
+        return self.directory.table
 
     def _place_initial(self, seed: int):
         cfg = self.cfg
-        total_regions = FIRST_DATA_REGION + cfg.num_mns * cfg.regions_per_mn
-        for g in range(total_regions):
-            reps = self._ring_replicas(g)
-            self.placement[g] = reps
-            for mid in reps:
-                self.mns[mid].host_region(g)
-        self.num_regions = total_regions
+        data_count = cfg.num_mns * cfg.regions_per_mn
+        self.data_regions: List[int] = list(
+            range(FIRST_DATA_REGION, FIRST_DATA_REGION + data_count))
+        # extra index shards live after the initial data regions so the
+        # S=1 layout is bit-identical to the classic single-table one
+        self.index_regions: List[int] = [INDEX_REGION] + [
+            FIRST_DATA_REGION + data_count + i
+            for i in range(cfg.index_shards - 1)]
+        self.index_region_set = frozenset(self.index_regions)
+        self.num_regions = FIRST_DATA_REGION + data_count \
+            + (cfg.index_shards - 1)
+        shard_placement = self.desired_index_placement()
+        for g in range(FIRST_DATA_REGION, FIRST_DATA_REGION + data_count):
+            self._host_all(g, self.directory.place(g))
+        self._host_all(META_REGION, self.directory.place(META_REGION))
+        for g in self.index_regions:
+            self._host_all(g, self.directory.pin(g, shard_placement[g]))
+
+    def _host_all(self, region: int, reps: List[int]):
+        for mid in reps:
+            if region not in self.mns[mid].regions:
+                self.mns[mid].host_region(region)
+
+    def desired_index_placement(self) -> Dict[int, List[int]]:
+        """Where the index shards *should* live on the current membership
+        ring: shard 0 at the classic hash start (S=1 layout unchanged),
+        shard s offset by s so S shards spread over min(S, N) MNs.  The
+        migration engine diffs this against the pinned table to plan
+        shard-at-a-time re-homing after add_mn/remove_mn."""
+        members = self.directory.members
+        n = len(members)
+        start0 = L.hash64(INDEX_REGION, seed=3) % n
+        return {g: ring_replicas(g, members, self.cfg.replication,
+                                 start=(start0 + s) % n)
+                for s, g in enumerate(self.index_regions)}
+
+    # ---------------- key -> shard routing ---------------------------------
+    @property
+    def num_shards(self) -> int:
+        return len(self.index_regions)
+
+    def shard_of(self, key: int) -> int:
+        """Index shard of a key: a pure key hash, independent of placement
+        (re-homing a shard never re-shards keys)."""
+        if len(self.index_regions) == 1:
+            return 0
+        return L.hash64(key, seed=SHARD_HASH_SEED) % len(self.index_regions)
+
+    def index_region_of(self, key: int) -> int:
+        return self.index_regions[self.shard_of(key)]
 
     def replicas(self, region_id: int) -> List[int]:
-        return self.placement[region_id]
+        return self.directory.table[region_id]
 
     def primary_mn(self, region_id: int) -> int:
-        return self.placement[region_id][0]
+        return self.directory.table[region_id][0]
 
     def data_regions_of_mn(self, mid: int) -> List[int]:
-        return [g for g in range(FIRST_DATA_REGION, self.num_regions)
-                if self.placement[g][0] == mid]
+        return [g for g in self.data_regions
+                if self.directory.table[g][0] == mid]
+
+    # ---------------- elastic membership (migration engine hooks) ----------
+    def add_node(self) -> int:
+        """Register a fresh (empty) MN and commit it to the membership
+        ring.  Region placement does NOT change here — the migration
+        engine re-homes shards and grants the node fresh data regions."""
+        mid = len(self.mns)
+        self.mns.append(MemoryNode(mid, self.cfg))
+        self.mn_bytes = np.concatenate(
+            [self.mn_bytes, np.zeros(1, np.int64)])
+        self.directory.add_member(mid)
+        return mid
+
+    def add_data_regions(self, mid: int, count: Optional[int] = None
+                         ) -> List[int]:
+        """Grant ``count`` fresh data regions primaried on ``mid`` (ring
+        successors as backups).  Fresh regions are empty, so no copy or
+        dual-write window is needed — they are pinned and hosted at once."""
+        cfg = self.cfg
+        count = cfg.regions_per_mn if count is None else count
+        members = self.directory.members
+        pos = members.index(mid)
+        r = min(cfg.replication, len(members))
+        new: List[int] = []
+        for _ in range(count):
+            g = self.num_regions
+            self.num_regions += 1
+            reps = [members[(pos + i) % len(members)] for i in range(r)]
+            self.directory.pin(g, reps)
+            for m in reps:
+                self.mns[m].host_region(g)
+            self.data_regions.append(g)
+            new.append(g)
+        return new
+
+    def retire_node(self, mid: int):
+        """Finalize a graceful remove_mn: the node hosts no regions (the
+        migration engine has re-homed them all) and leaves membership.
+        Retired is distinct from crashed — Alg-3 must not run."""
+        mn = self.mns[mid]
+        assert not mn.regions, f"retire_node({mid}) with hosted regions"
+        mn.retired = True
+        mn.alive = False
+        self.directory.remove_member(mid)
+
+    # ---------------- dual-write mirroring (live migration) ----------------
+    def _mirror(self, region: int, replica: int, off: int, n: int,
+                mem: np.ndarray):
+        """Dual-write window: mutations applied to the *primary* replica of
+        a migrating region are mirrored into every migration target copy,
+        so a write racing the bulk copy is never lost — chunks not yet
+        copied pick it up from the (authoritative) primary later, chunks
+        already copied receive it here."""
+        if replica != 0:
+            return
+        mig = self.migrations.get(region)
+        if mig is None:
+            return
+        src = mem[off:off + n]
+        for mid, arr in mig.targets.items():
+            arr[off:off + n] = src
+            self.mn_bytes[mid] += n * L.WORD
+
+    def _mirror_idx(self, region: int, replica: int, idx: np.ndarray,
+                    mem: np.ndarray):
+        """Batched-verb twin of ``_mirror``: mirror an index array of
+        just-mutated words into the migration targets."""
+        if replica != 0:
+            return
+        mig = self.migrations.get(region)
+        if mig is None:
+            return
+        src = mem[idx]
+        for mid, arr in mig.targets.items():
+            arr[idx] = src
+            self.mn_bytes[mid] += idx.size * L.WORD
 
     # ---------------- verbs -------------------------------------------------
     def _mem(self, region: int, replica: int) -> Optional[np.ndarray]:
@@ -161,6 +298,7 @@ class DMPool:
         w = np.asarray([int(x) & 0xFFFF_FFFF_FFFF_FFFF for x in words], dtype=np.uint64)
         mem[off:off + len(w)] = w
         self.mn_bytes[self.placement[region][replica]] += len(w) * L.WORD
+        self._mirror(region, replica, off, len(w), mem)
         return True
 
     def cas(self, region: int, replica: int, off: int, exp: int, new: int):
@@ -171,6 +309,7 @@ class DMPool:
         old = np.uint64(mem[off])
         if int(old) == int(exp) & 0xFFFF_FFFF_FFFF_FFFF:
             mem[off] = np.uint64(int(new) & 0xFFFF_FFFF_FFFF_FFFF)
+            self._mirror(region, replica, off, 1, mem)
         self.mn_bytes[self.placement[region][replica]] += 2 * L.WORD
         return old
 
@@ -180,6 +319,7 @@ class DMPool:
             return None
         old = int(mem[off])
         mem[off] = np.uint64((old + int(delta)) & 0xFFFF_FFFF_FFFF_FFFF)
+        self._mirror(region, replica, off, 1, mem)
         self.mn_bytes[self.placement[region][replica]] += 2 * L.WORD
         return np.uint64(old)
 
@@ -239,7 +379,9 @@ class DMPool:
                 vals = np.array(
                     [[int(x) & 0xFFFF_FFFF_FFFF_FFFF for x in words_list[i]]
                      for i in sel], np.uint64)
-                mem[offs[sel][:, None] + np.arange(n)] = vals
+                idx = offs[sel][:, None] + np.arange(n)
+                mem[idx] = vals
+                self._mirror_idx(region, replica, idx, mem)
             self.mn_bytes[self.placement[region][replica]] += \
                 n * len(sel) * L.WORD
             for i in sel:
@@ -271,6 +413,8 @@ class DMPool:
                 old = mem[o].copy()
                 hit = old == exps[sel]
                 mem[o[hit]] = news[sel][hit]
+                if hit.any():
+                    self._mirror_idx(region, replica, o[hit], mem)
                 for k, i in enumerate(sel):
                     out[int(i)] = np.uint64(old[k])
             else:                                    # same-word races: serialize
@@ -278,6 +422,7 @@ class DMPool:
                     old = np.uint64(mem[offs[i]])
                     if int(old) == int(exps[i]):
                         mem[offs[i]] = news[i]
+                        self._mirror(region, replica, int(offs[i]), 1, mem)
                     out[int(i)] = old
             self.mn_bytes[self.placement[region][replica]] += \
                 2 * len(sel) * L.WORD
@@ -303,12 +448,14 @@ class DMPool:
             if len(np.unique(o)) == len(o):
                 old = mem[o].copy()
                 mem[o] = old + deltas[sel]           # uint64 wraparound
+                self._mirror_idx(region, replica, o, mem)
                 for k, i in enumerate(sel):
                     out[int(i)] = np.uint64(old[k])
             else:
                 for i in sel:
                     old = np.uint64(mem[offs[i]])
                     mem[offs[i]] = old + deltas[i]
+                    self._mirror(region, replica, int(offs[i]), 1, mem)
                     out[int(i)] = old
             self.mn_bytes[self.placement[region][replica]] += \
                 2 * len(sel) * L.WORD
@@ -333,6 +480,7 @@ class DMPool:
                         rep = self.mns[rep_mid]
                         if rep.alive and g in rep.regions:
                             rep.regions[g][cur] = np.uint64(cid + 1)
+                            self._mirror(g, rep_idx, cur, 1, rep.regions[g])
                     mn.alloc_cursor[g] = cur + 1
                     mn.cpu_ops += 1
                     return g, cur
@@ -344,10 +492,12 @@ class DMPool:
         mn = self.mns[mid]
         if not mn.alive:
             return False
-        for rep_mid in self.placement[region]:
+        for rep_idx, rep_mid in enumerate(self.placement[region]):
             rep = self.mns[rep_mid]
             if rep.alive and region in rep.regions:
                 rep.regions[region][block_idx] = np.uint64(0)
+                self._mirror(region, rep_idx, block_idx, 1,
+                             rep.regions[region])
         mn.cpu_ops += 1
         return True
 
@@ -366,7 +516,9 @@ class DMPool:
         self.mns[mid].alive = False
 
     def recover_mn_placement(self, region: int, new_replicas: List[int]):
-        """Master-side: re-home a region on a new replica set (copies bytes)."""
+        """Master-side: re-home a region on a new replica set (copies bytes).
+        Goes through the directory — the pinned-placement mutation path
+        shared with the migration engine's cutover."""
         src = None
         for mid in self.placement[region]:
             mn = self.mns[mid]
@@ -378,4 +530,4 @@ class DMPool:
             mn = self.mns[mid]
             if region not in mn.regions:
                 mn.regions[region] = src.copy()
-        self.placement[region] = list(new_replicas)
+        self.directory.rehome(region, list(new_replicas))

@@ -22,7 +22,7 @@ from . import layout as L
 from . import race
 from .client import MASTER_COMMIT_MARK, FuseeClient
 from .events import OK, OpResult
-from .heap import (BAT_ORPHAN, FIRST_DATA_REGION, INDEX_REGION, META_REGION,
+from .heap import (BAT_ORPHAN, INDEX_REGION, META_REGION,
                    META_WORDS_PER_CLIENT, DMPool)
 
 
@@ -45,6 +45,9 @@ class Master:
         self.reconnect_ms = reconnect_ms
         self.handled_mn_crashes: set = set()
         self.clients: Dict[int, FuseeClient] = {}
+        # migration engine (core/migrate.py), wired by the cluster surface;
+        # the master arbitrates its cutovers and aborts it around Alg-3
+        self.migrator = None
 
     def register(self, client: FuseeClient):
         self.clients[client.cid] = client
@@ -64,7 +67,7 @@ class Master:
         base = cid * META_WORDS_PER_CLIENT
         for i in range(len(pool.placement[META_REGION])):
             pool.write(META_REGION, i, base, [0] * META_WORDS_PER_CLIENT)
-        for g in range(FIRST_DATA_REGION, pool.num_regions):
+        for g in pool.data_regions:
             for rep_mid in pool.placement[g]:
                 mn = pool.mns[rep_mid]
                 if not mn.alive or g not in mn.regions:
@@ -73,50 +76,126 @@ class Master:
                 for b in range(pool.cfg.blocks_per_region):
                     if int(bat[b]) == cid + 1:
                         bat[b] = np.uint64(BAT_ORPHAN)
+        self._resync_migrations()
 
     # ------------------------------------------------------------------ MN
     def detect_dead_mns(self) -> List[int]:
         return [m.mid for m in self.pool.mns
-                if not m.alive and m.mid not in self.handled_mn_crashes]
+                if not m.alive and not m.retired
+                and m.mid not in self.handled_mn_crashes]
 
-    def maybe_recover_mns(self) -> bool:
-        dead = self.detect_dead_mns()
-        if not dead:
-            return False
-        # disconnection phase: notify clients (lease expiry)
-        for c in self.clients.values():
-            if not c.crashed:
-                c.notified_prepare = True
-        for mid in dead:
-            self._recover_mn(mid)
-            self.handled_mn_crashes.add(mid)
-        # commit membership change
+    def commit_membership(self):
+        """Commit a membership change (§5.2): bump the lease epoch and
+        propagate it to every live client.  In-flight verbs stamped with
+        the old epoch FAIL at execution and their ops retry — the same
+        guard MN recovery uses.  Called for MN joins/retires and by every
+        migration cutover."""
         self.pool.epoch += 1
         for c in self.clients.values():
             if not c.crashed:
                 c.epoch = self.pool.epoch
                 c.notified_prepare = False
+
+    def commit_cutover(self, mig):
+        """Atomically commit a completed region migration (the epoch-bump
+        CAS cutover, arbitrated here so it serializes with Alg-3).
+
+        For index shards the cutover first runs the Alg-3 slot repair
+        across the *current alive* replicas: a SNAPSHOT round that
+        straddles the cutover has its backup-CAS evidence only in the old
+        backup arrays, and that evidence must be converged into every
+        replica (committing the round's log) before roles change — the
+        exact invariant MN recovery relies on ("backups are never older
+        than the primary"); discarding it would let a later repair revert
+        an acknowledged primary CAS.  After the repair all alive replicas
+        agree, so the staged targets (bulk copy + dual-write mirror of
+        the primary, resynced with the repaired slots here) equal the
+        retained replicas, which keep their arrays.
+
+        Then: install targets, re-home the region in the pinned directory
+        (per-shard version bump), drop the copies of MNs leaving the
+        replica set, close the dual-write window, and commit the
+        membership epoch — in-flight verbs stamped with the old epoch
+        FAIL and their ops retry."""
+        pool = self.pool
+        if mig.region in pool.index_region_set:
+            self._repair_index_region(mig.region)
+            prim = pool.mns[pool.placement[mig.region][0]]
+            if prim.alive and mig.region in prim.regions:
+                n = pool.cfg.index_words
+                src = prim.regions[mig.region][:n]
+                for arr in mig.targets.values():
+                    arr[:n] = src
+        old_reps = list(pool.placement[mig.region])
+        for mid, arr in mig.targets.items():
+            pool.mns[mid].regions[mig.region] = arr
+        pool.directory.rehome(mig.region, mig.new_reps)
+        for mid in old_reps:
+            if mid not in mig.new_reps:
+                pool.mns[mid].drop_region(mig.region)
+        pool.migrations.pop(mig.region, None)
+        self.commit_membership()
+        # the repair's log commits may have poked objects in other
+        # regions that are still mid-migration
+        self._resync_migrations()
+
+    def maybe_recover_mns(self) -> bool:
+        dead = self.detect_dead_mns()
+        if not dead:
+            return False
+        # in-flight migrations touching a dead MN are abandoned before
+        # recovery re-homes anything (crash-during-migration arbitration:
+        # nothing was installed, so aborting is always safe)
+        if self.migrator is not None:
+            self.migrator.abort_for_dead(dead)
+        # disconnection phase: notify clients (lease expiry)
+        for c in self.clients.values():
+            if not c.crashed:
+                c.notified_prepare = True
+        for mid in dead:
+            self.pool.directory.remove_member(mid)   # crash-stop: leaves ring
+            self._recover_mn(mid)
+            self.handled_mn_crashes.add(mid)
+        # commit membership change
+        self.commit_membership()
+        self._resync_migrations()
+        # re-plan aborted shard moves / pending drains on the new ring
+        if self.migrator is not None:
+            self.migrator.on_membership_change()
         return True
+
+    def _repair_index_region(self, g: int):
+        """Alg 3, modification phase, for one index shard: for every slot
+        where alive replicas disagree, adopt an alive *backup* value
+        (backups are never older than the primary under SNAPSHOT) and
+        commit that round's embedded log.  Shared by MN recovery and the
+        migration cutover (which must converge straddling rounds before
+        replica roles change)."""
+        pool = self.pool
+        reps = pool.placement[g]
+        alive = [(i, r) for i, r in enumerate(reps) if pool.mns[r].alive]
+        if not alive:
+            return
+        arrays = [pool.mns[r].regions[g] for _, r in alive]
+        n = pool.cfg.index_words
+        for off in range(n):
+            vals = [int(a[off]) for a in arrays]
+            if all(v == vals[0] for v in vals):
+                continue
+            backup_vals = [int(a[off]) for (i, _), a in zip(alive, arrays) if i > 0]
+            chosen = backup_vals[0] if backup_vals else vals[0]
+            for a in arrays:
+                a[off] = np.uint64(chosen)
+            self._commit_log_of(chosen)
 
     def _recover_mn(self, mid: int):
         pool = self.pool
-        # 1. slot repair on the index (Alg 3, modification phase): for every
-        #    slot where alive replicas disagree, adopt an alive *backup* value
-        #    (backups are never older than the primary under SNAPSHOT).
-        reps = pool.placement[INDEX_REGION]
-        alive = [(i, r) for i, r in enumerate(reps) if pool.mns[r].alive]
-        if alive:
-            arrays = [pool.mns[r].regions[INDEX_REGION] for _, r in alive]
-            n = pool.cfg.index_words
-            for off in range(n):
-                vals = [int(a[off]) for a in arrays]
-                if all(v == vals[0] for v in vals):
-                    continue
-                backup_vals = [int(a[off]) for (i, _), a in zip(alive, arrays) if i > 0]
-                chosen = backup_vals[0] if backup_vals else vals[0]
-                for a in arrays:
-                    a[off] = np.uint64(chosen)
-                self._commit_log_of(chosen)
+        # 1. slot repair on the index (Alg 3, modification phase) — only
+        #    the shards with a replica on the dead MN can have diverged
+        #    from THIS crash
+        for g in pool.index_regions:
+            if mid in pool.placement[g]:
+                self._repair_index_region(g)
         # 2. region re-homing: every region with a replica on the dead MN gets
         #    a fresh replica on the next alive ring successor; the first alive
         #    replica becomes primary.
@@ -129,6 +208,20 @@ class Master:
             candidates = [m for m in alive_mids if m not in survivors]
             new_reps = survivors + candidates[:len(reps) - len(survivors)]
             pool.recover_mn_placement(g, new_reps)
+
+    def _resync_migrations(self):
+        """Master recovery procedures poke replica arrays directly (they
+        run atomically at one tick), bypassing the pool's dual-write
+        mirror.  Re-sync the already-copied prefix of every open migration
+        window from its primary so staged targets never miss a repair."""
+        pool = self.pool
+        for g, mig in pool.migrations.items():
+            prim = pool.placement[g][0]
+            mn = pool.mns[prim]
+            if mn.alive and g in mn.regions and mig.copied:
+                src = mn.regions[g][:mig.copied]
+                for arr in mig.targets.values():
+                    arr[:mig.copied] = src
 
     def _commit_log_of(self, slot_val: int):
         """Write MASTER_COMMIT_MARK into the old_value field of the object the
@@ -150,8 +243,10 @@ class Master:
                     L.log_mid_next(mid_w), L.log_mid_opcode(mid_w), crc)))
 
     # ------------------------------------------------------------- queries
-    def fail_query(self, slot_off: int, **_) -> Optional[int]:
-        """Alg 4 line 35 + §A.4.3: decide (and complete) a contested slot.
+    def fail_query(self, slot_off: int, region: int = INDEX_REGION,
+                   **_) -> Optional[int]:
+        """Alg 4 line 35 + §A.4.3: decide (and complete) a contested slot
+        of one index shard.
 
         If the backups agree on a value the primary does not hold, an
         in-flight SNAPSHOT round stalled — its winner crashed between the
@@ -162,10 +257,10 @@ class Master:
         Otherwise the primary value stands."""
         self.maybe_recover_mns()
         pool = self.pool
-        reps = pool.placement[INDEX_REGION]
+        reps = pool.placement[region]
         vals = []
         for i in range(len(reps)):
-            v = pool.read(INDEX_REGION, i, slot_off, 1)
+            v = pool.read(region, i, slot_off, 1)
             vals.append(None if v is None else int(v[0]))
         primary = vals[0]
         assert primary is not None, \
@@ -180,14 +275,15 @@ class Master:
                     and v_maj not in (primary, 0)):
                 for i, v in enumerate(vals):
                     if v is not None:
-                        pool.write(INDEX_REGION, i, slot_off, [v_maj])
+                        pool.write(region, i, slot_off, [v_maj])
                 self._commit_log_of(v_maj)
+                self._resync_migrations()
                 return v_maj
         return primary
 
-    def bucket_query(self, off: int):
+    def bucket_query(self, off: int, region: int = INDEX_REGION):
         self.maybe_recover_mns()
-        v = self.pool.read(INDEX_REGION, 0, off, self.pool.cfg.slots_per_bucket)
+        v = self.pool.read(region, 0, off, self.pool.cfg.slots_per_bucket)
         return list(v)
 
     # ------------------------------------------------------------- clients
@@ -205,7 +301,7 @@ class Master:
 
         # -- step 1: find all blocks owned by cid via the BATs (MN-side scan)
         owned: List[Tuple[int, int]] = []  # (region, block_idx)
-        for g in range(FIRST_DATA_REGION, pool.num_regions):
+        for g in pool.data_regions:
             prim = pool.primary_mn(g)
             mem = pool.mns[prim].regions.get(g)
             if mem is None:
@@ -286,6 +382,7 @@ class Master:
                 for (g, b) in owned:
                     if (g, b) not in s.blocks:
                         s.blocks.append((g, b))
+        self._resync_migrations()
         return st
 
     def _infer_block_sc(self, mem, blk_base: int) -> int:
@@ -302,6 +399,7 @@ class Master:
         old_v = int(obj["old_value"])
         crc_ok = obj["old_crc"] == L.crc8([old_v]) and old_v != 0
         key = obj["key"]
+        region = pool.index_region_of(key)     # shard routing (as clients do)
         v_new = int(L.pack_slot(L.fingerprint(key), sc, ptr))
         if not obj["crc_ok"]:
             # c0: crashed while writing the KV pair itself -> reclaim silently
@@ -319,18 +417,19 @@ class Master:
         slot_off = self._find_slot_of(key, old_v, v_new)
         if slot_off is None:
             return
-        cur = pool.read(INDEX_REGION, 0, slot_off, 1)
+        cur = pool.read(region, 0, slot_off, 1)
         if cur is not None and int(cur[0]) == old_v:
             # c2: winner crashed after commit, before the primary CAS
-            for i in range(len(pool.placement[INDEX_REGION])):
-                pool.cas(INDEX_REGION, i, slot_off, old_v, v_new)
+            for i in range(len(pool.placement[region])):
+                pool.cas(region, i, slot_off, old_v, v_new)
             st.fixed_primaries += 1
         # else c3: finished; nothing to do
 
     def _find_slot_of(self, key: int, *vals) -> Optional[int]:
         cfg = self.pool.cfg
+        region = self.pool.index_region_of(key)
         for off in race.slot_offsets(key, cfg.index_buckets, cfg.slots_per_bucket):
-            cur = self.pool.read(INDEX_REGION, 0, off, 1)
+            cur = self.pool.read(region, 0, off, 1)
             if cur is not None and int(cur[0]) in [int(v) for v in vals]:
                 return off
         return None
@@ -342,11 +441,12 @@ class Master:
         opcode = obj["opcode"]
         target_v_new = 0 if opcode == L.OPCODE_DELETE else v_new
         cfg = self.pool.cfg
+        region = self.pool.index_region_of(key)
         # locate the slot: existing entry for key, else an empty slot
         slot_off, v_old = None, 0
         offs = race.slot_offsets(key, cfg.index_buckets, cfg.slots_per_bucket)
         for off in offs:
-            cur = self.pool.read(INDEX_REGION, 0, off, 1)
+            cur = self.pool.read(region, 0, off, 1)
             if cur is None:
                 continue
             w = int(cur[0])
@@ -365,7 +465,7 @@ class Master:
                 self._reclaim_obj(ptr, sc)
                 return
             for off in offs:
-                cur = self.pool.read(INDEX_REGION, 0, off, 1)
+                cur = self.pool.read(region, 0, off, 1)
                 if cur is not None and int(cur[0]) == 0:
                     slot_off, v_old = off, 0
                     break
@@ -375,12 +475,12 @@ class Master:
             # atomic redo: CAS backups then primary (master is the only
             # recovery writer for this client; concurrent client writers are
             # handled by CAS atomicity exactly as in SNAPSHOT)
-            r = len(self.pool.placement[INDEX_REGION])
-            okb = all(int(self.pool.cas(INDEX_REGION, i, slot_off, v_old,
+            r = len(self.pool.placement[region])
+            okb = all(int(self.pool.cas(region, i, slot_off, v_old,
                                         target_v_new)) == v_old
                       for i in range(1, r)) if r > 1 else True
             if okb:
-                self.pool.cas(INDEX_REGION, 0, slot_off, v_old, target_v_new)
+                self.pool.cas(region, 0, slot_off, v_old, target_v_new)
         # commit the log so the op is never redone twice
         self._commit_log_of(v_new)
         if opcode == L.OPCODE_DELETE:

@@ -317,9 +317,11 @@ class Scheduler:
     def _master_dispatch(self, call: MasterCall):
         if call.kind == "fail_query":
             return self.master.fail_query(**{k: v for k, v in call.payload.items()
-                                             if k == "slot_off"})
+                                             if k in ("slot_off", "region")})
         if call.kind == "bucket_query":
-            return self.master.bucket_query(call.payload["off"])
+            return self.master.bucket_query(
+                call.payload["off"],
+                region=call.payload.get("region", 0))
         if call.kind == "fail_report":
             self.master.maybe_recover_mns()
             return None

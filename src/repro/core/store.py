@@ -36,6 +36,7 @@ from .faults import (ClientCrashed, ClientHealth, ClusterHealth, FaultInjector,
                      accumulate_recovery)
 from .heap import META_WORDS_PER_CLIENT, DMConfig, DMPool
 from .master import Master
+from .migrate import MigrationEngine
 from .rng import SimRng
 from .sim import Scheduler, SimTrace
 
@@ -61,6 +62,11 @@ class FuseeCluster:
         self.scheduler = Scheduler(self.pool, self.master, seed=seed,
                                    rng=self.rng,
                                    mn_detect_delay=mn_detect_delay)
+        # elastic shard subsystem: the migration engine drives MN
+        # scale-out/in; the master arbitrates its cutovers (core/migrate.py)
+        self.migrator = MigrationEngine(self.pool, self.master,
+                                        self.scheduler)
+        self.master.migrator = self.migrator
         self._fleet = None
         self.clients: Dict[int, FuseeClient] = {}
         self._next_cid = 0
@@ -146,6 +152,41 @@ class FuseeCluster:
         for c in self.clients.values():
             if not c.crashed:
                 c.epoch = self.pool.epoch
+
+    # ------------------------------------------------------- MN elasticity
+    def add_mn(self, *, wait: bool = True) -> int:
+        """Join a fresh memory node at runtime (online scale-out): the
+        node commits to the membership ring, receives fresh data regions,
+        and index shards are re-homed onto the grown ring by live
+        migration — bulk copy + dual-write window + epoch-bump cutover
+        (core/migrate.py).  With ``wait=True`` (and no concurrent
+        workload) the call drives the migrations to completion; with
+        ``wait=False`` they ride the workload's own scheduler/fleet ticks
+        — the store stays fully available throughout.  Returns the new
+        MN id."""
+        mid = self.migrator.add_mn()
+        if wait:
+            self.migrator.drive()
+        return mid
+
+    def remove_mn(self, mid: int, *, wait: bool = True):
+        """Gracefully drain + retire a memory node (online scale-in).
+        Every region it hosts — index shards, data regions, metadata — is
+        migrated to the shrunk ring first; no acknowledged write is lost.
+        Raises the typed ``InsufficientReplicas`` if removal would leave
+        fewer members than the replication factor."""
+        self.migrator.remove_mn(mid)
+        if wait:
+            self.migrator.drive()
+
+    def rebalance(self, *, wait: bool = True) -> int:
+        """Re-place index shards on the current membership ring (e.g.
+        after config changes); returns the number of shard migrations
+        started."""
+        n = self.migrator.rebalance()
+        if wait:
+            self.migrator.drive()
+        return n
 
     # --------------------------------------------------------------- faults
     def crash_mn(self, mid: int):
@@ -238,11 +279,14 @@ class FuseeCluster:
                             reps[0] == m.mid
                             for reps in self.pool.placement.values()),
                         hosted_regions=len(m.regions),
-                        bytes_served=int(self.pool.mn_bytes[m.mid]))
+                        bytes_served=int(self.pool.mn_bytes[m.mid]),
+                        retired=m.retired)
                for m in self.pool.mns]
         return ClusterHealth(epoch=self.pool.epoch, tick=sched.tick,
                              mns=mns, clients=clients,
                              recovery=self.recovery_totals,
                              client_recoveries=self.client_recoveries,
                              mn_recoveries=sched.mn_recoveries,
-                             crashed_ops=sched.crashed_ops)
+                             crashed_ops=sched.crashed_ops,
+                             migrating_regions=len(self.migrator.active),
+                             migrations=self.migrator.status())

@@ -116,13 +116,24 @@ class ServeEngine:
             self._backend.crashed = False
         return st
 
+    # ------------------------------------------------ pool elasticity --
+    def scale_pool(self) -> int:
+        """Elastic scale-out of the disaggregated prefix-cache pool (the
+        serving twin of ``FuseeCluster.add_mn``): a fresh grant shard — a
+        "memory node" of the two-level allocator — joins the ring, and
+        ungranted page chunks re-home onto it.  Granted chunks (live
+        prefix pages) stay put, so the engine keeps serving throughout.
+        Returns the new shard id."""
+        return self.pool.add_shard()
+
     def health(self) -> Dict:
         """Engine observability: slot occupancy + pool/backend counters
         (the serving counterpart of ``FuseeCluster.health()``)."""
         return {
             "active": len(self.active), "queued": len(self.queue),
             "finished": len(self.finished), "slots_free": len(self.slots_free),
-            "steps": self.steps, **self._backend.stats(),
+            "steps": self.steps, "pool_shards": self.pool.cfg.n_shards,
+            **self._backend.stats(),
         }
 
     # ------------------------------------------------------------- ticks --

@@ -104,6 +104,22 @@ class KVPool:
                 return c
         return None
 
+    def add_shard(self) -> int:
+        """Elastic grant-shard scale-out (the serving twin of
+        ``FuseeCluster.add_mn``): a new "memory node" joins the grant
+        ring; every still-ungranted chunk re-homes onto the grown ring
+        round-robin.  Granted chunks (live pages) never move — at grant
+        granularity the dual-write/copy window of the event-level
+        migration engine is unnecessary, because chunk ownership, not
+        page bytes, is the only sharded state here."""
+        cfg = self.cfg
+        self.cfg = cfg = dataclasses.replace(cfg, n_shards=cfg.n_shards + 1)
+        self.cursor = np.concatenate([self.cursor, np.zeros(1, np.int32)])
+        free = self.grant == 0
+        self.shard_of_chunk[free] = \
+            np.arange(int(free.sum())) % cfg.n_shards
+        return cfg.n_shards - 1
+
     def _slab(self, cid: int) -> ClientSlab:
         return self.slabs.setdefault(cid, ClientSlab())
 

@@ -21,6 +21,10 @@ import os
 
 import pytest
 
+# the storm matrix is the heavyweight part of tier-1: CI runs it (plus the
+# property suite) in the dedicated sim-seeds / slow jobs
+pytestmark = pytest.mark.slow
+
 from repro.core import (CRASHED, OK, ClientCrashed, DMConfig, FaultPlan,
                         FuseeCluster, Op)
 
@@ -31,15 +35,16 @@ N_CLIENTS, N_MNS, REPL = 6, 5, 3
 TOTAL_OPS = 160
 
 
-def _run_storm(seed):
+def _run_storm(seed, **churn):
     cl = FuseeCluster(DMConfig(num_mns=N_MNS, replication=REPL,
-                               region_words=1 << 15, regions_per_mn=16),
+                               region_words=1 << 15, regions_per_mn=16,
+                               index_shards=churn.pop("index_shards", 1)),
                       num_clients=N_CLIENTS, seed=seed)
-    plan = FaultPlan.storm(cl.rng.stream("faults"),
-                           clients=range(N_CLIENTS), mns=N_MNS,
-                           replication=REPL, n_client_crashes=2,
-                           n_mn_crashes=2, first_op=10, spacing=14,
-                           recover_delay=8)
+    storm_kw = dict(clients=range(N_CLIENTS), mns=N_MNS, replication=REPL,
+                    n_client_crashes=2, n_mn_crashes=2, first_op=10,
+                    spacing=14, recover_delay=8)
+    storm_kw.update(churn)             # churn overrides (e.g. n_mn_crashes)
+    plan = FaultPlan.storm(cl.rng.stream("faults"), **storm_kw)
     injector = cl.inject(plan)
     fleet = cl.fleet()
     stores = {c: cl.store(c, max_inflight=0) for c in range(N_CLIENTS)}
@@ -59,6 +64,8 @@ def _run_storm(seed):
             if cl.scheduler.has_work():
                 fleet.tick()
     fleet.run()
+    if cl.migrator.busy:               # drain membership churn (add/remove)
+        cl.migrator.drive()
     return cl, plan, injector, futs, rejected
 
 
@@ -114,4 +121,73 @@ def test_fault_storm_is_seed_deterministic(seed):
                 tuple((k, c, f.result().status) for k, c, f in futs),
                 rejected, cl.scheduler.tick)
     assert signature(_run_storm(seed)) == signature(_run_storm(seed)), \
+        f"(reproduce with FUSEE_STORM_SEEDS={seed})"
+
+
+# ------------------------------------------------------- membership churn --
+# one base MN crash (instead of two) leaves headroom for the
+# crash-during-migration extra crash AND the drain of the added MN
+CHURN = dict(index_shards=4, n_add_mns=1, remove_added=True,
+             crash_during_migration=True, n_mn_crashes=1)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_membership_churn_storm_invariants(seed):
+    """Storm + membership churn: an MN joins mid-run (shard migrations
+    ride the workload ticks), an original MN crashes WHILE the copies are
+    in flight, and the added MN is drained + retired again — on top of
+    the base client/MN crash storm.  Invariants: the full plan fires, no
+    acknowledged write is lost across any cutover, every future settles,
+    and the cluster converges with no open migration windows."""
+    msg = f"(reproduce with FUSEE_STORM_SEEDS={seed})"
+    cl, plan, injector, futs, rejected = _run_storm(seed, **CHURN)
+
+    assert injector.done and len(injector.fired) == len(plan), msg
+    actions = [e.action for _, e in injector.fired]
+    assert "add_mn" in actions and "remove_mn" in actions, msg
+
+    acked = {}
+    for k, c, f in futs:
+        assert f.done(), f"future for key {k} never settled {msg}"
+        r = f.result()
+        assert r.status in (OK, CRASHED), f"key {k} ended {r.status} {msg}"
+        if r.status == OK:
+            acked[k] = [k, c]
+    assert acked, msg
+
+    live = [c for c, cc in cl.clients.items() if not cc.crashed]
+    reader = cl.store(live[0])
+    for k, v in acked.items():
+        got = reader.get(k)
+        assert got == v, f"acked key {k} lost across cutover: {got!r} {msg}"
+
+    h = cl.health()
+    assert h.migrating_regions == 0 and not cl.migrator.busy, msg
+    assert all(c.inflight == 0 for c in h.clients), msg
+    epochs = {c.epoch for c in h.clients if c.status == "live"}
+    assert len(epochs) == 1, f"epoch split-brain {epochs} {msg}"
+    # the added MN either retired cleanly or crashed while draining
+    added_mid = N_MNS
+    assert (cl.pool.mns[added_mid].retired
+            or not cl.pool.mns[added_mid].alive), msg
+
+
+@pytest.mark.parametrize("seed", SEEDS[:1])
+def test_membership_churn_storm_is_seed_deterministic(seed):
+    """Migration runs replay bit-identically: same seed -> same fault +
+    membership schedule, same op outcomes, same migration counters, and
+    byte-identical primary index shards."""
+    def signature(run):
+        cl, _plan, injector, futs, rejected = run
+        shards = []
+        for g in sorted(cl.pool.index_regions):
+            prim = cl.pool.mns[cl.pool.placement[g][0]]
+            shards.append(prim.regions[g][:cl.pool.cfg.index_words]
+                          .tobytes())
+        return (tuple((t, e.action, e.target) for t, e in injector.fired),
+                tuple((k, c, f.result().status) for k, c, f in futs),
+                rejected, cl.scheduler.tick, cl.pool.epoch,
+                tuple(sorted(cl.migrator.counters.items())), tuple(shards))
+    assert signature(_run_storm(seed, **dict(CHURN))) == \
+        signature(_run_storm(seed, **dict(CHURN))), \
         f"(reproduce with FUSEE_STORM_SEEDS={seed})"

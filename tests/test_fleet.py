@@ -230,6 +230,7 @@ def test_trace_replay_reproduces_run():
 
 
 # -------------------------------------------------------- 1024-client smoke -
+@pytest.mark.slow
 def test_fleet_scales_to_1024_clients():
     """≥1024 concurrent clients, all in flight at once, driven to
     completion with batched ticks (the tentpole acceptance smoke)."""

@@ -24,6 +24,7 @@ from repro.core.heap import DMConfig, DMPool
 from repro.core.linearize import HOp, check_linearizable, records_to_hops
 from repro.core.master import Master
 from repro.core.sim import Scheduler
+from repro.core.store import FuseeCluster
 
 KINDS = ("insert", "update", "search", "delete")
 _FAR_FUTURE = 10 ** 9
@@ -155,4 +156,40 @@ def test_crash_during_commit_history_linearizable(seed, steps):
                if r.key == 9 and r.result is not None
                and r.result.status == CRASHED]
     assert _crashed_write_subsets_linearizable(hops, crashed, initial=None), \
+        f"seed={seed} steps={steps} final={final.result}"
+
+
+# --------------------------------------------- membership churn mid-history --
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100_000), steps=st.integers(0, 120))
+def test_random_mix_across_add_mn_cutover_linearizable(seed, steps):
+    """A random mixed-op pipeline over one contended key stays per-key
+    linearizable when an MN joins mid-history: shard migrations open a
+    dual-write window under the in-flight ops and the epoch-bump cutover
+    bounces their stale verbs — none of which may reorder, lose, or
+    double-apply an acknowledged write."""
+    rng = np.random.default_rng(seed)
+    cl = FuseeCluster(DMConfig(num_mns=3, replication=2, index_shards=4,
+                               region_words=1 << 15, regions_per_mn=8),
+                      num_clients=3, seed=seed)
+    sched = cl.scheduler
+    rec0 = sched.submit(0, "insert", 5, [1])
+    sched.run_round_robin()
+    assert rec0.result.status == OK
+    clients = [cl.clients[c] for c in range(3)]
+    _submit_random_mix(sched, clients, rng, keys=[5], depth=3)
+    for _ in range(steps):                    # random partial execution
+        cids = sched.eligible_cids()
+        if not cids:
+            break
+        sched.step(cids[int(rng.integers(len(cids)))],
+                   pick=int(rng.integers(4)))
+    cl.add_mn(wait=False)                     # join mid-history
+    sched.run_random(rng=rng)                 # survivors + migration finish
+    if cl.migrator.busy:
+        cl.migrator.drive()
+    final = sched.submit(0, "search", 5)
+    sched.run_round_robin()
+    assert check_linearizable(records_to_hops(sched.history, 5),
+                              initial=None), \
         f"seed={seed} steps={steps} final={final.result}"

@@ -115,6 +115,25 @@ def test_pool_two_level_allocation_amortizes_grants(pool):
     assert len(set(pages.tolist())) == 100
 
 
+def test_pool_elastic_add_shard(pool):
+    """The serving twin of add_mn: a new grant shard joins the ring,
+    ungranted chunks re-home onto it, granted chunks (live pages) stay
+    owned, and allocation keeps working across the scale-out."""
+    keys = np.arange(1, 65).astype(np.int32)
+    pages = pool.alloc_pages(0, len(keys))
+    pool.write_pages(0, pages, keys, opcode=1)
+    assert pool.insert_batch(0, keys, pages).all()
+    before = pool.grant.copy()
+    new_shard = pool.add_shard()
+    assert pool.cfg.n_shards == new_shard + 1
+    assert (pool.grant == before).all()          # ownership never moves
+    assert (pool.shard_of_chunk[pool.grant == 0] == new_shard).any()
+    _, found = pool.search(keys)
+    assert found.all()                           # live pages untouched
+    p2 = pool.alloc_pages(7, 32)                 # allocation still works
+    assert (p2 >= 0).all()
+
+
 def test_pool_free_and_reclaim(pool):
     pages = pool.alloc_pages(0, 64)
     pool.write_pages(0, pages, np.arange(64).astype(np.int32) + 1, opcode=1)
