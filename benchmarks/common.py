@@ -41,6 +41,16 @@ def zipf_keys(n_keys: int, theta: float, size: int, rng) -> np.ndarray:
     return rng.choice(n_keys, size=size, p=p)
 
 
+def latest_key_at(rank: int, top: int) -> int:
+    """Read-latest key draw (YCSB-D's actual distribution): map a
+    zipfian *recency rank* (rank 0 = newest) onto the current key-space
+    top, so the most recently inserted keys are the hottest.  The
+    runners draw all ranks once (vectorized, via ``zipf_keys``) and map
+    per-op against the growing ``top`` — one O(n) probability build per
+    plan, not one per op."""
+    return (top - 1) - (int(rank) % max(top, 1))
+
+
 @dataclass
 class WorkloadStats:
     n_ops: int
@@ -64,18 +74,24 @@ def run_workload(*, n_clients: int, n_mns: int, replication: int = 2,
                  enable_cache: bool = True, cache_threshold: float = 0.5,
                  replication_mode: str = "snapshot",
                  preload: int = 256, pipeline_depth: int = 1,
-                 index_shards: int = 1) -> WorkloadStats:
+                 index_shards: int = 1,
+                 read_dist: Optional[str] = None) -> WorkloadStats:
     """Run a mixed workload on the event simulator; return measured stats.
 
     ``pipeline_depth`` = ops each closed-loop client keeps in flight
     (the (cid, op_id) pipelines of core/sim.py; 1 = the classic
     one-op-per-client loop the paper figures assume).  ``index_shards``
     splits the RACE index into S shard regions spread over the MN ring
-    (heap.py; S=1 = the paper's single-table layout)."""
+    (heap.py; S=1 = the paper's single-table layout).  ``read_dist``
+    picks the non-insert key draw: None = paper-correct default (YCSB-D
+    reads latest-skewed, everything else zipfian); pass ``"zipfian"``
+    explicitly to keep the legacy fig13-comparable draw for D."""
     t0 = time.perf_counter()
+    read_dist = read_dist or _default_read_dist(mix)
     cfg = DMConfig(num_mns=n_mns, replication=replication,
                    region_words=1 << 15, regions_per_mn=16,
-                   index_shards=index_shards)
+                   index_shards=index_shards,
+                   ordered_index="scan" in mix or "range" in mix)
     pool = DMPool(cfg, num_clients=n_clients, seed=seed)
     master = Master(pool)
     clients = [FuseeClient(i, pool, enable_cache=enable_cache,
@@ -101,11 +117,24 @@ def run_workload(*, n_clients: int, n_mns: int, replication: int = 2,
     probs /= probs.sum()
     ops_left = n_ops
     plan: Dict[int, List] = {c.cid: [] for c in clients}
+    inserted = 0
+    latest_ranks = zipf_keys(n_keys, theta, n_ops, rng) \
+        if read_dist == "latest" else None
     for i in range(n_ops):
         kind = kinds[int(rng.choice(len(kinds), p=probs))]
-        key = int(zipf_keys(n_keys, theta, 1, rng)[0]) % preload \
-            if kind != "insert" else preload + i
-        val = [i] * value_words if kind in ("insert", "update") else None
+        if kind == "insert":
+            key = preload + inserted
+            inserted += 1
+        elif read_dist == "latest":
+            # read-latest (YCSB-D): recency-skewed over the grown space
+            key = latest_key_at(latest_ranks[i], preload + inserted)
+        else:
+            key = int(zipf_keys(n_keys, theta, 1, rng)[0]) % preload
+        if kind == "scan":
+            # YCSB-E: zipfian start key, uniform length <= MAX_SCAN_LEN
+            val = 1 + int(rng.integers(MAX_SCAN_LEN))
+        else:
+            val = [i] * value_words if kind in ("insert", "update") else None
         plan[clients[i % n_clients].cid].append((kind, key, val))
 
     # closed-loop: every client keeps ``pipeline_depth`` ops in flight
@@ -173,8 +202,22 @@ YCSB = {
     "A": {"search": 0.5, "update": 0.5},
     "B": {"search": 0.95, "update": 0.05},
     "C": {"search": 1.0},
+    # D is read-LATEST: reads draw from a recency-skewed distribution
+    # over the growing key space (the runners default to that for this
+    # mix; pass read_dist="zipfian" for the legacy fig13-comparable draw)
     "D": {"search": 0.95, "insert": 0.05},
+    # E is the scan workload: 0.95 SCAN / 0.05 INSERT, zipfian start
+    # keys, uniform scan length <= MAX_SCAN_LEN (needs ordered_index)
+    "E": {"scan": 0.95, "insert": 0.05},
 }
+
+MAX_SCAN_LEN = 100
+
+
+def _default_read_dist(mix: Dict[str, float]) -> str:
+    """Paper-correct read distribution for a mix: YCSB-D (the read-latest
+    workload) draws latest-skewed; everything else plain zipfian."""
+    return "latest" if mix == YCSB["D"] else "zipfian"
 
 
 # =========================================================== fleet workloads
@@ -194,23 +237,32 @@ class FleetStats(WorkloadStats):
 
 
 def fleet_dmconfig(n_clients: int, n_keys: int, *, n_mns: int = 4,
-                   replication: int = 2, index_shards: int = 1) -> DMConfig:
+                   replication: int = 2, index_shards: int = 1,
+                   ordered: bool = False) -> DMConfig:
     """Size a DMConfig for a fleet: index slots ≥ 4x keys, meta region
     covering every client's 64 metadata words, and ≥ 4 blocks of slab
-    headroom per client."""
+    headroom per client.  ``ordered=True`` enables the ordered keydir
+    (core/ordered.py) and sizes the region for the keyspace — 16-word
+    leaves, 13 entries each, with generous slack for split churn and
+    leaked loser leaves under concurrent splitters."""
     buckets = 256
     while buckets * 7 < 4 * n_keys:
         buckets *= 2
     region_words = 1 << 14
     while region_words < max(buckets * 7, n_clients * 64):
         region_words <<= 1
+    if ordered:
+        from repro.core.ordered import LEAF_ENTRIES, LEAF_WORDS
+        need_leaves = 4 * n_keys // LEAF_ENTRIES + 4 * n_clients + 64
+        while region_words < need_leaves * LEAF_WORDS + 8:
+            region_words <<= 1
     block_words = 1 << 9
     bpr = region_words // (block_words + 1)
     regions_per_mn = max(8, -(-4 * n_clients // (bpr * n_mns)) + 1)
     return DMConfig(num_mns=n_mns, replication=replication,
                     region_words=region_words, block_words=block_words,
                     regions_per_mn=regions_per_mn, index_buckets=buckets,
-                    index_shards=index_shards)
+                    index_shards=index_shards, ordered_index=ordered)
 
 
 def run_fleet_workload(*, n_clients: int, n_mns: int = 4,
@@ -219,21 +271,31 @@ def run_fleet_workload(*, n_clients: int, n_mns: int = 4,
                        theta: float = 0.99, value_words: int = 8,
                        seed: int = 0, pipeline_depth: int = 4,
                        batch_gets: bool = True, enable_cache: bool = True,
-                       use_kernel: bool = True) -> FleetStats:
+                       use_kernel: bool = True,
+                       read_dist: Optional[str] = None) -> FleetStats:
     """Run a mixed workload at fleet scale: every client keeps
     ``pipeline_depth`` ops in flight, and every tick advances ALL clients'
     op-phases as batched array operations (core/fleet.py) — one kernel /
     array call per verb-kind per tick, not one per op.  Cache-resident
     GETs of a wave are probed with ONE cluster-wide race_lookup
-    invocation and fused into 1-RTT multi-key SEARCHes.
+    invocation and fused into 1-RTT multi-key SEARCHes; SCAN starts are
+    located with ONE leaf_probe invocation per wave and their leaf sweeps
+    coalesce into the tick's read sweep.
+
+    ``read_dist=None`` uses the paper-correct draw per mix (YCSB-D reads
+    latest-skewed over the growing key space; pass ``"zipfian"``
+    explicitly for the legacy fig13-comparable behavior).  A mix with
+    ``scan`` ops (YCSB-E) auto-enables the ordered keydir.
 
     Fully deterministic from ``(seed, config)``: workload generation draws
     from the cluster's SimRng 'workload' stream, fleet ticks are
     schedule-free."""
     t0 = time.perf_counter()
+    read_dist = read_dist or _default_read_dist(mix)
     n_keys = n_keys if n_keys is not None else max(256, 2 * n_clients)
+    has_scan = "scan" in mix or "range" in mix
     cfg = fleet_dmconfig(n_clients, n_keys, n_mns=n_mns,
-                         replication=replication)
+                         replication=replication, ordered=has_scan)
     cluster = FuseeCluster(cfg, num_clients=n_clients, seed=seed,
                            enable_cache=enable_cache)
     fleet = cluster.fleet(use_kernel=use_kernel)
@@ -259,15 +321,25 @@ def run_fleet_workload(*, n_clients: int, n_mns: int = 4,
     n_ops = ops_per_client * n_clients
     kind_draw = [kinds[i] for i in wl.choice(len(kinds), size=n_ops, p=probs)]
     zipf_draw = zipf_keys(n_keys, theta, n_ops, wl)
+    scan_lens = (1 + wl.integers(MAX_SCAN_LEN, size=n_ops)) if has_scan \
+        else None
+    latest_ranks = zipf_keys(n_keys, theta, n_ops, wl) \
+        if read_dist == "latest" else None
     plans: List[List[Op]] = [[] for _ in range(n_clients)]
     fresh = n_keys
     for i in range(n_ops):
         kind = kind_draw[i]
         if kind == "insert":
             key, fresh = fresh, fresh + 1
+        elif read_dist == "latest":
+            key = latest_key_at(latest_ranks[i], fresh)
         else:
             key = int(zipf_draw[i])
-        val = [i] * value_words if kind in ("insert", "update") else None
+        if kind == "scan":
+            # YCSB-E: zipfian start key, uniform length <= MAX_SCAN_LEN
+            val = int(scan_lens[i])
+        else:
+            val = [i] * value_words if kind in ("insert", "update") else None
         plans[i % n_clients].append(Op(kind, key, val))
 
     # closed loop: refill every client to pipeline_depth, tick the fleet

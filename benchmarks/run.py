@@ -91,6 +91,16 @@ def summarize(name: str, rows) -> str:
         return (f"batch SEARCH {best['batch_ops_per_rtt']:.0f} ops/RTT vs "
                 f"serial {best['serial_ops_per_rtt']:.1f} "
                 f"({best['speedup']:.1f}x at B={best['batch']})")
+    if name == "ycsbe_scan":
+        best = max(rows, key=lambda r: r["clients"])
+        return (f"YCSB-E@{best['clients']}: {best['mops']:.2f}Mops "
+                f"scan={best['scan_rtts']:.1f}RTTs "
+                f"p99={best['lat_p99_us']:.0f}us")
+    if name == "scan_batch":
+        sp = [r for r in rows if r.get("speedup")]
+        worst = min(sp, key=lambda r: r["speedup"])
+        return (f"batched leaf sweep {worst['ops_per_rtt']:.1f} ops/RTT, "
+                f"{worst['speedup']:.1f}x naive (len={worst['scan_len']})")
     if name == "roofline" and "arch" in rows[0]:
         worst = min(rows, key=lambda r: r.get("mfu_bound", 1))
         return (f"{len(rows)} cells; worst MFU-bound "
@@ -148,6 +158,17 @@ def validate_claims(rows):
         worst = min(r["speedup"] for r in ab)
         checks.append(("batched SEARCH beats serial ops/RTT at every size",
                        worst > 1.0, f"min speedup {worst:.1f}x"))
+    sb = [r for r in rows if r.get("bench") == "scan_batch"
+          and r.get("speedup")]
+    if sb:
+        worst = min(r["speedup"] for r in sb)
+        checks.append(("batched leaf traversal >= 4x naive per-slot ops/RTT",
+                       worst >= 4.0, f"min speedup {worst:.1f}x"))
+    ye = [r for r in rows if r.get("bench") == "ycsbe"]
+    if ye:
+        ok = all(r["sim_ops"] > 0 and r["mops"] > 0 for r in ye)
+        checks.append(("YCSB-E runs end to end on the fleet engine",
+                       ok, f"{max(r['mops'] for r in ye):.2f} Mops"))
     f17 = {r["alloc"]: r["mops"] for r in rows
            if r.get("bench") == "fig17" and r.get("ycsb") == "A"}
     if f17:

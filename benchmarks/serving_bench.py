@@ -33,7 +33,7 @@ def bench_pool_ops() -> List[Dict]:
                store.submit_batch([Op.get(k) for k in keys])]
     t_s = (time.perf_counter() - t0) / 5
     found = np.array([r.status == OK for r in got])
-    stats = store.scan_stats()
+    stats = store.stats()
     rows.append({"bench": "serving_pool", "op": "insert_batch",
                  "n": len(keys), "wall_s": t_ins,
                  "success": float(ok.mean()),

@@ -141,15 +141,77 @@ def elastic_drill():
     print(f" health: {cluster.health().summary()}")
 
 
+def scan_drill():
+    """Ordered-index fault drill: crash a client mid-leaf-split while
+    YCSB-E traffic (scans + inserts) is live, repair via Alg-3/§5.3, and
+    audit that no acknowledged insert is missing from subsequent scans."""
+    import numpy as np
+
+    from repro.core import ordered
+
+    print("\n== scan drill (crash mid-leaf-split under live YCSB-E) ==")
+    cluster = FuseeCluster(DMConfig(num_mns=4, replication=3,
+                                    ordered_index=True,
+                                    region_words=1 << 15, regions_per_mn=16),
+                           num_clients=4, seed=11)
+    sched = cluster.scheduler
+    kv1 = cluster.store(1)
+    for k in range(24):                     # fill ~2 leaves
+        kv1.insert(k, [k])
+    print(" 24 keys preloaded; "
+          f"{len(ordered.ordered_keys_direct(cluster.pool))} in the keydir")
+
+    # client 0: a pipeline of inserts that will split leaves; clients 2-3:
+    # live YCSB-E scans.  Crash client 0 at an arbitrary verb boundary —
+    # with splits in flight, that is a half-split tree.
+    recs = [sched.submit(0, "insert", 24 + i, [24 + i]) for i in range(12)]
+    scan_recs = [sched.submit(2 + (i % 2), "scan", int(i * 7) % 30, 20)
+                 for i in range(6)]
+    rng = np.random.default_rng(11)
+    for _ in range(700):     # far enough that some inserts acked mid-split
+        cids = sched.eligible_cids()
+        if not cids:
+            break
+        sched.step(cids[int(rng.integers(len(cids)))],
+                   pick=int(rng.integers(4)))
+    cluster.crash_client(0)
+    acked = [24 + i for i, r in enumerate(recs)
+             if r.result is not None and r.result.status == OK]
+    n_crashed = sum(1 for r in recs
+                    if r.result is not None and r.result.status == CRASHED)
+    print(f" client 0 crashed mid-split: {len(acked)} inserts acked, "
+          f"{n_crashed} in-flight CRASHED")
+    st = cluster.recover_client(0, reassign_to_cid=1)
+    cluster.drain()
+    print(f" Alg-3/§5.3 repair: {st.redone_ops} redone, "
+          f"{st.reclaimed_objects} reclaimed")
+
+    res = cluster.store(1).scan(0, 100)
+    got = [k for k, _ in res]
+    missing = [k for k in list(range(24)) + acked if k not in got]
+    live_scans = sum(1 for r in scan_recs
+                     if r.result is not None and r.result.status == OK)
+    print(f" scans during the storm: {live_scans}/{len(scan_recs)} OK; "
+          f"post-repair scan sees {len(got)} keys")
+    print(f" acked-insert loss after repair: {len(missing)} (expect 0)")
+    assert not missing, missing
+    assert got == sorted(set(got)), "torn scan result"
+    print(f" health: {cluster.health().summary()}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-train", action="store_true",
                     help="only run the KV-store drill (CI failure-path smoke)")
     ap.add_argument("--elastic", action="store_true",
                     help="also run the online MN scale-out drill")
+    ap.add_argument("--scan", action="store_true",
+                    help="also run the ordered-index crash-mid-split drill")
     args = ap.parse_args()
     if not args.skip_train:
         train_drill()
     store_drill()
     if args.elastic:
         elastic_drill()
+    if args.scan:
+        scan_drill()

@@ -43,10 +43,21 @@ def main():
         kv.get(f"k{i}".encode())          # warm the adaptive index cache
     futs = kv.submit_batch([Op.get(f"k{i}".encode()) for i in range(16)])
     res = [f.result() for f in futs]
-    st = kv.scan_stats()
+    st = kv.stats()
     print(f" batch GET x16          -> {sum(r.status == 'OK' for r in res)}"
           f"/16 OK in 1 RTT (race_lookup fast path, "
           f"{st['batch_fast_hits']} kernel hits)")
+
+    print("\n ordered keydir: range scans over a second, ordered index")
+    ocl = FuseeCluster(DMConfig(num_mns=4, replication=2,
+                                ordered_index=True), num_clients=1)
+    okv = ocl.store(0)
+    for k in range(40):
+        okv.insert(k, [k * 10])
+    res = okv.scan(10, 5)
+    print(f" SCAN(10, 5)            -> {[(k, v) for k, v in res]}")
+    print(f" RANGE(30, 34)          -> {[k for k, _ in okv.range(30, 34)]} "
+          f"(batched leaf sweeps; see README 'Ordered index & range scans')")
 
     print("\n crash client 0 mid-flight, recover from the embedded log:")
     for k in range(8):
@@ -69,7 +80,7 @@ def main():
            store.submit_batch([Op.insert(k, b"page-payload") for k in keys])]
     got = [f.result() for f in
            store.submit_batch([Op.get(k) for k in keys])]
-    stats = store.scan_stats()
+    stats = store.stats()
     print(f" batched INSERT x{len(keys)}: "
           f"success={np.mean([r.status == 'OK' for r in ins]):.2f} "
           f"in {stats['epochs']} SNAPSHOT epoch(s)")

@@ -7,7 +7,9 @@ from .client import FuseeClient  # noqa: F401
 from .master import Master, RecoveryStats  # noqa: F401
 from .faults import (ClientCrashed, ClientHealth, ClusterError,  # noqa: F401
                      ClusterHealth, FaultEvent, FaultInjector, FaultPlan,
-                     InsufficientReplicas, MNHealth, SchedulerStalled)
+                     InsufficientReplicas, MNHealth, OrderedIndexDisabled,
+                     SchedulerStalled)
+from . import ordered  # noqa: F401
 from .ring import PlacementDirectory  # noqa: F401
 from .rng import SimRng  # noqa: F401
 from .migrate import MigrationEngine  # noqa: F401

@@ -11,8 +11,8 @@ that machinery:
 * ``KVFuture`` — a handle to an in-flight op; ``result()`` drives the
   event scheduler until the op responds;
 * ``KVStore`` — ``submit`` / ``submit_batch`` plus blocking
-  ``get``/``put``/``delete``/``scan_stats`` conveniences, over a pluggable
-  backend:
+  ``get``/``put``/``delete``/``scan``/``range``/``stats`` conveniences,
+  over a pluggable backend:
 
   - ``SimBackend``: the paper-faithful event-level simulation
     (core/client.py + core/sim.py), with any number of ops in flight per
@@ -37,14 +37,15 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from . import codec
+from . import ordered
 from .events import CRASHED, NOT_FOUND, OK, OpResult
-from .faults import ClientCrashed, SchedulerStalled
+from .faults import ClientCrashed, OrderedIndexDisabled, SchedulerStalled
 
 __all__ = ["Op", "KVFuture", "KVStore", "SimBackend"]
 
 
 # ----------------------------------------------------------------- requests
-KINDS = ("search", "insert", "update", "delete", "reclaim")
+KINDS = ("search", "insert", "update", "delete", "reclaim", "scan", "range")
 
 
 @dataclass(frozen=True)
@@ -91,6 +92,20 @@ class Op:
     def reclaim() -> "Op":
         return Op("reclaim")
 
+    @staticmethod
+    def scan(start_key, count: int) -> "Op":
+        """SCAN: the next ``count`` live keys >= start_key in key order,
+        with their values (ordered keydir; needs ordered_index=True).
+        Byte/str start keys address the hashed 64-bit key space — integer
+        keys scan in true numeric order."""
+        return Op("scan", start_key, int(count))
+
+    @staticmethod
+    def range(start_key, end_key) -> "Op":
+        """RANGE: every live key in ``[start_key, end_key)`` with its
+        value, in key order (ordered keydir; needs ordered_index=True)."""
+        return Op("range", start_key, end_key)
+
 
 # ------------------------------------------------------------------ futures
 class KVFuture:
@@ -123,7 +138,15 @@ class KVFuture:
             rec = self.record
             res = dataclasses.replace(rec.result, rtts=rec.rtts,
                                       bg_rtts=rec.bg_rtts)
-        return dataclasses.replace(res, value=codec.decode_value(res.value))
+        kind = self.record.kind if self.record is not None else None
+        v = res.value
+        if isinstance(v, list) and (kind in ("scan", "range")
+                                    or (v and isinstance(v[0], tuple))):
+            # scan results are [(key, value_words), ...]: decode each
+            # (device futures carry no record, so pair lists self-identify)
+            return dataclasses.replace(res, value=[
+                (k, codec.decode_value(w)) for (k, w) in v])
+        return dataclasses.replace(res, value=codec.decode_value(v))
 
 
 # -------------------------------------------------------------- sim backend
@@ -157,18 +180,24 @@ class SimBackend:
         self.batch_search_min = batch_search_min
         self.use_kernel = use_kernel
         self.counters = {"ops": 0, "batch_lookups": 0, "batch_fast_hits": 0,
-                         "batch_fallbacks": 0, "shadow_rebuilds": 0}
+                         "batch_fallbacks": 0, "shadow_rebuilds": 0,
+                         "scans": 0, "scan_locate_batches": 0}
         # memoized shadow index: (cache fingerprint, entries, shadow table)
         self._shadow = (None, None, None)
+        self._pump_rr = 0     # rotating QP-lane pick (starvation freedom)
 
     # ------------------------------------------------------------- submit
     def submit_many(self, ops: Sequence[Op], *,
-                    probed: Optional[list] = None) -> List[KVFuture]:
+                    probed: Optional[list] = None,
+                    located: Optional[list] = None) -> List[KVFuture]:
         """Submit a batch.  ``probed`` optionally carries precomputed cache
         probe results for the batch's GET keys (CacheEntry-or-None aligned
         with the GETs, in op order) — the fleet engine passes these so ONE
         cluster-wide ``race_lookup`` invocation serves every client's batch
-        in a tick instead of one probe per client."""
+        in a tick instead of one probe per client.  ``located`` is the
+        scan twin: covering-leaf-id hints for the batch's SCAN/RANGE start
+        keys (aligned with them in op order, -1 = no hint), from the fleet
+        engine's single ``leaf_probe`` invocation per tick."""
         if self.client.crashed:
             raise ClientCrashed(self.cid)
         if self.sched.clients.get(self.cid) is not self.client:
@@ -179,6 +208,23 @@ class SimBackend:
                                 else "replaced")
         futs = [KVFuture(self) for _ in ops]
         self.counters["ops"] += len(ops)
+        scans = [i for i, op in enumerate(ops)
+                 if op.kind in ("scan", "range")]
+        if scans and not self.client.pool.ordered_regions:
+            # reject BEFORE submitting anything: raising mid-batch would
+            # strand the already-accepted ops' futures
+            raise OrderedIndexDisabled()
+        hints: Dict[int, int] = {}
+        if scans:
+            if located is not None:
+                hints = dict(zip(scans, located))
+            elif self.client.ord_fences and len(scans) >= 2:
+                # one vectorized leaf_probe call locates every scan of
+                # the batch (the scan twin of the fused GET fast path)
+                starts = [codec.encode_key(ops[i].key) for i in scans]
+                hints = dict(zip(scans,
+                                 ordered.locate_leaves(self.client, starts)))
+                self.counters["scan_locate_batches"] += 1
         batched: Dict[int, Any] = {}
         gets = [i for i, op in enumerate(ops) if op.kind == "search"]
         if (len(gets) >= self.batch_search_min and self.client.enable_cache
@@ -188,7 +234,7 @@ class SimBackend:
             if i in batched:
                 continue
             try:
-                self._submit_one(op, futs[i])
+                self._submit_one(op, futs[i], hint=hints.get(i, -1))
             except ClientCrashed:
                 if not (i or batched):
                     raise      # nothing accepted yet: reject the whole batch
@@ -201,10 +247,23 @@ class SimBackend:
                 break
         return futs
 
-    def _submit_one(self, op: Op, fut: KVFuture):
+    def _submit_one(self, op: Op, fut: KVFuture, *, hint: int = -1):
         while self.max_inflight and self.sched.inflight(self.cid) >= self.max_inflight:
             self._pump()
         key = codec.encode_key(op.key) if op.key is not None else 0
+        if op.kind in ("scan", "range"):
+            if not self.client.pool.ordered_regions:
+                raise OrderedIndexDisabled()
+            self.counters["scans"] += 1
+            if op.kind == "scan":
+                value = int(op.value)
+                gen = self.client.op_scan(key, value, hint=hint)
+            else:
+                value = codec.encode_key(op.value)
+                gen = self.client.op_range(key, value, hint=hint)
+            fut.record = self.sched.submit(self.cid, op.kind, key, value,
+                                           gen=gen)
+            return
         value = codec.encode_value(op.value) if op.kind in ("insert", "update") \
             else None
         fut.record = self.sched.submit(self.cid, op.kind, key, value)
@@ -337,7 +396,9 @@ class SimBackend:
 
     # -------------------------------------------------------------- driving
     def _pump(self):
-        """One round-robin pass over every client with pending work."""
+        """One round-robin pass over every client with pending work.  The
+        lane pick rotates so no (client, MN) QP queue starves behind a
+        retry loop flooding another lane (see run_round_robin)."""
         cids = self.sched.eligible_cids()
         if not cids:
             raise SchedulerStalled(
@@ -345,7 +406,8 @@ class SimBackend:
                 f"{self.sched.inflight(self.cid)} op(s) are unresolved — "
                 "a future detached from its record (wiring bug)")
         for c in cids:
-            self.sched.step(c)
+            self._pump_rr += 1
+            self.sched.step(c, pick=self._pump_rr)
 
     def drive(self, fut: KVFuture):
         while not fut.done():
@@ -373,6 +435,10 @@ class SimBackend:
             "crashed_ops": sum(r.result.status == CRASHED for r in recs),
             "avg_rtts_by_kind": {k: float(np.mean(v)) for k, v in rtts.items()},
             "cache_entries": len(self.client.cache),
+            # inserts whose ordered-keydir entry hit FULL (scan-invisible
+            # until the region is resized; size it for the keyspace —
+            # benchmarks.common.fleet_dmconfig(ordered=True) does)
+            "ord_full_drops": self.client.ord_full_drops,
             **self.counters,
         }
 
@@ -421,6 +487,28 @@ class KVStore:
     def reclaim(self) -> OpResult:
         return self.submit(Op.reclaim()).result()
 
-    def scan_stats(self) -> Dict[str, Any]:
+    def scan(self, start_key, count: int) -> List[tuple]:
+        """The next ``count`` live keys >= start_key in key order, as
+        ``[(key64, value), ...]`` (needs ``DMConfig.ordered_index=True``;
+        integer keys scan in numeric order, byte/str keys in hashed-key
+        order)."""
+        r = self.submit(Op.scan(start_key, count)).result()
+        return r.value if r.status == OK else []
+
+    def range(self, start_key, end_key) -> List[tuple]:
+        """Every live key in ``[start_key, end_key)`` with its value, in
+        key order (needs ``DMConfig.ordered_index=True``)."""
+        r = self.submit(Op.range(start_key, end_key)).result()
+        return r.value if r.status == OK else []
+
+    def stats(self) -> Dict[str, Any]:
         """Backend counters: RTT tallies, cache and pipeline state."""
         return self.backend.stats()
+
+    def scan_stats(self) -> Dict[str, Any]:
+        """Deprecated alias of :meth:`stats` (renamed so the name no
+        longer collides with the SCAN verb)."""
+        import warnings
+        warnings.warn("KVStore.scan_stats() is deprecated; use "
+                      "KVStore.stats()", DeprecationWarning, stacklevel=2)
+        return self.stats()

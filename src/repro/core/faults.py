@@ -60,6 +60,18 @@ class InsufficientReplicas(ClusterError):
     replicas.  The membership is unchanged — add an MN first."""
 
 
+class OrderedIndexDisabled(ClusterError):
+    """SCAN/RANGE rejected: the cluster was built without the ordered
+    keydir (``DMConfig.ordered_index=False``).  Range queries need the
+    ordered secondary index (core/ordered.py) — enable it at
+    construction; the hash index alone cannot answer them."""
+
+    def __init__(self):
+        super().__init__(
+            "scan/range require DMConfig(ordered_index=True): the RACE "
+            "hash index cannot answer range queries")
+
+
 # ------------------------------------------------------------- fault plans
 _ACTIONS = ("crash_client", "crash_mn", "recover_client",
             "add_mn", "remove_mn")

@@ -36,6 +36,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import codec
+from . import ordered
 from .api import KVFuture, Op, SimBackend, _fold32
 from .faults import SchedulerStalled
 from .shadow import build_shadow, hash32_np, race_lookup_np
@@ -69,6 +70,8 @@ class FleetEngine:
             "ticks": 0, "verbs": 0, "array_calls": 0, "master_calls": 0,
             "index_probe_verbs": 0, "probe_invocations": 0, "probe_keys": 0,
             "probe_hits": 0, "shadow_rebuilds": 0, "max_lanes": 0,
+            "ord_leaf_verbs": 0, "scan_locate_invocations": 0,
+            "scan_locate_keys": 0,
         }
         # memoized combined shadow: (per-backend fingerprints, entries, table)
         self._probe_memo = (None, None, None)
@@ -138,6 +141,10 @@ class FleetEngine:
             shard_set = pool.index_region_set
             self.counters["index_probe_verbs"] += sum(
                 v.region in shard_set for v in verbs)
+            # ordered-keydir leaf sweeps of EVERY in-flight scan coalesce
+            # into this same one-gather-per-tick read sweep
+            self.counters["ord_leaf_verbs"] += sum(
+                v.region in pool.ordered_region_set for v in verbs)
             return pool.read_batch([v.region for v in verbs],
                                    [v.replica for v in verbs],
                                    [v.off for v in verbs],
@@ -253,14 +260,46 @@ class FleetEngine:
                 pass
         return race_lookup_np(q, shadow)
 
+    def locate_wave(self, wave: Sequence[Tuple[SimBackend, Sequence[Op]]]
+                    ) -> Dict[int, List[int]]:
+        """ONE vectorized ``leaf_probe`` invocation locating the covering
+        leaf of every SCAN/RANGE start key across every client in the
+        wave (the scan twin of ``probe_wave``).  Clients' fence caches
+        are unioned — leaf ids are global facts, and a stale hint is
+        merely re-validated by the scan's own leaf read.  Returns
+        ``{wave_row: [leaf_id hints aligned with the row's scans]}``."""
+        fences: Dict[int, int] = {}
+        spans: List[Tuple[int, int, int]] = []   # (row, start_pos, n)
+        starts: List[int] = []
+        for row, (be, ops) in enumerate(wave):
+            row_starts = [codec.encode_key(op.key) for op in ops
+                          if op.kind in ("scan", "range")]
+            if not row_starts:
+                continue
+            fences.update(be.client.ord_fences)
+            spans.append((row, len(starts), len(row_starts)))
+            starts.extend(row_starts)
+        if not starts or not fences:
+            return {row: [-1] * n for (row, _s, n) in spans}
+        by_low = sorted((low, lid) for lid, low in fences.items())
+        lows = np.array([low for (low, _lid) in by_low], np.uint64)
+        idx = ordered._leaf_probe(np.array(starts, np.uint64), lows)
+        self.counters["scan_locate_invocations"] += 1
+        self.counters["scan_locate_keys"] += len(starts)
+        hints = [by_low[int(i)][1] if i >= 0 else by_low[0][1]
+                 for i in idx]
+        return {row: hints[s:s + n] for (row, s, n) in spans}
+
     def submit_wave(self, wave: Sequence[Tuple[SimBackend, Sequence[Op]]]
                     ) -> List[List[KVFuture]]:
         """Submit one op batch per backend with all cache-resident GET
         probes served by a single cluster-wide kernel invocation (instead
         of one probe per client, which is what per-backend
-        ``submit_batch`` would do).  Backends should be constructed with
-        ``max_inflight=0`` (unlimited) — fleet mode paces admission by
-        waves, not by per-client backpressure pumps."""
+        ``submit_batch`` would do), and all SCAN/RANGE start keys located
+        by a single ``leaf_probe`` invocation (``locate_wave``).
+        Backends should be constructed with ``max_inflight=0``
+        (unlimited) — fleet mode paces admission by waves, not by
+        per-client backpressure pumps."""
         wants = []
         rows = []                      # per wave row: index into wants or -1
         for be, ops in wave:
@@ -273,9 +312,13 @@ class FleetEngine:
             else:
                 rows.append(-1)
         probes = self.probe_wave(wants) if wants else []
+        located = self.locate_wave(wave) \
+            if any(op.kind in ("scan", "range")
+                   for _be, ops in wave for op in ops) else {}
         return [be.submit_many(list(ops),
-                               probed=probes[row] if row >= 0 else None)
-                for (be, ops), row in zip(wave, rows)]
+                               probed=probes[row] if row >= 0 else None,
+                               located=located.get(r))
+                for r, ((be, ops), row) in enumerate(zip(wave, rows))]
 
     # --------------------------------------------------------------- stats
     def stats(self) -> Dict[str, Any]:

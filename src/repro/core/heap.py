@@ -48,6 +48,10 @@ class DMConfig:
     slots_per_bucket: int = 7
     size_classes: int = 6
     index_shards: int = 1           # S: independent RACE shard regions
+    # Ordered secondary index (core/ordered.py): a replicated keydir of
+    # fat leaves in its own region, enabling SCAN/RANGE.  Off by default —
+    # the classic layout and per-op RTT counts are bit-identical.
+    ordered_index: bool = False
     # network model constants live in netmodel.py; kept out of the pool.
 
     @property
@@ -148,12 +152,23 @@ class DMPool:
         self.index_region_set = frozenset(self.index_regions)
         self.num_regions = FIRST_DATA_REGION + data_count \
             + (cfg.index_shards - 1)
+        # the ordered keydir region (core/ordered.py) lives after the
+        # index shards; strided on the ring like them, first-class for
+        # migration/recovery.  Absent entirely when ordered_index=False.
+        self.ordered_regions: List[int] = []
+        if cfg.ordered_index:
+            self.ordered_regions = [self.num_regions]
+            self.num_regions += 1
+        self.ordered_region_set = frozenset(self.ordered_regions)
         shard_placement = self.desired_index_placement()
         for g in range(FIRST_DATA_REGION, FIRST_DATA_REGION + data_count):
             self._host_all(g, self.directory.place(g))
         self._host_all(META_REGION, self.directory.place(META_REGION))
-        for g in self.index_regions:
+        for g in self.index_regions + self.ordered_regions:
             self._host_all(g, self.directory.pin(g, shard_placement[g]))
+        if self.ordered_regions:
+            from . import ordered                 # local: layering, no cycle
+            ordered.init_region(self, self.ordered_regions[0])
 
     def _host_all(self, region: int, reps: List[int]):
         for mid in reps:
@@ -161,17 +176,20 @@ class DMPool:
                 self.mns[mid].host_region(region)
 
     def desired_index_placement(self) -> Dict[int, List[int]]:
-        """Where the index shards *should* live on the current membership
-        ring: shard 0 at the classic hash start (S=1 layout unchanged),
-        shard s offset by s so S shards spread over min(S, N) MNs.  The
-        migration engine diffs this against the pinned table to plan
-        shard-at-a-time re-homing after add_mn/remove_mn."""
+        """Where the index shards — and the ordered keydir region —
+        *should* live on the current membership ring: shard 0 at the
+        classic hash start (S=1 layout unchanged), shard s offset by s so
+        S shards spread over min(S, N) MNs; the ordered region continues
+        the stride after the shards.  The migration engine diffs this
+        against the pinned table to plan shard-at-a-time re-homing after
+        add_mn/remove_mn."""
         members = self.directory.members
         n = len(members)
         start0 = L.hash64(INDEX_REGION, seed=3) % n
         return {g: ring_replicas(g, members, self.cfg.replication,
                                  start=(start0 + s) % n)
-                for s, g in enumerate(self.index_regions)}
+                for s, g in enumerate(self.index_regions
+                                      + self.ordered_regions)}
 
     # ---------------- key -> shard routing ---------------------------------
     @property

@@ -101,6 +101,8 @@ def records_to_hops(records, key) -> List[HOp]:
     for r in records:
         if r.key != key or r.result is None:
             continue
+        if r.kind not in ("insert", "update", "delete", "search"):
+            continue  # scan/range/search_batch: not per-key register ops
         status = r.result.status
         if status not in ("OK", "NOT_FOUND"):
             continue  # FULL etc. — excluded from register semantics

@@ -19,6 +19,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from . import layout as L
+from . import ordered
 from . import race
 from .client import MASTER_COMMIT_MARK, FuseeClient
 from .events import OK, OpResult
@@ -126,6 +127,16 @@ class Master:
                 src = prim.regions[mig.region][:n]
                 for arr in mig.targets.values():
                     arr[:n] = src
+        elif mig.region in pool.ordered_region_set:
+            # the ordered keydir migrates like an index shard: converge
+            # straddling claim/clear rounds (adopt-backup + structural
+            # repair) before roles change, then resync the staged targets
+            ordered.repair_ordered(pool)
+            prim = pool.mns[pool.placement[mig.region][0]]
+            if prim.alive and mig.region in prim.regions:
+                src = prim.regions[mig.region]
+                for arr in mig.targets.values():
+                    arr[:] = src
         old_reps = list(pool.placement[mig.region])
         for mid, arr in mig.targets.items():
             pool.mns[mid].regions[mig.region] = arr
@@ -196,6 +207,9 @@ class Master:
         for g in pool.index_regions:
             if mid in pool.placement[g]:
                 self._repair_index_region(g)
+        #    ... and the ordered keydir's adopt-backup + structural repair
+        if any(mid in pool.placement[g] for g in pool.ordered_regions):
+            ordered.repair_ordered(pool)
         # 2. region re-homing: every region with a replica on the dead MN gets
         #    a fresh replica on the next alive ring successor; the first alive
         #    replica becomes primary.
@@ -298,6 +312,11 @@ class Master:
         pool = self.pool
         st = RecoveryStats(reconnect_ms=self.reconnect_ms)
         self.maybe_recover_mns()
+        # the crashed client may have died mid-leaf-split or mid-claim in
+        # the ordered keydir: converge replicas, reap half-split leaves,
+        # re-home stranded entries BEFORE replaying its embedded log (the
+        # log replay below re-ensures entries for recovered keys)
+        ordered.repair_ordered(pool)
 
         # -- step 1: find all blocks owned by cid via the BATs (MN-side scan)
         owned: List[Tuple[int, int]] = []  # (region, block_idx)
@@ -424,6 +443,10 @@ class Master:
                 pool.cas(region, i, slot_off, old_v, v_new)
             st.fixed_primaries += 1
         # else c3: finished; nothing to do
+        if obj["opcode"] != L.OPCODE_DELETE:
+            # the client may have crashed between its RACE commit and its
+            # ordered-keydir ensure: restore scan visibility (§5.3)
+            ordered.ensure_entry_direct(pool, key)
 
     def _find_slot_of(self, key: int, *vals) -> Optional[int]:
         cfg = self.pool.cfg
@@ -485,6 +508,8 @@ class Master:
         self._commit_log_of(v_new)
         if opcode == L.OPCODE_DELETE:
             self._reclaim_obj(ptr, sc)
+        else:
+            ordered.ensure_entry_direct(self.pool, key)
 
     def _reclaim_obj(self, ptr: int, sc: int):
         region, off = L.ptr_region(ptr), L.ptr_offset(ptr)

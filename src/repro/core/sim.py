@@ -188,6 +188,9 @@ class Scheduler:
                 "update": lambda: client.op_update(key, value),
                 "delete": lambda: client.op_delete(key),
                 "reclaim": lambda: client.op_reclaim(),
+                # ordered keydir (core/ordered.py): value = count / end key
+                "scan": lambda: client.op_scan(key, value),
+                "range": lambda: client.op_range(key, value),
             }[kind]()
         rec = OpRecord(cid=cid, op_id=self.next_op_id(), kind=kind,
                        key=key, value=value, inv_tick=self.tick)
@@ -371,12 +374,17 @@ class Scheduler:
 
     # ------------------------------------------------------------- driving
     def run_round_robin(self, max_ticks: int = 1_000_000):
-        """Drive all in-flight ops to completion, round-robin."""
+        """Drive all in-flight ops to completion, round-robin.
+
+        ``pick`` rotates deterministically so every (client, MN) QP lane
+        makes progress: a fixed pick=0 would starve higher lanes whenever
+        some op keeps refilling a lower one (e.g. the ordered keydir's
+        bounded retry loops waiting on a racing splitter's clears)."""
         ticks = 0
         while ticks < max_ticks:
             progressed = False
             for cid in self.eligible_cids():
-                if self.step(cid):
+                if self.step(cid, pick=ticks):
                     ticks += 1
                     progressed = True
             if not progressed:

@@ -135,7 +135,9 @@ class FuseeCluster:
             while self.scheduler.inflight(cid):
                 progressed = False
                 for ecid in self.scheduler.eligible_cids():
-                    progressed |= self.scheduler.step(ecid)
+                    # rotate the lane pick: no QP starves behind a retry
+                    # loop flooding another lane (see run_round_robin)
+                    progressed |= self.scheduler.step(ecid, pick=guard)
                 if not progressed or (guard := guard + 1) > 10**6:
                     raise SchedulerStalled(
                         f"client {cid}: could not drain before removal")

@@ -4,6 +4,7 @@ pure-jnp oracle (ref.py) and a jit'd wrapper (ops.py):
 * flash_attention — train/prefill attention (online softmax, GQA-aware)
 * paged_attention — decode attention over the FUSEE block pool
 * race_lookup     — batched RACE hash-index probe (FUSEE SEARCH phase 1)
+* leaf_probe      — batched ordered-index leaf search (SCAN locate phase)
 
 On CPU the kernels execute via ``interpret=True``; on TPU they compile to
 Mosaic.  Correctness is swept over shapes/dtypes in tests/test_kernels.py.
@@ -11,3 +12,4 @@ Mosaic.  Correctness is swept over shapes/dtypes in tests/test_kernels.py.
 from .flash_attention import flash_attention, flash_attention_ref  # noqa
 from .paged_attention import paged_attention, paged_attention_ref  # noqa
 from .race_lookup import race_lookup, race_lookup_batch, race_lookup_ref  # noqa
+from .leaf_probe import leaf_probe, leaf_probe_batch, leaf_probe_ref  # noqa

@@ -1,0 +1,2 @@
+from .ops import leaf_probe, leaf_probe_batch, leaf_probe_np  # noqa: F401
+from .ref import leaf_probe_ref, split64  # noqa: F401

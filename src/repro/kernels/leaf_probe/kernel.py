@@ -1,0 +1,56 @@
+"""Pallas TPU kernel for the batched ordered-index leaf probe — the
+"leaf search" phase of SCAN (core/ordered.py) as a fleet-scale hot spot:
+one invocation locates the covering leaf of EVERY client's scan start key
+in a tick (fleet.locate_wave).
+
+Shape of the problem: the fence table (leaf low keys, sorted) is small
+metadata — a few thousand uint64s — while the start-key batch scales with
+the fleet.  Both fit VMEM; the kernel tiles the key batch and keeps the
+whole fence table resident per tile (the same residency pattern as the
+race_lookup kernel's index).
+
+64-bit keys on 32-bit lanes: inputs arrive pre-split into (hi, lo) uint32
+halves; ``low <= start`` is the lexicographic pair compare.  The result
+``count(lows <= start) - 1`` is an (BLOCK, M) compare-and-reduce on the
+VPU — no gather, no MXU needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(shi_ref, slo_ref, lhi_ref, llo_ref, idx_ref):
+    shi = shi_ref[...]                                # (BK,)
+    slo = slo_ref[...]
+    lhi = lhi_ref[...]                                # (M,)
+    llo = llo_ref[...]
+    le = (lhi[None, :] < shi[:, None]) | (
+        (lhi[None, :] == shi[:, None]) & (llo[None, :] <= slo[:, None]))
+    idx_ref[...] = jnp.sum(le.astype(jnp.int32), axis=1) - 1
+
+
+def leaf_probe_fwd(starts_hi, starts_lo, lows_hi, lows_lo, *,
+                   block_keys: int = 256, interpret: bool = True):
+    """starts: (N,) uint32 halves; lows: (M,) uint32 halves (sorted as
+    uint64) -> (N,) int32 rightmost-low-<=-start indices (-1 = none)."""
+    N = starts_hi.shape[0]
+    M = lows_hi.shape[0]
+    block_keys = min(block_keys, N)
+    assert N % block_keys == 0
+    return pl.pallas_call(
+        functools.partial(_probe_kernel),
+        grid=(N // block_keys,),
+        in_specs=[
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+            pl.BlockSpec((block_keys,), lambda i: (i,)),
+            pl.BlockSpec((M,), lambda i: (0,)),       # fence table resident
+            pl.BlockSpec((M,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_keys,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.int32),
+        interpret=interpret,
+    )(starts_hi, starts_lo, lows_hi, lows_lo)

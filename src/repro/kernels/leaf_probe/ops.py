@@ -1,0 +1,68 @@
+"""jit'd public wrapper for the leaf-probe kernel, plus the host-facing
+**batched entry point** used by the simulator, the fleet engine, and the
+serving backend.
+
+``leaf_probe`` is the jitted device API (jnp in / jnp out, pre-split
+hi/lo halves).  ``leaf_probe_batch`` is the shared entry point: uint64
+numpy in / numpy out, pads the key batch to the kernel block size, and
+routes through the Pallas kernel only on TPU — elsewhere it runs the
+bit-exact numpy mirror (``core.ordered.leaf_probe_np``, a uint64
+searchsorted; interpret-mode Pallas would recompile per shape on every
+fleet tick whose fence table grew).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import numpy as np
+
+from repro.core.ordered import leaf_probe_np  # noqa: F401  (re-export)
+
+from .kernel import leaf_probe_fwd
+from .ref import leaf_probe_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_keys"))
+def leaf_probe(starts_hi, starts_lo, lows_hi, lows_lo, *,
+               block_keys: int = 256, use_kernel: bool = True):
+    """Batched leaf probe on pre-split uint32 halves -> (N,) int32."""
+    if not use_kernel:
+        return leaf_probe_ref(starts_hi, starts_lo, lows_hi, lows_lo)
+    return leaf_probe_fwd(starts_hi, starts_lo, lows_hi, lows_lo,
+                          block_keys=block_keys, interpret=not _on_tpu())
+
+
+def leaf_probe_batch(starts: np.ndarray, lows: np.ndarray, *,
+                     block_keys: int = 256,
+                     prefer_kernel: bool = None) -> np.ndarray:
+    """Shared entry point: locate the rightmost ``lows`` entry <= each
+    start key.  ``starts`` (N,) uint64, ``lows`` (M,) uint64 sorted
+    ascending; returns (N,) int32 (-1 = every low exceeds the start).
+
+    One invocation serves a whole fleet tick's scans — callers
+    (core/fleet.py locate_wave, core/api.py, serving/backend.py)
+    concatenate every client's start keys before calling."""
+    starts = np.ascontiguousarray(starts, np.uint64)
+    lows = np.ascontiguousarray(lows, np.uint64)
+    if prefer_kernel is None:
+        prefer_kernel = _on_tpu()
+    if prefer_kernel and len(lows):
+        try:
+            import jax.numpy as jnp
+            n = len(starts)
+            pad = -(-max(n, 1) // block_keys) * block_keys - n
+            sp = np.concatenate([starts, np.zeros(pad, np.uint64)])
+            shi = jnp.asarray((sp >> 32).astype(np.uint32))
+            slo = jnp.asarray((sp & 0xFFFFFFFF).astype(np.uint32))
+            lhi = jnp.asarray((lows >> 32).astype(np.uint32))
+            llo = jnp.asarray((lows & 0xFFFFFFFF).astype(np.uint32))
+            idx = leaf_probe(shi, slo, lhi, llo, block_keys=block_keys)
+            return np.asarray(idx[:n], np.int32)
+        except Exception:       # pragma: no cover - jax-less fallback
+            pass
+    return leaf_probe_np(starts, lows)

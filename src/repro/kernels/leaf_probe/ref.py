@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the vectorized ordered-index leaf probe.
+
+The ordered keydir (core/ordered.py) locates the covering leaf of a scan
+start key as "the rightmost leaf whose low fence <= start" over the
+sorted fence table.  Keys are 64-bit; TPU vector lanes are 32-bit, so
+both oracle and kernel operate on (hi, lo) uint32 pairs compared
+lexicographically — bit-exact with the numpy mirror
+(``core.ordered.leaf_probe_np``, a uint64 searchsorted).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def split64(x):
+    """uint64 -> (hi, lo) uint32 pair (works on traced jnp arrays)."""
+    x = x.astype(jnp.uint64)
+    return ((x >> jnp.uint64(32)).astype(jnp.uint32),
+            (x & jnp.uint64(0xFFFFFFFF)).astype(jnp.uint32))
+
+
+def leaf_probe_ref(starts_hi, starts_lo, lows_hi, lows_lo):
+    """starts: (N,) uint32 pair; lows: (M,) uint32 pair, sorted ascending
+    as uint64.  Returns (N,) int32: index of the rightmost low <= start,
+    -1 when every low exceeds the start.
+
+    count(lows <= start) - 1, computed as an (N, M) lexicographic
+    comparison reduced over M — gather-free, VPU-friendly.
+    """
+    le = (lows_hi[None, :] < starts_hi[:, None]) | (
+        (lows_hi[None, :] == starts_hi[:, None])
+        & (lows_lo[None, :] <= starts_lo[:, None]))
+    return jnp.sum(le.astype(jnp.int32), axis=1) - 1

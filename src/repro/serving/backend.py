@@ -43,6 +43,12 @@ class DeviceBackend:
         self.cid = cid
         self.crashed = False                 # set by ServeEngine.crash_worker
         self._values: Dict[int, Any] = {}    # page -> encoded value words
+        # ordered keydir twin (core/ordered.py on the sim substrate): the
+        # key32s this backend has upserted, kept as a *superset* of the
+        # live set — scans validate every candidate against the device
+        # index (one batched race_lookup probe), so spurious members are
+        # filtered exactly like stale ordered entries in the simulator
+        self._keydir: set = set()
 
     # ------------------------------------------------------------- submit
     def submit_many(self, ops: Sequence[Op]) -> List[KVFuture]:
@@ -111,6 +117,9 @@ class DeviceBackend:
                 page = int(pages[m])
                 won = bool(ok[k]); k += 1
                 self._values[page] = codec.encode_value(ops[idxs[n]].value)
+                # keydir superset: even a lost upsert means the KEY is
+                # live (another page won its slot); scans validate
+                self._keydir.add(key)
                 results[key] = OpResult(OK if won else FULL, page=page,
                                         value=self._values[page])
             for i in idxs:
@@ -119,13 +128,57 @@ class DeviceBackend:
             keys = np.array([_key32(ops[i].key) for i in idxs], np.int32)
             ok = self.pool.delete_batch(self.cid, keys)
             for n, i in enumerate(idxs):
+                if ok[n]:
+                    self._keydir.discard(int(keys[n]))
                 futs[i]._resolve(OpResult(OK if ok[n] else NOT_FOUND))
+        elif kind in ("scan", "range"):
+            for i in idxs:
+                futs[i]._resolve(self._scan_one(ops[i]))
         elif kind == "reclaim":
             n = self.pool.reclaim(self.cid)
             for i in idxs:
                 futs[i]._resolve(OpResult(OK, value=[n]))
         else:
             raise ValueError(kind)
+
+    # ------------------------------------------------------ ordered scan
+    def _scan_one(self, op: Op) -> OpResult:
+        """SCAN/RANGE on the device substrate: locate the start position
+        in the sorted keydir via the shared ``leaf_probe`` entry point,
+        validate the candidate window against the device index with one
+        batched ``race_lookup`` probe, and return ``[(key32, value),
+        ...]`` in key order — the serving twin of core/ordered.py."""
+        from repro.core.ordered import leaf_probe_np
+        start = _key32(op.key)
+        if op.kind == "scan":
+            count, end = int(op.value), None
+        else:
+            count, end = None, _key32(op.value)
+        keys = np.array(sorted(self._keydir), np.uint64)
+        if not len(keys):
+            return OpResult(OK, value=[])
+        try:                              # Pallas on TPU, numpy elsewhere
+            from repro.kernels import leaf_probe_batch as _probe
+        except Exception:                 # pragma: no cover - jax-less env
+            _probe = leaf_probe_np
+        pos = int(_probe(np.array([start], np.uint64), keys)[0])
+        first = pos if (pos >= 0 and int(keys[pos]) >= start) else pos + 1
+        cands = keys[first:]
+        if end is not None:
+            cands = cands[cands < np.uint64(end)]
+        out: list = []
+        i = 0
+        while i < len(cands) and (count is None or len(out) < count):
+            window = cands[i:i + max(2 * (count or 64), 64)]
+            ptr, found = self.pool.search(window.astype(np.int64)
+                                          .astype(np.int32))
+            for n, k in enumerate(window.tolist()):
+                if found[n]:
+                    out.append((int(k), self._values.get(int(ptr[n]))))
+                    if count is not None and len(out) >= count:
+                        break
+            i += len(window)
+        return OpResult(OK, value=out)
 
     # --------------------------------------------------- page management
     def release_pages(self, pages: np.ndarray):

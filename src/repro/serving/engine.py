@@ -136,6 +136,21 @@ class ServeEngine:
             **self._backend.stats(),
         }
 
+    def list_prefixes(self, start: int = 0, count: int = 64) -> List[tuple]:
+        """Ordered listing of live prefix-cache entries: the next
+        ``count`` block-hash keys >= ``start`` in key order, each with its
+        backing page id — the serving twin of the simulator's SCAN
+        (located via the shared ``leaf_probe`` entry point, validated
+        against the device index in one batched ``race_lookup`` probe)."""
+        res = self.store.submit(Op.scan(start, count)).result()
+        keys = [k for (k, _v) in (res.value or [])]
+        if not keys:
+            return []
+        ptr, found = self.pool.search(np.array(keys, np.int64)
+                                      .astype(np.int32))
+        return [(int(k), int(p)) for k, p, f in
+                zip(keys, ptr, found) if f]
+
     # ------------------------------------------------------------- ticks --
     def _admit(self):
         """Admit every queued request a free slot allows, then serve ALL

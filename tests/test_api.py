@@ -100,7 +100,7 @@ def test_submit_batch_pipelines_beyond_depth():
     kv = cl.store(0, max_inflight=4)
     futs = kv.submit_batch([Op.put(i, [i]) for i in range(40)])
     assert all(f.result().status == OK for f in futs)
-    assert kv.scan_stats()["inflight"] == 0
+    assert kv.stats()["inflight"] == 0
     assert all(kv.get(i) == [i] for i in range(40))
 
 
@@ -204,7 +204,7 @@ def test_batch_search_fast_path_one_rtt():
     assert len(fused) == 1 and fused[0].rtts == 1
     # whole batch cost 1 network RTT
     assert sum(r.rtts for r in new) == 1
-    st_ = kv.scan_stats()
+    st_ = kv.stats()
     assert st_["batch_fast_hits"] == 16 and st_["batch_fallbacks"] == 0
 
 
@@ -221,7 +221,7 @@ def test_batch_search_stale_cache_falls_back():
     assert all(r.status == OK for r in res)
     assert [r.value for r in res] == \
         [[100 + i] if i % 2 == 0 else [i] for i in range(8)]
-    st_ = kv0.scan_stats()
+    st_ = kv0.stats()
     assert st_["batch_fallbacks"] >= 1      # stale entries took the slow path
 
 
@@ -261,12 +261,12 @@ def test_shadow_memo_reuses_table():
         kv.get(i)
     ops = [Op.get(i) for i in range(8)]
     [f.result() for f in kv.submit_batch(ops)]
-    st1 = kv.scan_stats()["shadow_rebuilds"]
+    st1 = kv.stats()["shadow_rebuilds"]
     # cache untouched between identical batches -> no rebuild... but the
     # fused search bumps access counters, so one more rebuild at most
     [f.result() for f in kv.submit_batch(ops)]
     [f.result() for f in kv.submit_batch(ops)]
-    st3 = kv.scan_stats()
+    st3 = kv.stats()
     assert st3["shadow_rebuilds"] <= st1 + 2
     assert st3["batch_fast_hits"] == 24
 
@@ -286,7 +286,7 @@ def test_device_backend_same_surface():
     assert [r.value for r in got] == [b"v%d" % i for i in range(32)]
     assert store.delete("blk-0").status == OK
     assert store.get("blk-0") is None
-    assert store.scan_stats()["backend"] == "device"
+    assert store.stats()["backend"] == "device"
 
 
 def test_device_backend_duplicate_keys_in_one_batch():

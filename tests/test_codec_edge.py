@@ -114,3 +114,43 @@ def test_malformed_tag_strict_decode_raises():
 def test_untagged_words_pass_strict_decode():
     assert codec.decode_value([1, 2, 3], strict=True) == [1, 2, 3]
     assert codec.decode_value(None, strict=True) is None
+
+
+# -------------------------------------------------- scan start-key edges ----
+def _ordered_store():
+    return FuseeCluster(DMConfig(num_mns=4, replication=2,
+                                 ordered_index=True),
+                        num_clients=1).store(0)
+
+
+def test_scan_with_64kib_and_non_utf8_start_keys():
+    """SCAN start keys go through the same codec boundary as every other
+    key: 64 KiB byte strings and non-UTF8 bytes hash into the ordered
+    64-bit key space, and the scan starts at that hashed position."""
+    kv = _ordered_store()
+    keys = [b"\xff\xfe\xfd", b"nul\x00mid", b"\x00\xffkey" * (1 << 14)]
+    for i, k in enumerate(keys):
+        assert kv.put(k, bytes([i + 1]) * 2).status == OK
+    enc = sorted(codec.encode_key(k) for k in keys)
+    # scanning from 0 sees all three, in hashed-key order
+    res = kv.scan(0, 10)
+    assert [k for k, _ in res] == enc
+    # a 64 KiB start key scans from ITS hashed position
+    k64k = keys[2]
+    res = kv.scan(k64k, 10)
+    assert [k for k, _ in res] == \
+        [e for e in enc if e >= codec.encode_key(k64k)]
+    # range between two byte keys honors the [start, end) bound
+    lo, hi = sorted(codec.encode_key(k) for k in keys[:2])
+    res = kv.range(lo, hi)
+    assert [k for k, _ in res] == [e for e in enc if lo <= e < hi]
+
+
+def test_scan_boundary_start_keys():
+    kv = _ordered_store()
+    for k in (0, 1, 2 ** 63, 2 ** 64 - 2):
+        assert kv.put(k, [1]).status == OK
+    assert [k for k, _ in kv.scan(0, 10)] == [0, 1, 2 ** 63, 2 ** 64 - 2]
+    assert [k for k, _ in kv.scan(2 ** 63, 10)] == [2 ** 63, 2 ** 64 - 2]
+    assert [k for k, _ in kv.range(1, 2 ** 63)] == [1]
+    assert kv.range(2 ** 64 - 1, 2 ** 64 - 1) == []

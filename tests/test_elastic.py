@@ -169,7 +169,7 @@ def test_batch_search_wave_spans_shards():
     res = [f.result() for f in kv.submit_batch([Op.get(k) for k in keys])]
     assert all(r.status == OK and r.value == [k] * 4
                for k, r in zip(keys, res))
-    st = kv.scan_stats()
+    st = kv.stats()
     assert st["batch_fast_hits"] > 0
 
 

@@ -315,15 +315,24 @@ def test_health_snapshot_contents():
     assert "epoch=" in h.summary()
 
 
-def test_scan_stats_reports_failure_state():
+def test_stats_reports_failure_state():
     cl = _cluster()
     kv = cl.store(0)
     kv.put(1, [1])
     cl.crash_mn(1)
     kv.get(1)
-    st = kv.scan_stats()
+    st = kv.stats()
     assert st["mns_alive"] == 3 and st["crashed"] is False
     assert st["epoch"] == cl.pool.epoch
+
+
+def test_scan_stats_deprecated_alias_warns():
+    import warnings
+    kv = _cluster().store(0)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert kv.scan_stats() == kv.stats()
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
 
 
 # ------------------------------------------------------------ device twin ---
@@ -339,7 +348,7 @@ def test_device_backend_crashed_worker_raises_typed():
     with pytest.raises(ClientCrashed) as ei:
         store.put(b"k2", b"v2")
     assert ei.value.cid == be.cid
-    assert store.scan_stats()["crashed"] is True
+    assert store.stats()["crashed"] is True
     be.pool.recover_client(be.cid)
     be.crashed = False                          # ServeEngine.recover_worker path
     assert store.put(b"k2", b"v2").status == OK

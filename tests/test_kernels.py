@@ -133,6 +133,47 @@ def test_race_lookup_no_false_negatives(seed):
     assert all(f[i] for i in inserted)
 
 
+# ------------------------------------------------------------- leaf probe --
+@pytest.mark.parametrize("n_starts,n_lows", [(256, 7), (512, 100), (128, 1)])
+def test_leaf_probe_kernel_matches_oracle_and_numpy(n_starts, n_lows):
+    """The ordered-index leaf probe: Pallas kernel (interpret mode), jnp
+    oracle, and the numpy mirror (core.ordered.leaf_probe_np, a uint64
+    searchsorted) must be bit-exact — including lows straddling the
+    32-bit boundary, which exercises the hi/lo pair compare."""
+    from repro.core.ordered import leaf_probe_np
+    from repro.kernels.leaf_probe.kernel import leaf_probe_fwd
+    from repro.kernels.leaf_probe.ref import leaf_probe_ref
+
+    rng = np.random.default_rng(n_starts + n_lows)
+    lows = np.sort(rng.choice(np.array(
+        [0, 1, 5, (1 << 32) - 1, 1 << 32, (1 << 32) + 7, 1 << 40,
+         (1 << 64) - 2], np.uint64), size=n_lows, replace=True))
+    lows = np.unique(np.concatenate(
+        [lows, rng.integers(0, 1 << 63, size=max(n_lows - len(lows), 1),
+                            dtype=np.uint64)]))[:n_lows]
+    lows = np.sort(lows)
+    starts = rng.integers(0, 1 << 64, size=n_starts, dtype=np.uint64)
+    starts[: len(lows)] = lows[: len(lows)]          # exact-hit edges
+    want = leaf_probe_np(starts, lows)
+    shi = jnp.asarray((starts >> 32).astype(np.uint32))
+    slo = jnp.asarray((starts & 0xFFFFFFFF).astype(np.uint32))
+    lhi = jnp.asarray((lows >> 32).astype(np.uint32))
+    llo = jnp.asarray((lows & 0xFFFFFFFF).astype(np.uint32))
+    got_ref = np.asarray(leaf_probe_ref(shi, slo, lhi, llo))
+    got_k = np.asarray(leaf_probe_fwd(shi, slo, lhi, llo,
+                                      block_keys=128, interpret=True))
+    assert (got_ref == want).all()
+    assert (got_k == want).all()
+
+
+def test_leaf_probe_batch_entry_point():
+    from repro.kernels import leaf_probe_batch
+    lows = np.array([0, 10, 20, 30], np.uint64)
+    starts = np.array([0, 5, 10, 29, 30, 31, 2 ** 63], np.uint64)
+    got = leaf_probe_batch(starts, lows)
+    assert got.tolist() == [0, 0, 1, 2, 3, 3, 3]
+
+
 # ------------------------------------------------------ slot packing twin --
 @settings(max_examples=50, deadline=None)
 @given(fp=st.integers(1, 255), ptr=st.integers(0, (1 << 24) - 1))

@@ -193,3 +193,47 @@ def test_random_mix_across_add_mn_cutover_linearizable(seed, steps):
     assert check_linearizable(records_to_hops(sched.history, 5),
                               initial=None), \
         f"seed={seed} steps={steps} final={final.result}"
+
+
+# ------------------------------------------------- quiescent scan totality --
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 100_000), depth=st.integers(1, 4))
+def test_quiescent_scan_contains_exactly_committed_keys(seed, depth):
+    """The ordered-keydir contract (core/ordered.py): after a random
+    mixed insert/update/delete/scan history quiesces, a scan of
+    ``[start, end)`` returns EXACTLY the keys whose point reads succeed —
+    every committed key appears, no deleted/uncommitted key does, in
+    order, with the committed value."""
+    rng = np.random.default_rng(seed)
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=2,
+                               ordered_index=True, region_words=1 << 15,
+                               regions_per_mn=16),
+                      num_clients=3, seed=seed)
+    sched = cl.scheduler
+    keys = list(range(24))
+    for k in keys[:12]:
+        sched.submit(0, "insert", k, [k])
+    sched.run_round_robin()
+    kinds = ("insert", "update", "delete", "scan")
+    val = 1000
+    for c in range(3):
+        for _ in range(depth):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            key = keys[int(rng.integers(len(keys)))]
+            if kind == "scan":
+                sched.submit(c, "scan", key, 1 + int(rng.integers(12)))
+            else:
+                v = [val] if kind in ("insert", "update") else None
+                val += 1
+                sched.submit(c, kind, key, v)
+    sched.run_random(rng=rng)          # random interleaving, then quiesce
+    kv = cl.store(0)
+    committed = {k: kv.get(k) for k in keys}
+    live = sorted(k for k, v in committed.items() if v is not None)
+    for start, end in ((0, 24), (5, 17), (11, 12), (23, 24)):
+        res = kv.range(start, end)
+        want = [k for k in live if start <= k < end]
+        assert [k for k, _ in res] == want, \
+            f"seed={seed} range[{start},{end}): {res} != {want}"
+        for k, v in res:
+            assert committed[k] == v, f"seed={seed} key={k}"

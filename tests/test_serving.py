@@ -210,3 +210,10 @@ def test_engine_serves_and_hits_prefix_cache():
     # later requests hit the shared 64-token prefix block
     assert sum(q.prefix_hits for q in done) >= 2
     assert eng.pool.check_replicas_converged()
+    # ordered listing of live prefixes (the serving scan twin): sorted
+    # block-hash keys, each backed by a live page in the device index
+    listed = eng.list_prefixes(0, 64)
+    assert listed, "prefix blocks were inserted, listing must see them"
+    keys = [k for k, _p in listed]
+    assert keys == sorted(set(keys))
+    assert all(p >= 0 for _k, p in listed)
