@@ -1,0 +1,19 @@
+"""Protocol sanitizer suite (static + dynamic analyses).
+
+Three legs, per the sanitizer design:
+
+* ``trace``  — a ring-buffer recorder for one-sided verbs (READ / WRITE /
+  CAS / FAA and their fleet-mode batch twins), attached to a ``DMPool`` by
+  instance-method wrapping so the un-attached pool pays zero cost;
+* ``races``  — a vectorized happens-before pass over a recorded trace that
+  flags cross-client conflicts the FUSEE protocol does *not* legalize
+  (stale-epoch mutations, acked lost empty-slot CASes, unguarded
+  write/write conflicts, primary-before-backup clears, torn reads);
+* ``lint``   — AST protocol lints (L001-L005), runnable as
+  ``python -m repro.analysis.lint``;
+* ``heapcheck`` — a post-drain DM heap / placement-epoch auditor
+  (leaks, double references, BAT ownership, replica divergence).
+"""
+from .trace import VerbTracer  # noqa: F401
+from .races import Finding, detect, report  # noqa: F401
+from .heapcheck import HeapReport, audit  # noqa: F401

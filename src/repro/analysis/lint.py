@@ -1,0 +1,393 @@
+"""AST protocol lints for the FUSEE reproduction (L001-L005).
+
+Run as ``python -m repro.analysis.lint [paths...]`` (defaults to the
+``repro`` package); exits nonzero on any finding, which is what the CI
+``analysis`` job enforces.  Rules encode protocol contracts that type
+checkers cannot see:
+
+L001  **epoch-threaded verbs** — a direct ``pool.read/write/cas/faa``
+      (or ``*_batch``) call site must sit in a function that compares a
+      lease ``epoch`` (the §5.2 stale-verb guard), unless the module runs
+      under master authority (``master.py``, ``migrate.py``, ``heap.py``
+      itself).  The PR-3 stale-epoch redirection bug class: a verb that
+      executes against re-homed placement without an issue-time epoch
+      check.
+L002  **nondeterminism** — ``random.*``, ``time.time()``, and ad-hoc
+      ``np.random.default_rng`` / ``np.random.SeedSequence`` / global
+      ``np.random.*`` draws are banned outside ``core/rng.py``: every
+      random decision must derive from a named ``SimRng`` substream or
+      the replay contract breaks.  (Explicitly-keyed ``jax.random`` is
+      deterministic and exempt.)
+L003  **pool-array mutation** — only ``DMPool`` (and the master-authority
+      modules) may store into MN region arrays (``*.regions[...]`` or
+      names derived from them).  Everyone else goes through verbs, which
+      the tracer, netmodel, and crash-stop logic can see.
+L004  **scalar loops in batch paths** — ``fleet.py`` functions and
+      ``heap.py`` ``*_batch`` methods must not issue scalar verbs from a
+      Python ``for``/``while`` (the fleet tick's whole point is one array
+      call per verb kind; a per-client loop silently reverts to O(N)
+      Python).
+L005  **bare assert in protocol code** — ``core/*.py`` must raise typed
+      ``faults`` errors carrying reproducing context instead of ``assert``
+      (asserts vanish under ``python -O`` and carry no seed/cid/tick).
+
+Suppression: a trailing ``# lint: allow-<name>`` pragma on the offending
+line, or on the enclosing ``def``/``class`` line to cover the whole body.
+``<name>`` is the rule id (``L003``) or its alias: ``assert`` (L005),
+``epoch`` (L001), ``nondet`` (L002), ``pool-mutation`` (L003),
+``scalar-loop`` (L004).  Pragmas are deliberate, documented exemptions —
+the lint keeps them honest by flagging unknown names.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+__all__ = ["LintFinding", "lint_source", "lint_paths", "main", "RULES"]
+
+RULES = {
+    "L001": "verb site lacks a lease-epoch guard",
+    "L002": "nondeterministic source outside core/rng.py",
+    "L003": "direct mutation of pool region arrays outside DMPool",
+    "L004": "scalar verb loop inside a batch path",
+    "L005": "bare assert in protocol code",
+}
+
+_ALIASES = {
+    "epoch": "L001", "nondet": "L002", "pool-mutation": "L003",
+    "scalar-loop": "L004", "assert": "L005",
+}
+
+VERBS = ("read", "write", "cas", "faa")
+BATCH_VERBS = tuple(v + "_batch" for v in VERBS)
+
+# modules that legitimately run under master authority (recovery,
+# migration, the pool itself): direct array/verb access is their job
+MASTER_AUTHORITY = {"master.py", "migrate.py", "heap.py"}
+
+_PRAGMA_RE = re.compile(r"#\s*lint:\s*allow-([A-Za-z0-9_-]+)")
+
+
+@dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    rule: str
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.msg}"
+
+
+# ------------------------------------------------------------------ helpers
+def _dotted(node) -> str:
+    """Best-effort dotted name of an expression ('pool.cas', 'np.random')."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def _pragmas(text: str) -> Dict[int, Set[str]]:
+    """line -> set of rule ids allowed on that line."""
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(text.splitlines(), 1):
+        for m in _PRAGMA_RE.finditer(line):
+            name = m.group(1)
+            rule = _ALIASES.get(name.lower(), name.upper())
+            if rule not in RULES:
+                out.setdefault(i, set()).add("?" + name)
+            else:
+                out.setdefault(i, set()).add(rule)
+    return out
+
+
+def _contains_epoch_compare(fn: ast.AST) -> bool:
+    """Does the function body compare anything called ``epoch``?"""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Compare):
+            for part in [node.left] + list(node.comparators):
+                for sub in ast.walk(part):
+                    name = getattr(sub, "attr", None) or \
+                        (sub.id if isinstance(sub, ast.Name) else None)
+                    if name and "epoch" in name.lower():
+                        return True
+    return False
+
+
+def _names_in_target(target) -> List[str]:
+    """Names bound by an assignment/loop target (handles tuple unpack)."""
+    out = []
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.append(node.id)
+    return out
+
+
+def _mentions_regions(node) -> bool:
+    return any(isinstance(n, ast.Attribute) and n.attr == "regions"
+               for n in ast.walk(node))
+
+
+# ------------------------------------------------------------------- engine
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, rel: str, text: str,
+                 rules: Set[str]):
+        self.path = path
+        self.base = os.path.basename(rel)
+        self.in_core = f"{os.sep}core{os.sep}" in rel or \
+            rel.replace("/", os.sep).startswith(f"core{os.sep}")
+        self.is_rng = rel.replace(os.sep, "/").endswith("core/rng.py")
+        self.rules = rules
+        self.pragmas = _pragmas(text)
+        self.findings: List[LintFinding] = []
+        self._fn_stack: List[ast.AST] = []   # enclosing function defs
+        self._cls_stack: List[ast.ClassDef] = []
+        self._tainted: List[Set[str]] = []   # per-function region-array names
+
+    # ----------------------------------------------------------- reporting
+    def _flag(self, rule: str, node: ast.AST, msg: str):
+        if rule not in self.rules:
+            return
+        line = getattr(node, "lineno", 0)
+        covered = [line] + \
+            [f.lineno for f in self._fn_stack] + \
+            [c.lineno for c in self._cls_stack]
+        for ln in covered:
+            if rule in self.pragmas.get(ln, ()):
+                return
+        self.findings.append(
+            LintFinding(self.path, line, rule, msg))
+
+    # -------------------------------------------------------------- scopes
+    def _visit_fn(self, node):
+        self._fn_stack.append(node)
+        self._tainted.append(set())
+        self.generic_visit(node)
+        self._tainted.pop()
+        self._fn_stack.pop()
+
+    def visit_FunctionDef(self, node):
+        self._visit_fn(node)
+
+    def visit_AsyncFunctionDef(self, node):
+        self._visit_fn(node)
+
+    def visit_ClassDef(self, node):
+        self._cls_stack.append(node)
+        self.generic_visit(node)
+        self._cls_stack.pop()
+
+    # --------------------------------------------------------------- L005
+    def visit_Assert(self, node):
+        if self.in_core:
+            self._flag(
+                "L005", node,
+                "bare assert in protocol code — raise a typed faults error "
+                "(ProtocolViolation / RegionLost / ...) with reproducing "
+                "context, or add `# lint: allow-assert (<why>)`")
+        self.generic_visit(node)
+
+    # --------------------------------------------------------------- calls
+    def visit_Call(self, node):
+        name = _dotted(node.func)
+        self._check_L001(node, name)
+        self._check_L002(node, name)
+        self.generic_visit(node)
+
+    def _check_L001(self, node, name):
+        if self.base in MASTER_AUTHORITY or not self.in_core:
+            return
+        last = name.rsplit(".", 1)
+        if len(last) != 2 or last[1] not in VERBS + BATCH_VERBS:
+            return
+        recv = last[0]
+        # receivers that are (or hold) the pool — heuristic on naming
+        if not (recv in ("pool", "p", "self.pool")
+                or recv.endswith(".pool")):
+            return
+        if self._fn_stack and _contains_epoch_compare(self._fn_stack[-1]):
+            return    # the §5.2 guard is present in this function
+        self._flag(
+            "L001", node,
+            f"direct pool verb `{name}(...)` without a lease-epoch guard "
+            "in the enclosing function — stale verbs must bounce (§5.2); "
+            "compare the issue-time epoch or add "
+            "`# lint: allow-epoch (<why>)`")
+
+    def _check_L002(self, node, name):
+        if self.is_rng:
+            return
+        bad = None
+        if name.startswith(("np.random.", "numpy.random.")):
+            bad = f"`{name}`"
+        elif name == "time.time":
+            bad = "`time.time()` (wall clock)"
+        elif name.startswith("random.") and name.count(".") == 1:
+            bad = f"stdlib `{name}`"
+        if bad:
+            self._flag(
+                "L002", node,
+                f"{bad} breaks seeded replay — draw from a named "
+                "core/rng.py SimRng substream, or add "
+                "`# lint: allow-nondet (<why>)`")
+
+    # --------------------------------------------------------------- L003
+    def visit_Assign(self, node):
+        self._check_store_targets(node.targets, node)
+        if self._tainted and _mentions_regions(node.value):
+            for t in node.targets:
+                self._tainted[-1].update(_names_in_target(t))
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        self._check_store_targets([node.target], node)
+        self.generic_visit(node)
+
+    def visit_For(self, node):
+        if self._tainted and _mentions_regions(node.iter):
+            self._tainted[-1].update(_names_in_target(node.target))
+        self._check_L004(node)
+        self.generic_visit(node)
+
+    def visit_While(self, node):
+        self._check_L004(node)
+        self.generic_visit(node)
+
+    def _check_store_targets(self, targets, node):
+        if self.base in MASTER_AUTHORITY or not self.in_core:
+            return
+        for t in targets:
+            if not isinstance(t, ast.Subscript):
+                continue
+            if _mentions_regions(t.value):
+                self._flag(
+                    "L003", node,
+                    "direct store into an MN region array — only DMPool "
+                    "(and master-authority modules) may bypass the verb "
+                    "layer; issue verbs, or add "
+                    "`# lint: allow-pool-mutation (<why>)`")
+            elif isinstance(t.value, ast.Name) and self._tainted \
+                    and t.value.id in self._tainted[-1]:
+                self._flag(
+                    "L003", node,
+                    f"store into `{t.value.id}[...]`, which aliases an MN "
+                    "region array — only DMPool (and master-authority "
+                    "modules) may bypass the verb layer; issue verbs, or "
+                    "add `# lint: allow-pool-mutation (<why>)`")
+
+    # --------------------------------------------------------------- L004
+    def _in_batch_scope(self) -> bool:
+        if self.base == "fleet.py":
+            return True
+        if self.base == "heap.py" and self._fn_stack:
+            fn = self._fn_stack[-1]
+            return getattr(fn, "name", "").endswith("_batch")
+        return False
+
+    def _check_L004(self, node):
+        if not self._in_batch_scope():
+            return
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                name = _dotted(sub.func)
+                last = name.rsplit(".", 1)
+                if len(last) == 2 and last[1] in VERBS \
+                        and (last[0] in ("pool", "p", "self", "self.pool")
+                             or last[0].endswith(".pool")):
+                    self._flag(
+                        "L004", node,
+                        f"scalar verb `{name}(...)` inside a Python "
+                        f"{'for' if isinstance(node, ast.For) else 'while'} "
+                        "loop on a batch path — use the *_batch twins (one "
+                        "array call per verb kind), or add "
+                        "`# lint: allow-scalar-loop (<why>)`")
+                    return
+
+
+# ---------------------------------------------------------------- frontends
+def lint_source(text: str, path: str, *, rel: Optional[str] = None,
+                rules: Optional[Set[str]] = None) -> List[LintFinding]:
+    """Lint one module's source.  ``rel`` is the path relative to the
+    package root (used for scoping rules); defaults to ``path``."""
+    rel = rel if rel is not None else path
+    rules = set(RULES) if rules is None else set(rules)
+    try:
+        tree = ast.parse(text, filename=path)
+    except SyntaxError as e:
+        return [LintFinding(path, e.lineno or 0, "E000",
+                            f"syntax error: {e.msg}")]
+    linter = _Linter(path, rel, text, rules)
+    linter.visit(tree)
+    # unknown pragma names are findings too — a typo'd pragma silently
+    # suppressing nothing (or meant to suppress something) is a trap
+    for line, names in sorted(linter.pragmas.items()):
+        for n in sorted(names):
+            if n.startswith("?"):
+                linter.findings.append(LintFinding(
+                    path, line, "E001",
+                    f"unknown lint pragma `allow-{n[1:]}` (valid: "
+                    f"{', '.join(sorted(_ALIASES))} or a rule id)"))
+    linter.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return linter.findings
+
+
+def _package_root() -> str:
+    """The installed ``repro`` package directory (default lint target)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(here)
+
+
+def lint_paths(paths: List[str], *,
+               rules: Optional[Set[str]] = None) -> List[LintFinding]:
+    findings: List[LintFinding] = []
+    for root in paths:
+        root = os.path.abspath(root)
+        if os.path.isfile(root):
+            files: List[Tuple[str, str]] = [(root, os.path.basename(root))]
+        else:
+            files = []
+            for dirpath, dirnames, filenames in os.walk(root):
+                dirnames[:] = [d for d in dirnames
+                               if d not in ("__pycache__", ".git")]
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        full = os.path.join(dirpath, fn)
+                        files.append((full, os.path.relpath(full, root)))
+        for full, rel in sorted(files):
+            with open(full, "r", encoding="utf-8") as fh:
+                text = fh.read()
+            findings += lint_source(text, full, rel=rel, rules=rules)
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="FUSEE protocol lints (L001-L005); exit 1 on findings.")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories (default: the repro package)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    args = ap.parse_args(argv)
+    rules = set(args.rules.split(",")) if args.rules else None
+    paths = args.paths or [_package_root()]
+    findings = lint_paths(paths, rules=rules)
+    for f in findings:
+        print(f)
+    n = len(findings)
+    print(f"protocol lint: {n} finding(s) in "
+          f"{', '.join(os.path.relpath(p) if os.path.isabs(p) else p for p in paths)}"
+          if n else "protocol lint: clean")
+    return 1 if n else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

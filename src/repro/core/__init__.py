@@ -8,7 +8,7 @@ from .master import Master, RecoveryStats  # noqa: F401
 from .faults import (ClientCrashed, ClientHealth, ClusterError,  # noqa: F401
                      ClusterHealth, FaultEvent, FaultInjector, FaultPlan,
                      InsufficientReplicas, MNHealth, OrderedIndexDisabled,
-                     SchedulerStalled)
+                     ProtocolViolation, RegionLost, SchedulerStalled)
 from . import ordered  # noqa: F401
 from .ring import PlacementDirectory  # noqa: F401
 from .rng import SimRng  # noqa: F401

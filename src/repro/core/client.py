@@ -28,6 +28,7 @@ from .events import (EXISTS, FULL, NOT_FOUND, OK, MasterCall, OpResult, Phase,
                      Verb)
 from .heap import FIRST_DATA_REGION, INDEX_REGION, META_REGION, \
     META_WORDS_PER_CLIENT, DMConfig, DMPool
+from .rng import SimRng
 
 # Sentinel the master writes into an old_value field it committed on a
 # client's behalf (§A.4.3); any non-zero value with a valid CRC means
@@ -49,6 +50,14 @@ MAX_OP_RETRIES = 64
 # (Alg 4 / §A.4.3), which arbitrates the stalled round.  Generous enough
 # that a merely slow-scheduled winner almost always commits first.
 MAX_LOSE_POLLS = 48
+
+# TEST-ONLY: when True, op_insert acks OK after LOSING an empty-slot CAS
+# round instead of retrying — the historical PR-3 lost-write bug (the
+# winner may have inserted a *different* key, so the acknowledged write is
+# nowhere in the index).  Exists solely so regression tests can
+# re-introduce the bug and assert the race detector
+# (repro.analysis.races, rule ``lost_cas_ack``) flags it.
+UNSAFE_ACK_LOST_EMPTY_CAS = False
 
 
 def evaluate_rules_pure(v_list: List[Optional[int]], v_new: int):
@@ -109,14 +118,19 @@ class FuseeClient:
                  enable_cache: bool = True,
                  cache_threshold: float = 0.5,
                  replication_mode: str = "snapshot",  # 'snapshot' | 'cr'
-                 seed: int = 0):
+                 seed: int = 0,
+                 rng: Optional[np.random.Generator] = None):
         self.cid = cid
         self.pool = pool
         self.cfg: DMConfig = pool.cfg
         self.enable_cache = enable_cache
         self.cache_threshold = cache_threshold
         self.replication_mode = replication_mode
-        self.rng = np.random.default_rng(seed * 7919 + cid)
+        # per-client protocol-jitter substream: callers (store.py) thread
+        # the run's SimRng root; standalone construction derives the same
+        # named substream from the seed (deterministic-replay contract)
+        self.rng = rng if rng is not None \
+            else SimRng(seed).stream(f"client.{cid}")
         self.slab: Dict[int, SlabClass] = {}
         self.cache: Dict[int, CacheEntry] = {}
         self.epoch = pool.epoch
@@ -649,7 +663,7 @@ class FuseeClient:
             return None
         ptr, next_ptr, prev_ptr = self._take_obj(sc)
         words, sc2 = L.build_object(key, value, next_ptr, prev_ptr, opcode)
-        assert sc2 == sc
+        assert sc2 == sc  # lint: allow-assert (hot path; both derive from vlen)
         self._pending_mid = words[len(words) - 2]
         return ptr, sc, prev_ptr, words
 
@@ -706,7 +720,8 @@ class FuseeClient:
                 continue
             if status != OK:
                 return OpResult(status, rule=rule)
-            if v_old == 0 and rule in (LOSE, FINISH, "MASTER_LOSE"):
+            if v_old == 0 and rule in (LOSE, FINISH, "MASTER_LOSE") \
+                    and not UNSAFE_ACK_LOST_EMPTY_CAS:
                 # Lost an *empty-slot* race: the winner may have inserted a
                 # DIFFERENT key there, so returning OK would acknowledge a
                 # write that is nowhere in the index.  Retry from the top

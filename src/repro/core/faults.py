@@ -54,6 +54,27 @@ class SchedulerStalled(ClusterError):
     legal protocol state."""
 
 
+class ProtocolViolation(ClusterError):
+    """An internal protocol invariant was broken — a bug in this repo (or
+    a test harness misusing an internal surface), never a legal runtime
+    state.  The message carries reproducing context (cid / op / region /
+    tick) so a failing storm seed can be replayed; the protocol lint
+    (repro.analysis.lint, rule L005) requires protocol code to raise this
+    instead of bare ``assert``."""
+
+
+class RegionLost(ClusterError):
+    """A region has no live replica left: more than r-1 MNs hosting it
+    failed simultaneously, which is outside the paper's §5.1 fault model
+    (data loss — recovery cannot proceed)."""
+
+    def __init__(self, region: int, detail: str = ""):
+        self.region = region
+        super().__init__(
+            f"region {region} lost: no live replica remains "
+            f"(>= r simultaneous MN failures){' — ' + detail if detail else ''}")
+
+
 class InsufficientReplicas(ClusterError):
     """``remove_mn`` rejected: draining the node would leave fewer ring
     members than the replication factor, so some region could not keep r

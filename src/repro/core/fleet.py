@@ -40,6 +40,7 @@ from . import ordered
 from .api import KVFuture, Op, SimBackend, _fold32
 from .faults import SchedulerStalled
 from .shadow import build_shadow, hash32_np, race_lookup_np
+from . import sim as sim_module
 from .sim import Scheduler
 
 __all__ = ["FleetEngine"]
@@ -111,9 +112,12 @@ class FleetEngine:
             if not items:
                 continue
             # stale-epoch verbs FAIL without touching the pool (§5.2 —
-            # mirrors sim._exec_verb's guard)
-            live = [it for it in items
-                    if not (0 <= it[3].epoch != epoch)]
+            # mirrors sim._exec_verb's guard; same test-only bypass flag)
+            if sim_module.UNSAFE_EXEC_STALE_EPOCH:
+                live = items
+            else:
+                live = [it for it in items
+                        if not (0 <= it[3].epoch != epoch)]
             res_by_id = {id(it): r
                          for it, r in zip(live, self._exec_kind(kind, live))} \
                 if live else {}
@@ -133,9 +137,20 @@ class FleetEngine:
             sched._advance(cid, run, run.results)
         return executed
 
-    def _exec_kind(self, kind: str, items) -> list:
+    def _exec_kind(self, kind: str, items) -> list:  # lint: allow-epoch (tick() drops stale-epoch verbs before dispatch)
         pool = self.sched.pool
         verbs = [v for (_c, _r, _i, v) in items]
+        tr = pool._tracer
+        if tr is not None and not tr.paused \
+                and kind in ("read", "write", "cas", "faa"):
+            # per-verb issue context for the tracer: one batch, one call
+            tr.set_batch_ctx(
+                self.sched.tick,
+                [c for (c, _r, _i, _v) in items],
+                [r.record.op_id for (_c, r, _i, _v) in items],
+                [r.phase_no for (_c, r, _i, _v) in items],
+                [tr.intern(r.phase_label) for (_c, r, _i, _v) in items],
+                [v.epoch for v in verbs])
         if kind == "read":
             self.counters["array_calls"] += 1
             shard_set = pool.index_region_set

@@ -131,6 +131,10 @@ class DMPool:
         self._place_initial(seed)
         # traffic accounting (bytes in+out per MN) for the network model
         self.mn_bytes = np.zeros(cfg.num_mns, dtype=np.int64)
+        # verb tracer (repro.analysis.trace) — None unless attached; the
+        # tracer installs instance-attribute wrappers over the verb
+        # methods, so the un-attached pool pays zero per-verb cost
+        self._tracer = None
 
     # ---------------- placement -------------------------------------------
     @property
@@ -255,7 +259,11 @@ class DMPool:
         migration engine has re-homed them all) and leaves membership.
         Retired is distinct from crashed — Alg-3 must not run."""
         mn = self.mns[mid]
-        assert not mn.regions, f"retire_node({mid}) with hosted regions"
+        if mn.regions:
+            from .faults import ProtocolViolation  # local: faults->master->client->heap cycle
+            raise ProtocolViolation(
+                f"retire_node({mid}) while it still hosts regions "
+                f"{sorted(mn.regions)}: drain (migrate) them first")
         mn.retired = True
         mn.alive = False
         self.directory.remove_member(mid)
@@ -543,7 +551,11 @@ class DMPool:
             if mn.alive and region in mn.regions:
                 src = mn.regions[region]
                 break
-        assert src is not None, "region lost: more than r-1 MN failures"
+        if src is None:
+            from .faults import RegionLost  # local: faults->master->client->heap cycle
+            raise RegionLost(region,
+                             f"old placement {self.placement[region]}, "
+                             f"requested re-home to {new_replicas}")
         for mid in new_replicas:
             mn = self.mns[mid]
             if region not in mn.regions:

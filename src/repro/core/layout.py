@@ -70,8 +70,8 @@ def _u64(x: int) -> np.uint64:
 
 # --- pointer ----------------------------------------------------------------
 def pack_ptr(region_id: int, offset: int) -> int:
-    assert 0 <= region_id < (1 << REGION_BITS) - 1, region_id  # all-ones reserved
-    assert 0 <= offset < (1 << OFFSET_BITS), offset
+    assert 0 <= region_id < (1 << REGION_BITS) - 1, region_id  # lint: allow-assert (hot packing path; all-ones reserved)
+    assert 0 <= offset < (1 << OFFSET_BITS), offset  # lint: allow-assert (hot packing path)
     return (region_id << OFFSET_BITS) | offset
 
 

@@ -218,7 +218,10 @@ class Master:
             if mid not in reps:
                 continue
             survivors = [r for r in reps if pool.mns[r].alive]
-            assert survivors, f"region {g} lost (>= r simultaneous MN failures)"
+            if not survivors:
+                from .faults import RegionLost  # local: faults imports RecoveryStats
+                raise RegionLost(g, f"placement {reps}, alive MNs "
+                                    f"{alive_mids} (Alg-3 cannot re-home)")
             candidates = [m for m in alive_mids if m not in survivors]
             new_reps = survivors + candidates[:len(reps) - len(survivors)]
             pool.recover_mn_placement(g, new_reps)
@@ -277,8 +280,12 @@ class Master:
             v = pool.read(region, i, slot_off, 1)
             vals.append(None if v is None else int(v[0]))
         primary = vals[0]
-        assert primary is not None, \
-            "primary index replica unavailable after recovery"
+        if primary is None:
+            from .faults import RegionLost  # local: faults imports RecoveryStats
+            raise RegionLost(region,
+                             f"primary replica unreadable in fail_query "
+                             f"(slot_off={slot_off}, placement={reps}) even "
+                             "after maybe_recover_mns")
         backups = [v for v in vals[1:] if v is not None]
         if backups:
             counts: Dict[int, int] = {}

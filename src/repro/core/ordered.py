@@ -142,7 +142,7 @@ def leaf_crc(low: int, prev: int) -> int:
 def build_leaf(low: int, ver: int, next_id: int, prev: int,
                entries: List[int]) -> List[int]:
     """Full word list of a leaf (entries already in stored encoding)."""
-    assert len(entries) <= LEAF_ENTRIES
+    assert len(entries) <= LEAF_ENTRIES  # lint: allow-assert (internal geometry; callers split first)
     words = [int(low), pack_meta(ver, next_id, leaf_crc(low, prev)),
              int(prev)] + [int(e) for e in entries]
     words += [0] * (LEAF_WORDS - len(words))
@@ -198,7 +198,7 @@ def _leaf_probe(starts: np.ndarray, lows: np.ndarray):
 
 
 # ------------------------------------------------------ region bootstrap --
-def init_region(pool, region: int):
+def init_region(pool, region: int):  # lint: allow-pool-mutation (bootstrap: pool not live yet, no verb layer to go through)
     """Write the cursor + head leaf into every replica of a fresh ordered
     region (pool construction time; no verbs, the pool is not live yet)."""
     head = build_leaf(low=0, ver=0, next_id=0, prev=0, entries=[])

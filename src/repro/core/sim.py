@@ -39,10 +39,18 @@ import numpy as np
 
 from .client import FuseeClient
 from .events import CRASHED, MasterCall, OpResult, Phase, Verb
-from .faults import ClientCrashed
+from .faults import ClientCrashed, ProtocolViolation, SchedulerStalled
 from .heap import DMPool
 from .master import Master
 from .rng import SimRng, as_simrng
+
+# TEST-ONLY: when True, the §5.2 stale-lease-epoch guard is bypassed — a
+# verb posted under an expired epoch executes against the *new* placement
+# instead of bouncing (the historical PR-3 stale-epoch redirection bug).
+# Exists solely so regression tests can re-introduce the bug and assert
+# the race detector (repro.analysis.races) flags it.  Never enable
+# outside tests; fleet.py honors the same flag.
+UNSAFE_EXEC_STALE_EPOCH = False
 
 
 @dataclass(frozen=True)
@@ -87,6 +95,10 @@ class _Running:
     pending: int = 0                       # unexecuted verbs of current phase
     master_call: Optional[MasterCall] = None
     done: bool = False
+    # issue-time context of the current phase, consumed by the verb tracer
+    # (repro.analysis.trace) when one is attached to the pool
+    phase_no: int = 0
+    phase_label: str = ""
 
 
 class _ClientPipe:
@@ -223,13 +235,19 @@ class Scheduler:
                 run.master_call = item
                 pipe.master_q.append(run)
                 return
-            assert isinstance(item, Phase)
+            if not isinstance(item, Phase):
+                raise ProtocolViolation(
+                    f"client {cid} op {run.record.op_id} "
+                    f"({run.record.kind}) yielded {type(item).__name__!r}; "
+                    "ops must yield Phase or MasterCall")
             run.results = [None] * len(item.verbs)
             run.pending = len(item.verbs)
             if item.background:
                 run.record.bg_rtts += 1
             else:
                 run.record.rtts += 1
+            run.phase_no = run.record.rtts + run.record.bg_rtts
+            run.phase_label = item.label
             if not item.verbs:   # empty phase = pure wait (1 RTT beat)
                 send_value = []
                 continue
@@ -258,6 +276,11 @@ class Scheduler:
         the automatic MN-failure detection.  Shared by the per-verb ``step``
         path and the fleet engine's batched tick (core/fleet.py)."""
         self.tick += 1
+        tr = self.pool._tracer
+        if tr is not None:
+            # all pool traffic in a tick is master/recovery context unless a
+            # client verb claims it below (step) or in the fleet batch path
+            tr.set_master_ctx(self.tick)
         if self._tick_hooks:
             for hook in tuple(self._tick_hooks):  # hooks may self-remove
                 hook(self)
@@ -292,6 +315,10 @@ class Scheduler:
         run, idx, verb = pipe.qp[mn].popleft()
         if not pipe.qp[mn]:
             del pipe.qp[mn]
+        tr = self.pool._tracer
+        if tr is not None:
+            tr.set_ctx(self.tick, cid, run.record.op_id, run.phase_no,
+                       tr.intern(run.phase_label), verb.epoch)
         run.results[idx] = self._exec_verb(verb, cid)
         run.pending -= 1
         if run.pending == 0:
@@ -300,7 +327,7 @@ class Scheduler:
 
     def _exec_verb(self, v: Verb, cid: int):
         p = self.pool
-        if 0 <= v.epoch != p.epoch:
+        if 0 <= v.epoch != p.epoch and not UNSAFE_EXEC_STALE_EPOCH:
             return None   # posted under an expired lease epoch: MR invalid
         if v.kind == "read":
             return p.read(v.region, v.replica, v.off, v.n)
@@ -389,7 +416,11 @@ class Scheduler:
                     progressed = True
             if not progressed:
                 break
-        assert not self.has_work(), "ops did not converge (possible livelock)"
+        if self.has_work():
+            raise SchedulerStalled(
+                f"ops did not converge after {ticks} round-robin ticks "
+                f"(tick {self.tick}, eligible cids "
+                f"{self.eligible_cids()}): possible livelock")
 
     def run_random(self, rng=None, max_ticks: int = 2_000_000):
         rng = rng or self.rng
@@ -401,7 +432,11 @@ class Scheduler:
             cid = cids[int(rng.integers(len(cids)))]
             self.step(cid, pick=int(rng.integers(4)))
             ticks += 1
-        assert not self.has_work(), "ops did not converge (possible livelock)"
+        if self.has_work():
+            raise SchedulerStalled(
+                f"ops did not converge after {ticks} random ticks "
+                f"(tick {self.tick}, eligible cids "
+                f"{self.eligible_cids()}): possible livelock")
 
     def run_schedule(self, schedule, max_extra: int = 500_000):
         """Drive with an explicit (cid, pick) schedule; fall back to

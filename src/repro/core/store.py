@@ -155,6 +155,15 @@ class FuseeCluster:
             if not c.crashed:
                 c.epoch = self.pool.epoch
 
+    def _master_trace_ctx(self):
+        """Attribute the upcoming pool traffic to the master in the verb
+        trace: direct API calls (recover_client, add/remove_mn, rebalance)
+        run outside a scheduler tick, so the tracer context may still hold
+        the last-stepped client's identity."""
+        tr = self.pool._tracer
+        if tr is not None:
+            tr.set_master_ctx(self.scheduler.tick)
+
     # ------------------------------------------------------- MN elasticity
     def add_mn(self, *, wait: bool = True) -> int:
         """Join a fresh memory node at runtime (online scale-out): the
@@ -166,6 +175,7 @@ class FuseeCluster:
         ``wait=False`` they ride the workload's own scheduler/fleet ticks
         — the store stays fully available throughout.  Returns the new
         MN id."""
+        self._master_trace_ctx()
         mid = self.migrator.add_mn()
         if wait:
             self.migrator.drive()
@@ -177,6 +187,7 @@ class FuseeCluster:
         migrated to the shrunk ring first; no acknowledged write is lost.
         Raises the typed ``InsufficientReplicas`` if removal would leave
         fewer members than the replication factor."""
+        self._master_trace_ctx()
         self.migrator.remove_mn(mid)
         if wait:
             self.migrator.drive()
@@ -185,6 +196,7 @@ class FuseeCluster:
         """Re-place index shards on the current membership ring (e.g.
         after config changes); returns the number of shard migrations
         started."""
+        self._master_trace_ctx()
         n = self.migrator.rebalance()
         if wait:
             self.migrator.drive()
@@ -205,6 +217,7 @@ class FuseeCluster:
                        ) -> RecoveryStats:
         """§5.3 recovery of a crashed client from its embedded operation
         logs; stats also accumulate into ``health().recovery``."""
+        self._master_trace_ctx()
         target = (self.clients[reassign_to_cid]
                   if reassign_to_cid is not None else None)
         st = self.master.recover_client(cid, reassign_to=target)
@@ -247,6 +260,36 @@ class FuseeCluster:
     def replay(self, trace: SimTrace, *, start: int = 0):
         """Re-execute a recorded schedule verbatim (see ``trace``)."""
         self.scheduler.run_trace(trace, start=start)
+
+    # ------------------------------------------------------------ sanitizers
+    def attach_tracer(self, capacity: int = 1 << 16):
+        """Attach a verb tracer (``repro.analysis``) to this cluster's pool
+        and return it.  While attached, every one-sided verb is appended to
+        a fixed-capacity ring; ``detach()`` restores the unwrapped verbs
+        (zero residual cost).  Idempotent: returns the existing tracer if
+        one is already attached."""
+        from ..analysis.trace import VerbTracer  # local: analysis is opt-in
+        if self.pool._tracer is not None:
+            return self.pool._tracer
+        return VerbTracer(capacity=capacity).attach(self.pool)
+
+    def race_findings(self, rules=None):
+        """Happens-before race pass over the attached tracer's events (see
+        ``repro.analysis.races``).  Requires ``attach_tracer`` first."""
+        from ..analysis import races             # local: analysis is opt-in
+        if self.pool._tracer is None:
+            raise ValueError(
+                "no tracer attached — call attach_tracer() before running "
+                "the race detector")
+        return races.detect(self.pool._tracer, scheduler=self.scheduler,
+                            rules=rules)
+
+    def heap_audit(self):
+        """Post-drain DM heap/epoch sanitizer (``repro.analysis.heapcheck``):
+        index→object reachability, leak/double-free/use-after-free checks,
+        placement-ring epoch consistency.  Call after ``drain()``."""
+        from ..analysis import heapcheck         # local: analysis is opt-in
+        return heapcheck.audit(self)
 
     # ---------------------------------------------------------------- health
     def health(self) -> ClusterHealth:

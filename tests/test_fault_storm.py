@@ -25,6 +25,7 @@ import pytest
 # property suite) in the dedicated sim-seeds / slow jobs
 pytestmark = pytest.mark.slow
 
+from repro.analysis.races import report
 from repro.core import (CRASHED, OK, ClientCrashed, DMConfig, FaultPlan,
                         FuseeCluster, Op)
 
@@ -40,6 +41,7 @@ def _run_storm(seed, **churn):
                                region_words=1 << 15, regions_per_mn=16,
                                index_shards=churn.pop("index_shards", 1)),
                       num_clients=N_CLIENTS, seed=seed)
+    cl.attach_tracer()                 # sanitizers run over every storm
     storm_kw = dict(clients=range(N_CLIENTS), mns=N_MNS, replication=REPL,
                     n_client_crashes=2, n_mn_crashes=2, first_op=10,
                     spacing=14, recover_delay=8)
@@ -110,6 +112,12 @@ def test_fault_storm_invariants(seed):
     assert len(epochs) == 1, f"epoch split-brain {epochs} {msg}"
     assert h.crashed_ops == sum(c.crashed_ops for c in h.clients), msg
 
+    # sanitizers: the verb trace is race-free and the heap audits clean
+    findings = cl.race_findings()
+    assert findings == [], report(findings, cl.pool._tracer) + msg
+    rep = cl.heap_audit()
+    assert rep.ok, f"{rep} {msg}"
+
 
 @pytest.mark.parametrize("seed", SEEDS[:1])
 def test_fault_storm_is_seed_deterministic(seed):
@@ -170,6 +178,12 @@ def test_membership_churn_storm_invariants(seed):
     added_mid = N_MNS
     assert (cl.pool.mns[added_mid].retired
             or not cl.pool.mns[added_mid].alive), msg
+
+    # sanitizers: race-free trace, clean heap/epoch audit across cutovers
+    findings = cl.race_findings()
+    assert findings == [], report(findings, cl.pool._tracer) + msg
+    rep = cl.heap_audit()
+    assert rep.ok, f"{rep} {msg}"
 
 
 @pytest.mark.parametrize("seed", SEEDS[:1])

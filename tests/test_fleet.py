@@ -114,6 +114,7 @@ def test_fleet_matches_step_results_on_disjoint_keys():
 
 def test_fleet_contended_key_linearizable():
     cl, fleet = _fleet_cluster(5, seed=7)
+    cl.attach_tracer()              # contention runs under the race detector
     sched = cl.scheduler
     sched.submit(0, "insert", 42, [0])
     fleet.run()
@@ -125,6 +126,10 @@ def test_fleet_contended_key_linearizable():
     fleet.run()
     hops = records_to_hops(sched.history, 42)
     assert check_linearizable(hops, initial=None)
+    from repro.analysis.races import report
+    findings = cl.race_findings()
+    assert findings == [], report(findings, cl.pool._tracer)
+    assert cl.heap_audit().ok
 
 
 def test_fleet_probe_wave_single_invocation():

@@ -1,0 +1,154 @@
+"""Edge cases for the Wing&Gong checker in core/linearize.py.
+
+The property/storm suites exercise ``check_linearizable`` on generated
+histories; these tests pin the tricky corners directly: duplicate written
+values, ABSENT-key transitions (insert-upsert / update-NOT_FOUND /
+blind-delete), a known non-linearizable counterexample, and the
+``records_to_hops`` filtering contract.
+"""
+from repro.core.events import OpResult
+from repro.core.linearize import HOp, check_linearizable, records_to_hops
+from repro.core.sim import OpRecord
+
+
+def _ins(i, inv, resp, v, status="OK"):
+    return HOp(i, "insert", inv, resp, wrote=v, read=None, status=status)
+
+
+def _upd(i, inv, resp, v, status="OK"):
+    return HOp(i, "update", inv, resp, wrote=v, read=None, status=status)
+
+
+def _srch(i, inv, resp, v, status="OK"):
+    return HOp(i, "search", inv, resp, wrote=None, read=v, status=status)
+
+
+def _del(i, inv, resp, status="OK"):
+    return HOp(i, "delete", inv, resp, wrote=None, read=None, status=status)
+
+
+# ------------------------------------------------------- duplicate values
+def test_duplicate_written_values_sequential():
+    # insert(7) twice (our INSERT upserts), then a search reading 7
+    h = [_ins(0, 0, 1, (7,)), _ins(1, 2, 3, (7,)), _srch(2, 4, 5, (7,))]
+    assert check_linearizable(h)
+
+
+def test_duplicate_written_values_concurrent_reads_interleave():
+    # two concurrent inserts of the SAME value: any serialization leaves
+    # the register at (5,), so interleaved reads of (5,) always linearize
+    h = [_ins(0, 0, 10, (5,)), _ins(1, 0, 10, (5,)),
+         _srch(2, 11, 12, (5,)), _srch(3, 13, 14, (5,))]
+    assert check_linearizable(h)
+
+
+def test_duplicate_values_do_not_mask_stale_read():
+    # both writers wrote (5,), a later search still cannot observe ABSENT
+    h = [_ins(0, 0, 1, (5,)), _ins(1, 2, 3, (5,)),
+         _srch(2, 4, 5, None, status="NOT_FOUND")]
+    assert not check_linearizable(h)
+
+
+# --------------------------------------------------- ABSENT transitions
+def test_update_on_absent_key_not_found():
+    assert check_linearizable([_upd(0, 0, 1, (9,), status="NOT_FOUND")])
+
+
+def test_update_on_absent_key_cannot_ack_ok():
+    assert not check_linearizable([_upd(0, 0, 1, (9,), status="OK")])
+
+
+def test_update_not_found_concurrent_with_insert():
+    # update may linearize before the concurrent insert's effect point
+    h = [_ins(0, 0, 10, (1,)), _upd(1, 0, 10, (2,), status="NOT_FOUND")]
+    assert check_linearizable(h)
+    # ...but not after the insert has completed in real time
+    h2 = [_ins(0, 0, 1, (1,)), _upd(1, 2, 3, (2,), status="NOT_FOUND")]
+    assert not check_linearizable(h2)
+
+
+def test_delete_not_found_requires_observed_absence():
+    assert check_linearizable([_del(0, 0, 1, status="NOT_FOUND")])
+    h = [_ins(0, 0, 1, (3,)), _del(1, 2, 3, status="NOT_FOUND")]
+    assert not check_linearizable(h)
+
+
+def test_delete_ok_is_a_blind_write():
+    # concurrent deleters may BOTH report OK (all-writers-write-NULL: the
+    # paper's uniqueness argument doesn't apply; see module docstring)
+    h = [_ins(0, 0, 1, (4,)), _del(1, 2, 8, status="OK"),
+         _del(2, 2, 8, status="OK"),
+         _srch(3, 9, 10, None, status="NOT_FOUND")]
+    assert check_linearizable(h)
+    # delete-OK even on an absent key: still just a write of ABSENT
+    assert check_linearizable([_del(0, 0, 1, status="OK")])
+
+
+def test_insert_after_delete_restores_value():
+    h = [_ins(0, 0, 1, (6,)), _del(1, 2, 3), _ins(2, 4, 5, (7,)),
+         _srch(3, 6, 7, (7,))]
+    assert check_linearizable(h)
+
+
+# ------------------------------------------- non-linearizable witnesses
+def test_counterexample_stale_read_after_overwrite():
+    """The classic: w1 and w2 complete in real-time order, then two
+    sequential reads observe v2 *then* v1 — no remaining write can move
+    the register back, so no linearization exists."""
+    h = [_ins(0, 0, 1, (1,)), _ins(1, 2, 3, (2,)),
+         _srch(2, 4, 5, (2,)), _srch(3, 6, 7, (1,))]
+    assert not check_linearizable(h)
+
+
+def test_counterexample_read_of_never_written_value():
+    h = [_ins(0, 0, 1, (1,)), _srch(1, 2, 3, (99,))]
+    assert not check_linearizable(h)
+
+
+def test_concurrent_reads_may_disagree_on_order():
+    # same shape as the stale-read case but the READS are concurrent with
+    # the second write — now both observations are legal
+    h = [_ins(0, 0, 1, (1,)), _ins(1, 2, 9, (2,)),
+         _srch(2, 3, 9, (2,)), _srch(3, 3, 9, (1,))]
+    assert check_linearizable(h)
+
+
+# ------------------------------------------------- records_to_hops -----
+def _rec(op_id, kind, key, value=None, *, status="OK", rvalue=None,
+         result=True, inv=0, resp=1):
+    return OpRecord(cid=0, op_id=op_id, kind=kind, key=key, value=value,
+                    inv_tick=inv, resp_tick=resp,
+                    result=OpResult(status, value=rvalue) if result else None)
+
+
+def test_records_to_hops_filters():
+    recs = [
+        _rec(0, "insert", 42, [1, 2]),                      # kept
+        _rec(1, "insert", 43, [3]),                         # other key
+        _rec(2, "search", 42, rvalue=[1, 2]),               # kept, read set
+        _rec(3, "insert", 42, [9], result=False),           # still in flight
+        _rec(4, "scan", 42),                                # not a register op
+        _rec(5, "insert", 42, [9], status="FULL"),          # excluded status
+        _rec(6, "update", 42, [5], status="NOT_FOUND"),     # kept
+        _rec(7, "delete", 42),                              # kept
+    ]
+    hops = sorted(records_to_hops(recs, 42), key=lambda o: o.op_id)
+    assert [o.op_id for o in hops] == [0, 2, 6, 7]
+    assert hops[0].wrote == (1, 2)
+    assert hops[1].kind == "search" and hops[1].read == (1, 2)
+    assert hops[2].status == "NOT_FOUND"
+    assert hops[3].kind == "delete" and hops[3].wrote is None
+    # and the surviving history is a consistent one
+    assert check_linearizable(hops)
+
+
+def test_records_to_hops_encodes_public_keys():
+    from repro.core.codec import encode_key
+    ik = encode_key(b"user:7")
+    recs = [_rec(0, "insert", ik, [8]), _rec(1, "insert", 999, [9])]
+    hops = records_to_hops(recs, b"user:7")
+    assert [o.op_id for o in hops] == [0]
+    # absent search reads map to None (ABSENT), not a tuple
+    recs2 = [_rec(0, "search", ik, status="NOT_FOUND")]
+    (h,) = records_to_hops(recs2, b"user:7")
+    assert h.read is None and h.status == "NOT_FOUND"

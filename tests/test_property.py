@@ -237,3 +237,35 @@ def test_quiescent_scan_contains_exactly_committed_keys(seed, depth):
             f"seed={seed} range[{start},{end}): {res} != {want}"
         for k, v in res:
             assert committed[k] == v, f"seed={seed} key={k}"
+
+
+# ------------------------------------------------------- sanitizer coverage --
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100_000), depth=st.integers(1, 4),
+       steps=st.integers(0, 120))
+def test_random_mix_with_crash_is_race_free(seed, depth, steps):
+    """The property domain — random mixes, random interleavings, a client
+    crash at a random verb boundary + §5.3 recovery — runs under the
+    verb-trace race detector with zero findings: every legal protocol race
+    is scoped out by the rules, so anything flagged is a real bug."""
+    from repro.analysis.races import detect, report
+    from repro.analysis.trace import VerbTracer
+    rng = np.random.default_rng(seed)
+    pool, master, clients, sched = _fresh(num_clients=3)
+    tr = VerbTracer(capacity=1 << 14).attach(pool)
+    sched.submit(clients[0].cid, "insert", 5, [1])
+    sched.run_round_robin()
+    _submit_random_mix(sched, clients, rng, keys=[5, 6], depth=depth)
+    for _ in range(steps):                    # random partial execution
+        cids = sched.eligible_cids()
+        if not cids:
+            break
+        sched.step(cids[int(rng.integers(len(cids)))],
+                   pick=int(rng.integers(4)))
+    sched.crash_client(1)
+    tr.set_master_ctx(sched.tick)             # recovery is master traffic
+    master.recover_client(1, reassign_to=clients[2])
+    sched.run_random(rng=rng)                 # survivors finish
+    findings = detect(tr, scheduler=sched)
+    assert findings == [], f"seed={seed} steps={steps}: " \
+        + report(findings, tr)
