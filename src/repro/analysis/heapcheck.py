@@ -115,6 +115,17 @@ def audit(cluster) -> HeapReport:
     lenient = bool(crashed) or cluster.client_recoveries > 0 \
         or cluster.scheduler.crashed_ops > 0
     rep.stats["lenient"] = int(lenient)
+    tracer = getattr(pool, "_tracer", None)
+    if tracer is not None:
+        # the heap audit itself reads pool state, not the trace — but a
+        # wrapped ring means any race/trace analysis paired with this
+        # audit ran on a truncated window, so surface it here too
+        rep.stats["trace_dropped"] = tracer.dropped
+        if tracer.dropped:
+            rep.warnings.append(
+                f"verb-trace ring wrapped: {tracer.dropped} oldest "
+                f"record(s) dropped (capacity {tracer.capacity}) — "
+                "trace-based analyses cover a truncated window")
 
     _audit_ring(rep, pool, live)
     refs = _audit_index(rep, pool, lenient)

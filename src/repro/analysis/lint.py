@@ -1,9 +1,10 @@
-"""AST protocol lints for the FUSEE reproduction (L001-L005).
+"""AST protocol lints for the FUSEE reproduction (L001-L006).
 
 Run as ``python -m repro.analysis.lint [paths...]`` (defaults to the
-``repro`` package); exits nonzero on any finding, which is what the CI
-``analysis`` job enforces.  Rules encode protocol contracts that type
-checkers cannot see:
+``repro`` package plus the repo's ``tests/`` and ``benchmarks/`` trees);
+exits nonzero on any finding, which is what the CI ``analysis`` job
+enforces.  Rules encode protocol contracts that type checkers cannot
+see:
 
 L001  **epoch-threaded verbs** — a direct ``pool.read/write/cas/faa``
       (or ``*_batch``) call site must sit in a function that compares a
@@ -12,11 +13,14 @@ L001  **epoch-threaded verbs** — a direct ``pool.read/write/cas/faa``
       itself).  The PR-3 stale-epoch redirection bug class: a verb that
       executes against re-homed placement without an issue-time epoch
       check.
-L002  **nondeterminism** — ``random.*``, ``time.time()``, and ad-hoc
-      ``np.random.default_rng`` / ``np.random.SeedSequence`` / global
+L002  **nondeterminism** — ``random.*``, ``time.time()``, and global
       ``np.random.*`` draws are banned outside ``core/rng.py``: every
       random decision must derive from a named ``SimRng`` substream or
-      the replay contract breaks.  (Explicitly-keyed ``jax.random`` is
+      an explicit seed, or the replay contract breaks.  Seed-taking
+      constructors (``default_rng(seed)``, ``SeedSequence(seed)``,
+      ``random.Random(seed)``) called WITH arguments are deterministic
+      functions of their inputs and exempt; the argless forms draw OS
+      entropy and are flagged.  (Explicitly-keyed ``jax.random`` is
       deterministic and exempt.)
 L003  **pool-array mutation** — only ``DMPool`` (and the master-authority
       modules) may store into MN region arrays (``*.regions[...]`` or
@@ -30,21 +34,30 @@ L004  **scalar loops in batch paths** — ``fleet.py`` functions and
 L005  **bare assert in protocol code** — ``core/*.py`` must raise typed
       ``faults`` errors carrying reproducing context instead of ``assert``
       (asserts vanish under ``python -O`` and carry no seed/cid/tick).
+L006  **pragma hygiene** — every suppression pragma must carry a
+      parenthesized justification, and must actually suppress a finding:
+      a pragma whose rule no longer fires on its line is *stale* and gets
+      reported (a leftover license would silently cover a future
+      regression on that line).
 
-Suppression: a trailing ``# lint: allow-<name>`` pragma on the offending
-line, or on the enclosing ``def``/``class`` line to cover the whole body.
-``<name>`` is the rule id (``L003``) or its alias: ``assert`` (L005),
-``epoch`` (L001), ``nondet`` (L002), ``pool-mutation`` (L003),
-``scalar-loop`` (L004).  Pragmas are deliberate, documented exemptions —
-the lint keeps them honest by flagging unknown names.
+Suppression: a trailing ``# lint: allow-<name> (<why>)`` pragma on the
+offending line, or on the enclosing ``def``/``class`` line to cover the
+whole body.  ``<name>`` is the rule id (``L003``) or its alias:
+``assert`` (L005), ``epoch`` (L001), ``nondet`` (L002), ``pool-mutation``
+(L003), ``scalar-loop`` (L004).  Pragmas are deliberate, documented
+exemptions — the lint keeps them honest by flagging unknown names,
+missing justifications, and stale sites (L006 itself is exempt from
+suppression: delete the pragma instead).
 """
 from __future__ import annotations
 
 import argparse
 import ast
+import io
 import os
 import re
 import sys
+import tokenize
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -56,6 +69,8 @@ RULES = {
     "L003": "direct mutation of pool region arrays outside DMPool",
     "L004": "scalar verb loop inside a batch path",
     "L005": "bare assert in protocol code",
+    "L006": "lint pragma without justification, or stale (suppresses "
+            "nothing)",
 }
 
 _ALIASES = {
@@ -64,13 +79,21 @@ _ALIASES = {
 }
 
 VERBS = ("read", "write", "cas", "faa")
+
+# RNG constructors that take an explicit seed: called WITH arguments they
+# are deterministic functions of their inputs and replay-safe; only the
+# argless forms (OS entropy) and module-level draws are nondeterministic
+_SEEDED_CTORS = ("np.random.default_rng", "numpy.random.default_rng",
+                 "np.random.SeedSequence", "numpy.random.SeedSequence",
+                 "random.Random")
 BATCH_VERBS = tuple(v + "_batch" for v in VERBS)
 
 # modules that legitimately run under master authority (recovery,
 # migration, the pool itself): direct array/verb access is their job
 MASTER_AUTHORITY = {"master.py", "migrate.py", "heap.py"}
 
-_PRAGMA_RE = re.compile(r"#\s*lint:\s*allow-([A-Za-z0-9_-]+)")
+_PRAGMA_RE = re.compile(
+    r"#\s*lint:\s*allow-([A-Za-z0-9_-]+)(?:\s*\(([^)]*)\))?")
 
 
 @dataclass(frozen=True)
@@ -95,10 +118,24 @@ def _dotted(node) -> str:
     return ""
 
 
+def _comments(text: str) -> List[Tuple[int, str]]:
+    """(line, comment-text) for every real comment token — pragmas are
+    comments, and only comments: the pattern appearing inside a string
+    literal (a lint message, a test fixture) is not a pragma."""
+    out: List[Tuple[int, str]] = []
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            if tok.type == tokenize.COMMENT:
+                out.append((tok.start[0], tok.string))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        out = list(enumerate(text.splitlines(), 1))   # best effort
+    return out
+
+
 def _pragmas(text: str) -> Dict[int, Set[str]]:
     """line -> set of rule ids allowed on that line."""
     out: Dict[int, Set[str]] = {}
-    for i, line in enumerate(text.splitlines(), 1):
+    for i, line in _comments(text):
         for m in _PRAGMA_RE.finditer(line):
             name = m.group(1)
             rule = _ALIASES.get(name.lower(), name.upper())
@@ -106,6 +143,20 @@ def _pragmas(text: str) -> Dict[int, Set[str]]:
                 out.setdefault(i, set()).add("?" + name)
             else:
                 out.setdefault(i, set()).add(rule)
+    return out
+
+
+def _pragma_sites(text: str) -> List[Tuple[int, str, str, str]]:
+    """Every pragma occurrence: (line, rule-or-?name, raw name,
+    stripped justification text)."""
+    out = []
+    for i, line in _comments(text):
+        for m in _PRAGMA_RE.finditer(line):
+            name = m.group(1)
+            rule = _ALIASES.get(name.lower(), name.upper())
+            if rule not in RULES:
+                rule = "?" + name
+            out.append((i, rule, name, (m.group(2) or "").strip()))
     return out
 
 
@@ -147,6 +198,7 @@ class _Linter(ast.NodeVisitor):
         self.is_rng = rel.replace(os.sep, "/").endswith("core/rng.py")
         self.rules = rules
         self.pragmas = _pragmas(text)
+        self.used_pragmas: Set[Tuple[int, str]] = set()
         self.findings: List[LintFinding] = []
         self._fn_stack: List[ast.AST] = []   # enclosing function defs
         self._cls_stack: List[ast.ClassDef] = []
@@ -162,6 +214,7 @@ class _Linter(ast.NodeVisitor):
             [c.lineno for c in self._cls_stack]
         for ln in covered:
             if rule in self.pragmas.get(ln, ()):
+                self.used_pragmas.add((ln, rule))  # L006 staleness proof
                 return
         self.findings.append(
             LintFinding(self.path, line, rule, msg))
@@ -225,6 +278,8 @@ class _Linter(ast.NodeVisitor):
     def _check_L002(self, node, name):
         if self.is_rng:
             return
+        if name in _SEEDED_CTORS and (node.args or node.keywords):
+            return    # explicitly seeded: deterministic given its inputs
         bad = None
         if name.startswith(("np.random.", "numpy.random.")):
             bad = f"`{name}`"
@@ -335,6 +390,25 @@ def lint_source(text: str, path: str, *, rel: Optional[str] = None,
                     path, line, "E001",
                     f"unknown lint pragma `allow-{n[1:]}` (valid: "
                     f"{', '.join(sorted(_ALIASES))} or a rule id)"))
+    # L006 pragma hygiene: every pragma must say WHY it is safe, and must
+    # actually suppress something — a stale pragma is a license that
+    # outlived its exemption and will silently cover a future regression
+    if "L006" in rules:
+        for line, rule, name, why in _pragma_sites(text):
+            if rule.startswith("?"):
+                continue                     # already an E001 above
+            if not why:
+                linter.findings.append(LintFinding(
+                    path, line, "L006",
+                    f"pragma `allow-{name}` lacks a justification — "
+                    f"write `# lint: allow-{name} (<why this site is "
+                    "exempt>)`"))
+            elif rule in rules and (line, rule) not in linter.used_pragmas:
+                linter.findings.append(LintFinding(
+                    path, line, "L006",
+                    f"stale pragma `allow-{name}`: {rule} no longer "
+                    "fires on this line — delete the pragma (it would "
+                    "silently cover a future regression)"))
     linter.findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return linter.findings
 
@@ -343,6 +417,20 @@ def _package_root() -> str:
     """The installed ``repro`` package directory (default lint target)."""
     here = os.path.dirname(os.path.abspath(__file__))
     return os.path.dirname(here)
+
+
+def default_paths() -> List[str]:
+    """The repro package plus the repo's ``tests/`` and ``benchmarks/``
+    trees when present (a src-layout checkout) — pragma hygiene and the
+    nondeterminism rule apply to test/bench code too."""
+    pkg = _package_root()
+    out = [pkg]
+    repo = os.path.dirname(os.path.dirname(pkg))        # src/repro -> repo
+    for extra in ("tests", "benchmarks"):
+        d = os.path.join(repo, extra)
+        if os.path.isdir(d):
+            out.append(d)
+    return out
 
 
 def lint_paths(paths: List[str], *,
@@ -378,7 +466,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="comma-separated rule ids to run (default: all)")
     args = ap.parse_args(argv)
     rules = set(args.rules.split(",")) if args.rules else None
-    paths = args.paths or [_package_root()]
+    paths = args.paths or default_paths()
     findings = lint_paths(paths, rules=rules)
     for f in findings:
         print(f)

@@ -52,6 +52,7 @@ storm traces), so million-verb traces analyze in seconds.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -59,7 +60,8 @@ import numpy as np
 
 from .trace import CAS, FAA, READ, VERB_NAMES, WRITE
 
-__all__ = ["Finding", "detect", "report", "ALL_RULES"]
+__all__ = ["Finding", "detect", "report", "ALL_RULES",
+           "TruncatedTraceWarning", "TruncatedTraceError"]
 
 ALL_RULES = ("stale_epoch", "lost_cas_ack", "ww_race", "index_plain_write",
              "clear_order", "torn_read")
@@ -114,16 +116,44 @@ def _op_table(scheduler) -> Dict[int, _OpInfo]:
     return ops
 
 
-def detect(tracer, scheduler=None, rules=None) -> List[Finding]:
+class TruncatedTraceWarning(UserWarning):
+    """The tracer ring wrapped: the analysis covers a truncated window."""
+
+
+class TruncatedTraceError(RuntimeError):
+    """Raised by ``detect(..., on_truncated="fail")`` on a wrapped ring."""
+
+
+def detect(tracer, scheduler=None, rules=None,
+           on_truncated: str = "warn") -> List[Finding]:
     """Run the race rules over ``tracer``'s retained window.
 
     ``scheduler`` supplies op real-time intervals and outcomes (required
     for ``lost_cas_ack`` and the concurrency test of ``ww_race``; without
     it those rules degrade conservatively to seq-order only).
+
+    A saturated ring silently weakens every rule — happens-before edges
+    and CAS guards anchored in dropped records are invisible, so both
+    false negatives AND false positives (an unguarded-looking write whose
+    guard fell off) are possible.  ``on_truncated`` decides what a wrapped
+    ring does: ``"warn"`` (default) emits a ``TruncatedTraceWarning``,
+    ``"fail"`` raises ``TruncatedTraceError`` (CI mode), ``"ignore"``
+    analyzes silently.
     """
+    if on_truncated not in ("warn", "fail", "ignore"):
+        raise ValueError(f"on_truncated={on_truncated!r}: expected "
+                         "'warn', 'fail' or 'ignore'")
     pool = tracer.pool
     if pool is None:
         raise ValueError("tracer is not attached to a pool")
+    if tracer.dropped:
+        msg = (f"tracer ring wrapped: {tracer.dropped} oldest record(s) "
+               f"dropped (capacity {tracer.capacity}, {tracer.n} emitted) — "
+               "race analysis covers the retained window only")
+        if on_truncated == "fail":
+            raise TruncatedTraceError(msg)
+        if on_truncated == "warn":
+            warnings.warn(msg, TruncatedTraceWarning, stacklevel=2)
     return detect_events(tracer.events(), tracer.labels,
                          index_regions=set(pool.index_region_set),
                          ordered_regions=set(pool.ordered_region_set),
@@ -153,11 +183,17 @@ def detect_events(ev, labels, *, index_regions, ordered_regions,
 
 def report(findings: List[Finding], tracer=None) -> str:
     """Human-readable race report (one block per finding)."""
+    dropped = tracer.dropped if tracer is not None else 0
     if not findings:
+        if dropped:
+            # "clean" over a truncated window is NOT a clean verdict
+            return (f"race detector: no findings in retained window — "
+                    f"NOT clean: ring wrapped, oldest {dropped} "
+                    "record(s) dropped\n")
         return "race detector: clean (0 findings)\n"
     lines = [f"race detector: {len(findings)} finding(s)"]
-    if tracer is not None and tracer.dropped:
-        lines.append(f"  (ring wrapped: oldest {tracer.dropped} events "
+    if dropped:
+        lines.append(f"  (ring wrapped: oldest {dropped} events "
                      "dropped — findings cover the retained window)")
     by_rule: Dict[str, int] = {}
     for f in findings:

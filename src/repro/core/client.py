@@ -59,6 +59,20 @@ MAX_LOSE_POLLS = 48
 # (repro.analysis.races, rule ``lost_cas_ack``) flags it.
 UNSAFE_ACK_LOST_EMPTY_CAS = False
 
+# TEST-ONLY: when True, the upsert retry path frees the "overwritten" object
+# even when it is the op's OWN object — the churn-cutover acked-write-loss
+# bug (storm seed 7): a retry that crossed a lease-epoch bump re-reads the
+# index, finds its own half-installed slot value (propagated to every
+# replica by the cutover's Alg-3 adopt-backup repair), treats it as the
+# old value, and — since v_old's pointer equals v_new's — the post-ack
+# ``bg:free_old`` phase frees + invalidates the very object the index now
+# references (use-after-free; the acked write is lost when the block is
+# reused).  The fix skips reclamation whenever the displaced slot value
+# points at the op's own object.  Exists solely so the model checker
+# (repro.analysis.explore) and regression tests can re-introduce the bug
+# and assert it is found + minimized.
+UNSAFE_FREE_OWN_ON_RETRY = False
+
 
 def evaluate_rules_pure(v_list: List[Optional[int]], v_new: int):
     """Pure part of Alg. 2 (no Rule-3 primary check).  ``None`` = FAIL.
@@ -270,6 +284,50 @@ class FuseeClient:
         return [Verb("faa", region=region, replica=i, off=off, delta=L.INVALID_BIT)
                 for i in range(self._obj_region_replicas(region))]
 
+    def _bg_cleanup(self, verbs: List[Verb], label: str):
+        """Issue background cleanup obligations (free-bit FAA / cache
+        invalidation / used-bit reset) and re-issue any that bounced.
+
+        A verb that returns None was NOT executed (lease-epoch bounce or
+        dead MN) — dropping it leaks the object: used bit set, no index
+        reference, free-list push lost.  Re-issuing the same Verb instance
+        is safe because the scheduler re-stamps its epoch on enqueue and a
+        None result guarantees the side effect never landed (re-building
+        FAA verbs would NOT be safe — a landed FAA re-issued flips the bit
+        back).
+
+        Bounced verbs are re-aimed by the MN *identity* they originally
+        targeted, not their replica index: an MN-crash failover renumbers
+        the surviving copies, so "replica 1" of a 2-replica region becomes
+        replica 0 of a 1-replica region while pointing at the exact same
+        memory.  Filtering by index there discards a still-owed obligation
+        against live memory and leaks the object on the new primary (found
+        by the model checker's stale_epoch scope).  A verb whose target MN
+        no longer hosts the region is moot (the copy's memory died with
+        the MN) or migrated away — either way it falls to the owner-side
+        reclaim scan (§4.4).  Bounded best effort: after MAX_OP_RETRIES
+        rounds the remainder is likewise left to the reclaim scan.
+        """
+        def _target_mn(v: Verb) -> int:
+            reps = self.pool.placement.get(v.region, ())
+            return reps[v.replica] if v.replica < len(reps) else -1
+
+        pending = [(v, _target_mn(v)) for v in verbs]
+        attempts = 0
+        while pending and attempts <= MAX_OP_RETRIES:
+            res = yield Phase([v for v, _ in pending], label=label,
+                              background=True)
+            nxt = []
+            for (v, mn), r in zip(pending, res):
+                if r is not None:
+                    continue
+                reps = self.pool.placement.get(v.region, ())
+                if mn in reps:  # copy survived, possibly renumbered
+                    v.replica = list(reps).index(mn)
+                    nxt.append((v, mn))
+            pending = nxt
+            attempts += 1
+
     # ------------------------------------------------- SNAPSHOT WRITE (Alg 1)
     def _snapshot_write(self, region: int, slot_off: int, v_old: int,
                         v_new: int, obj_ptr: int, obj_sc: int, prev_ptr: int):
@@ -332,15 +390,41 @@ class FuseeClient:
             # object, all replicas) and, for Rule 2/3, repair divergent
             # backups in the same doorbell batch.
             verbs = self._commit_log_verbs(obj_ptr, obj_sc, v_old)
+            nlog = len(verbs)
             if win in (R2, R3):
                 verbs += [Verb("cas", region=region, replica=i + 1,
                                off=slot_off, exp=v_list[i], new=v_new)
                           for i in range(r - 1) if v_list[i] != int(v_new)]
-            yield Phase(verbs, label="3:commit+fix")
+            res3 = yield Phase(verbs, label="3:commit+fix")
+            bad = any(v is None for v in res3)
+            if not bad:
+                for v, fix in zip(res3[nlog:], verbs[nlog:]):
+                    if int(v) not in (int(fix.exp), int(v_new)):
+                        bad = True   # backup moved to a THIRD value mid-fix
+                        break
+            if bad:
+                # A commit/fix verb bounced on a lease-epoch change, or a
+                # divergent backup moved again under the repair: acking now
+                # could leave a backup newer than the primary (the Alg-3
+                # invariant) or our round half-installed — escalate to the
+                # master's arbitration (Alg 4) instead.
+                return (yield from self._fail_path(region, slot_off, v_old,
+                                                   v_new, obj_ptr, obj_sc,
+                                                   prev_ptr))
             res = yield Phase([Verb("cas", region=region, replica=0,
                                     off=slot_off, exp=v_old, new=v_new)],
                               label="4:cas_primary")
             if res[0] is None:
+                return (yield from self._fail_path(region, slot_off, v_old,
+                                                   v_new, obj_ptr, obj_sc,
+                                                   prev_ptr))
+            if int(res[0]) != int(v_old):
+                # The primary moved after our rule check: a concurrent round
+                # (possibly for a DIFFERENT key colliding on this slot)
+                # committed first, so we did NOT win — acking here is the
+                # seed-13 lost-write hole.  Let the master arbitrate: it
+                # decides v_new (win), v_old (retry), or the other round's
+                # value (lose; op_insert's empty-slot guard re-runs us).
                 return (yield from self._fail_path(region, slot_off, v_old,
                                                    v_new, obj_ptr, obj_sc,
                                                    prev_ptr))
@@ -734,11 +818,16 @@ class FuseeClient:
                     return OpResult(FULL)
                 continue
             bg = []
-            if rule in (R1, R2, R3, "MASTER_WIN", "CR") and v_old != 0:
+            if rule in (R1, R2, R3, "MASTER_WIN", "CR") and v_old != 0 \
+                    and (L.slot_ptr(v_old) != ptr or UNSAFE_FREE_OWN_ON_RETRY):
+                # v_old pointing at our OWN object means an epoch-bounced
+                # retry re-observed its half-installed value (the cutover
+                # repair adopts backups): there is no old object to free —
+                # freeing would unlink the object the slot now references.
                 bg += self._free_obj_verbs(v_old)          # free overwritten obj
                 bg += self._mark_invalid_verbs(v_old)      # cache invalidation
             if bg:
-                yield Phase(bg, label="bg:free_old", background=True)
+                yield from self._bg_cleanup(bg, "bg:free_old")
             if self.enable_cache:
                 self.cache[key] = CacheEntry(target, v_new, access=1,
                                              region=region,
@@ -819,8 +908,9 @@ class FuseeClient:
                         if retries > MAX_OP_RETRIES:
                             return OpResult(FULL)
                         continue
-                    yield Phase(self._reset_used_verbs(ptr, sc, prev_ptr),
-                                label="abort_reset", background=True)
+                    yield from self._bg_cleanup(
+                        self._reset_used_verbs(ptr, sc, prev_ptr),
+                        "abort_reset")
                     return OpResult(NOT_FOUND)
                 target, v_old = slot_off2, slot_val2
             status, rule, fin = yield from self._snapshot_write(
@@ -834,11 +924,14 @@ class FuseeClient:
             if status != OK:
                 return OpResult(status, rule=rule)
             bg = []
-            if rule in (R1, R2, R3, "MASTER_WIN", "CR"):
+            if rule in (R1, R2, R3, "MASTER_WIN", "CR") \
+                    and (L.slot_ptr(v_old) != ptr or UNSAFE_FREE_OWN_ON_RETRY):
+                # same own-object guard as op_insert: an epoch-bounced retry
+                # can re-observe its own half-installed value as v_old
                 bg += self._free_obj_verbs(v_old)
                 bg += self._mark_invalid_verbs(v_old)
             if bg:
-                yield Phase(bg, label="bg:free_old", background=True)
+                yield from self._bg_cleanup(bg, "bg:free_old")
             if self.enable_cache:
                 e = self.cache.setdefault(key, CacheEntry(target, v_new))
                 e.slot_off, e.slot_val = target, v_new
@@ -869,8 +962,9 @@ class FuseeClient:
                     if retries > MAX_OP_RETRIES:
                         return OpResult(FULL)
                     continue
-                yield Phase(self._reset_used_verbs(ptr, sc, prev_ptr),
-                            label="abort_reset", background=True)
+                yield from self._bg_cleanup(
+                    self._reset_used_verbs(ptr, sc, prev_ptr),
+                    "abort_reset")
                 return OpResult(NOT_FOUND)
             status, rule, fin = yield from self._snapshot_write(
                 region, slot_off2, slot_val2, 0, ptr, sc, prev_ptr)
@@ -889,7 +983,7 @@ class FuseeClient:
             own_slotval = int(L.pack_slot(L.fingerprint(key), sc, ptr))
             bg += self._free_obj_verbs(own_slotval)
             bg += self._reset_used_verbs(ptr, sc, prev_ptr)
-            yield Phase(bg, label="bg:del_cleanup", background=True)
+            yield from self._bg_cleanup(bg, "bg:del_cleanup")
             self.cache.pop(key, None)
             if self.pool.ordered_regions:
                 # clear the keydir entry (re-checks RACE: a racing

@@ -97,6 +97,12 @@ class MigrationEngine:
         self.active: Dict[int, RegionMigration] = {}
         self.removing: Set[int] = set()        # mids draining toward retire
         self._hooked = False
+        # manual mode (model checking): migration advances ONLY through an
+        # armed scheduler event (store.arm_migration_event), never through
+        # the auto tick hook — begin_tick runs inside every fired choice,
+        # so the hook would move the cutover boundary outside the
+        # checker's enumerated schedule.
+        self.manual = False
         self.counters = {"migrations": 0, "cutovers": 0, "aborts": 0,
                          "copied_words": 0, "adds": 0, "removes": 0,
                          "retires": 0}
@@ -232,7 +238,7 @@ class MigrationEngine:
 
     # ------------------------------------------------------------- ticking
     def _ensure_hook(self):
-        if not self._hooked:
+        if not self._hooked and not self.manual:
             self.sched.add_tick_hook(self._tick_hook)
             self._hooked = True
 

@@ -30,6 +30,7 @@ tallies consumed by the network performance model (netmodel.py).
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
@@ -51,6 +52,78 @@ from .rng import SimRng, as_simrng
 # the race detector (repro.analysis.races) flags it.  Never enable
 # outside tests; fleet.py honors the same flag.
 UNSAFE_EXEC_STALE_EPOCH = False
+
+
+def _canon_bytes(v, out: list):
+    """Flatten a delivered value (phase results / master answers) into a
+    canonical byte stream: type-tagged so e.g. 0 and [0] never collide."""
+    if v is None:
+        out.append(b"N")
+    elif isinstance(v, bool):
+        out.append(b"B1" if v else b"B0")
+    elif isinstance(v, (int, np.integer)):
+        out.append(b"I" + int(v).to_bytes(17, "little", signed=True))
+    elif isinstance(v, np.ndarray):
+        out.append(b"A" + np.ascontiguousarray(v).tobytes())
+    elif isinstance(v, (list, tuple)):
+        out.append(b"L%d(" % len(v))
+        for x in v:
+            _canon_bytes(x, out)
+        out.append(b")")
+    elif isinstance(v, dict):
+        out.append(b"D%d(" % len(v))
+        for k in sorted(v, key=repr):
+            out.append(repr(k).encode())
+            _canon_bytes(v[k], out)
+        out.append(b")")
+    elif isinstance(v, str):
+        out.append(b"S" + v.encode())
+    else:  # rare: dataclass answers etc. — repr is deterministic here
+        out.append(b"R" + repr(v).encode())
+
+
+def _digest_mix(h: int, op_id: int, send_value) -> int:
+    parts = [h.to_bytes(16, "little"), op_id.to_bytes(8, "little")]
+    _canon_bytes(send_value, parts)
+    return int.from_bytes(
+        hashlib.blake2b(b"".join(parts), digest_size=16).digest(), "little")
+
+
+@dataclass(frozen=True, order=True)
+class Choice:
+    """One enabled scheduler transition — the enumerable choice-point unit
+    the model checker (repro.analysis.explore) explores.
+
+    kind 'lane'    fire the head verb of client ``cid``'s QP lane to ``mn``
+    kind 'master'  dispatch client ``cid``'s pending master call
+    kind 'event'   fire the armed boundary event ``name`` (crash point,
+                   MN-failure detection, migration chunk/cutover commit, ...)
+
+    Every nondeterministic decision of a step-mode run flows through this
+    type: ``Scheduler.choices()`` enumerates the enabled set in a
+    deterministic order and ``Scheduler.fire()`` executes exactly one.
+    ``step(cid, pick)`` remains the schedule-replay surface; it and
+    ``fire`` share the same underlying transition helpers, so a run driven
+    by either is bit-identical given the same transition sequence."""
+    kind: str
+    cid: int = -1
+    mn: int = -1
+    name: str = ""
+
+    def __str__(self) -> str:
+        if self.kind == "lane":
+            return f"lane(cid={self.cid}, mn={self.mn})"
+        if self.kind == "master":
+            return f"master(cid={self.cid})"
+        return f"event({self.name})"
+
+
+@dataclass
+class _ArmedEvent:
+    """An armed boundary event: enumerable as a ``Choice`` while enabled."""
+    fire: Callable[["Scheduler"], Any]
+    enabled: Optional[Callable[["Scheduler"], bool]] = None
+    once: bool = True
 
 
 @dataclass(frozen=True)
@@ -142,6 +215,20 @@ class Scheduler:
         self.mn_detect_delay = mn_detect_delay
         self._mn_detect_at: Optional[int] = None
         self._tick_hooks: List[Callable[["Scheduler"], None]] = []
+        # choice-point API state (model-checker mode): armed boundary
+        # events, the fired-choice log, and manual_boundaries — when True
+        # the armed MN-failure detection does NOT auto-fire in begin_tick
+        # but surfaces as an enumerable 'mn_detect' event choice instead.
+        self._events: Dict[str, _ArmedEvent] = {}
+        self.choice_log: List[Choice] = []
+        self.manual_boundaries = False
+        # model-checker support: when True, every value delivered into an op
+        # generator is folded into a per-client rolling digest.  Client-side
+        # state (allocator cursors, caches, generator frames) is a pure
+        # function of its delivery history, so equal digests + equal pool
+        # bytes + equal queue contents imply equal continuations.
+        self.track_digests = False
+        self.client_digest: Dict[int, int] = {}
 
     # ------------------------------------------------------------- spawning
     def add_client(self, client: FuseeClient):
@@ -216,6 +303,9 @@ class Scheduler:
     def _advance(self, cid: int, run: _Running, send_value):
         """Resume the generator until it yields the next phase or finishes."""
         pipe = self.pipes[cid]
+        if self.track_digests:
+            self.client_digest[cid] = _digest_mix(
+                self.client_digest.get(cid, 0), run.record.op_id, send_value)
         while True:
             try:
                 item = run.gen.send(send_value)
@@ -284,7 +374,8 @@ class Scheduler:
         if self._tick_hooks:
             for hook in tuple(self._tick_hooks):  # hooks may self-remove
                 hook(self)
-        if self._mn_detect_at is not None and self.tick >= self._mn_detect_at:
+        if self._mn_detect_at is not None and self.tick >= self._mn_detect_at \
+                and not self.manual_boundaries:
             self._mn_detect_at = None
             if self.master.maybe_recover_mns():
                 self.mn_recoveries += 1
@@ -303,15 +394,21 @@ class Scheduler:
         if pipe is None:
             return False
         if pipe.master_q:
-            run = pipe.master_q.popleft()
-            call, run.master_call = run.master_call, None
-            ans = self._master_dispatch(call)
-            self._advance(cid, run, ans)
-            return True
+            return self._fire_master(pipe, cid)
         keys = sorted(mn for mn, q in pipe.qp.items() if q)
         if not keys:
             return False
-        mn = keys[pick % len(keys)]
+        return self._fire_lane(pipe, cid, keys[pick % len(keys)])
+
+    # ----------------------------------------------- shared transition core
+    def _fire_master(self, pipe: "_ClientPipe", cid: int) -> bool:
+        run = pipe.master_q.popleft()
+        call, run.master_call = run.master_call, None
+        ans = self._master_dispatch(call)
+        self._advance(cid, run, ans)
+        return True
+
+    def _fire_lane(self, pipe: "_ClientPipe", cid: int, mn: int) -> bool:
         run, idx, verb = pipe.qp[mn].popleft()
         if not pipe.qp[mn]:
             del pipe.qp[mn]
@@ -324,6 +421,92 @@ class Scheduler:
         if run.pending == 0:
             self._advance(cid, run, run.results)
         return True
+
+    # -------------------------------------------------- choice-point API
+    def arm_event(self, name: str, fire: Callable[["Scheduler"], Any], *,
+                  enabled: Optional[Callable[["Scheduler"], bool]] = None,
+                  once: bool = True):
+        """Arm a named boundary event (crash point, migration tick,
+        recovery trigger, ...).  While armed and enabled it enumerates as
+        ``Choice('event', name=...)``; firing runs ``fire(self)`` and —
+        with ``once=True`` — disarms it."""
+        self._events[name] = _ArmedEvent(fire=fire, enabled=enabled,
+                                         once=once)
+
+    def disarm_event(self, name: str):
+        self._events.pop(name, None)
+
+    def choices(self) -> List[Choice]:
+        """The enabled transition set at the current state, deterministic
+        order: per client (sorted cid) either its pending master call or
+        one choice per non-empty QP lane (sorted mn); then armed events
+        (sorted by name); then — under ``manual_boundaries`` — the armed
+        MN-failure detection.  A client whose master call is pending
+        exposes only that choice (``step`` gives master calls priority, so
+        lane firings under a pending call are unreachable by schedules)."""
+        out: List[Choice] = []
+        for cid in sorted(self.pipes):
+            pipe = self.pipes[cid]
+            if pipe.master_q:
+                out.append(Choice("master", cid=cid))
+            else:
+                out += [Choice("lane", cid=cid, mn=mn)
+                        for mn in sorted(m for m, q in pipe.qp.items() if q)]
+        for name in sorted(self._events):
+            ev = self._events[name]
+            if ev.enabled is None or ev.enabled(self):
+                out.append(Choice("event", name=name))
+        if self.manual_boundaries and self._mn_detect_at is not None:
+            out.append(Choice("event", name="mn_detect"))
+        return out
+
+    def fire(self, ch: Choice) -> bool:
+        """Execute one enabled transition (see ``choices``).  Lane and
+        master firings also append a ``(cid, pick)`` decision, so a run
+        that fired no events replays through ``run_trace`` unchanged.
+        Returns False when the choice is not currently enabled."""
+        if ch.kind == "event":
+            if ch.name == "mn_detect":
+                if not (self.manual_boundaries
+                        and self._mn_detect_at is not None):
+                    return False
+                self.choice_log.append(ch)
+                self.begin_tick()
+                self._mn_detect_at = None
+                if self.master.maybe_recover_mns():
+                    self.mn_recoveries += 1
+                return True
+            ev = self._events.get(ch.name)
+            if ev is None or (ev.enabled is not None
+                              and not ev.enabled(self)):
+                return False
+            self.choice_log.append(ch)
+            self.begin_tick()
+            if ev.once:
+                self._events.pop(ch.name, None)
+            ev.fire(self)
+            return True
+        pipe = self.pipes.get(ch.cid)
+        if pipe is None:
+            return False
+        if ch.kind == "master":
+            if not pipe.master_q:
+                return False
+            self.choice_log.append(ch)
+            self.decisions.append((ch.cid, 0))
+            self.begin_tick()
+            return self._fire_master(pipe, ch.cid)
+        if ch.kind == "lane":
+            if pipe.master_q:
+                return False       # master call has priority (see choices)
+            keys = sorted(mn for mn, q in pipe.qp.items() if q)
+            if ch.mn not in keys:
+                return False
+            self.choice_log.append(ch)
+            self.decisions.append((ch.cid, keys.index(ch.mn)))
+            self.begin_tick()
+            return self._fire_lane(pipe, ch.cid, ch.mn)
+        raise ValueError(ch.kind)
 
     def _exec_verb(self, v: Verb, cid: int):
         p = self.pool

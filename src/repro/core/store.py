@@ -38,7 +38,7 @@ from .heap import META_WORDS_PER_CLIENT, DMConfig, DMPool
 from .master import Master
 from .migrate import MigrationEngine
 from .rng import SimRng
-from .sim import Scheduler, SimTrace
+from .sim import Choice, Scheduler, SimTrace
 
 
 class FuseeCluster:
@@ -248,6 +248,33 @@ class FuseeCluster:
             self._fleet.use_kernel = use_kernel   # honor the latest setting
         return self._fleet
 
+    # ------------------------------------------------------- choice points
+    def choices(self):
+        """The enabled scheduler transitions at the current state — the
+        model checker's enumeration surface (see sim.Scheduler.choices)."""
+        return self.scheduler.choices()
+
+    def fire(self, ch: Choice) -> bool:
+        """Execute one enabled transition (see sim.Scheduler.fire)."""
+        return self.scheduler.fire(ch)
+
+    def arm_migration_event(self, name: str = "migrate"):
+        """Expose live-migration progress as an enumerable choice point:
+        while any migration is active, ``Choice('event', name=...)`` is
+        enabled and each firing advances the migration engine one boundary
+        (one bulk-copy chunk, or the master-arbitrated cutover commit).
+        With this armed, a checker controls exactly when the cutover's
+        epoch bump lands relative to every client verb."""
+        # detach the auto tick hook: begin_tick runs inside every fired
+        # choice, so leaving it hooked would advance the migration (and
+        # land the cutover) implicitly, outside the enumerated schedule
+        self.migrator.manual = True
+        self.scheduler.remove_tick_hook(self.migrator._tick_hook)
+        self.migrator._hooked = False
+        self.scheduler.arm_event(
+            name, lambda s: self.migrator.tick(),
+            enabled=lambda s: bool(self.migrator.active), once=False)
+
     # --------------------------------------------------------------- replay
     def trace(self) -> SimTrace:
         """Schedule-replay hook: the (cid, pick) decisions taken so far by
@@ -273,16 +300,19 @@ class FuseeCluster:
             return self.pool._tracer
         return VerbTracer(capacity=capacity).attach(self.pool)
 
-    def race_findings(self, rules=None):
+    def race_findings(self, rules=None, on_truncated: str = "warn"):
         """Happens-before race pass over the attached tracer's events (see
-        ``repro.analysis.races``).  Requires ``attach_tracer`` first."""
+        ``repro.analysis.races``).  Requires ``attach_tracer`` first.
+        ``on_truncated`` governs saturated-ring behavior: "warn" (default)
+        emits ``TruncatedTraceWarning``, "fail" raises, "ignore" is
+        silent — a wrapped ring can hide both races and their guards."""
         from ..analysis import races             # local: analysis is opt-in
         if self.pool._tracer is None:
             raise ValueError(
                 "no tracer attached — call attach_tracer() before running "
                 "the race detector")
         return races.detect(self.pool._tracer, scheduler=self.scheduler,
-                            rules=rules)
+                            rules=rules, on_truncated=on_truncated)
 
     def heap_audit(self):
         """Post-drain DM heap/epoch sanitizer (``repro.analysis.heapcheck``):

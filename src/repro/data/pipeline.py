@@ -42,7 +42,7 @@ class SyntheticLM:
         self.shard_id = shard_id
         self.num_shards = num_shards
         self.local_batch = cfg.global_batch // num_shards
-        rng = np.random.default_rng(cfg.seed)  # lint: allow-nondet (seeded from cfg; outside the sim replay domain)
+        rng = np.random.default_rng(cfg.seed)
         # planted structure: each token class prefers a successor class
         self.succ = rng.permutation(cfg.structure)
         self._q: "queue.Queue" = queue.Queue(maxsize=cfg.prefetch)
@@ -52,9 +52,9 @@ class SyntheticLM:
     def batch_at(self, step: int) -> Dict[str, np.ndarray]:
         """Deterministic batch for a global step (restart-safe)."""
         cfg = self.cfg
-        ss = np.random.SeedSequence(  # lint: allow-nondet (seeded from cfg+step; restart-safe by construction)
+        ss = np.random.SeedSequence(  # seeded from cfg+step: restart-safe
             [cfg.seed, step, self.shard_id, self.num_shards])
-        rng = np.random.default_rng(ss)  # lint: allow-nondet (derived from the seeded SeedSequence above)
+        rng = np.random.default_rng(ss)
         B, S, V, C = self.local_batch, cfg.seq_len, cfg.vocab, cfg.structure
         cls = np.empty((B, S), np.int64)
         cls[:, 0] = rng.integers(0, C, B)
