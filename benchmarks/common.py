@@ -271,7 +271,7 @@ def run_fleet_workload(*, n_clients: int, n_mns: int = 4,
                        theta: float = 0.99, value_words: int = 8,
                        seed: int = 0, pipeline_depth: int = 4,
                        batch_gets: bool = True, enable_cache: bool = True,
-                       use_kernel: bool = True,
+                       use_kernel: bool = True, fused: bool = True,
                        read_dist: Optional[str] = None) -> FleetStats:
     """Run a mixed workload at fleet scale: every client keeps
     ``pipeline_depth`` ops in flight, and every tick advances ALL clients'
@@ -298,7 +298,7 @@ def run_fleet_workload(*, n_clients: int, n_mns: int = 4,
                          replication=replication, ordered=has_scan)
     cluster = FuseeCluster(cfg, num_clients=n_clients, seed=seed,
                            enable_cache=enable_cache)
-    fleet = cluster.fleet(use_kernel=use_kernel)
+    fleet = cluster.fleet(use_kernel=use_kernel, fused=fused)
     sched = cluster.scheduler
     pool = cluster.pool
     backends = [cluster.store(c, max_inflight=0).backend

@@ -113,46 +113,64 @@ def fig12_kv_sizes() -> List[Dict]:
 
 # -------------------------------------------------------------- figure 13 --
 FIG13_CLIENTS = (16, 32, 64, 128, 256, 512, 1024)
+# fused-megakernel scale tail: real runs too, but with a capped key space
+# and op count so the two huge points stay interactive; run for the A/C
+# headline mixes only
+FIG13_TAIL_CLIENTS = (4096, 32768)
+FIG13_TAIL_MIXES = ("A", "C")
 
 
 def fig13_ycsb_scale() -> List[Dict]:
-    """Throughput + per-op latency vs client count, 16 -> 1024 clients.
+    """Throughput + per-op latency vs client count, 16 -> 32768 clients.
 
     Every point is a *real* fleet simulation at that client count
     (core/fleet.py: batched per-tick execution, one cluster-wide
     race_lookup probe per tick) — not an analytic rescale of a small run.
-    Rows carry the measured p50/p99 per-op latency histogram and the
-    batched-execution counters alongside the composed Mops."""
+    The 16->1024 sweep keeps its historical parameters (bit-comparable
+    across PRs); the 4096/32768 tail rides the fused tick with a capped
+    key space.  Rows carry the measured p50/p99 per-op latency histogram
+    and the batched-execution counters alongside the composed Mops."""
     rows = []
+
+    def fusee_point(wl, n_clients, **kw):
+        st = run_fleet_workload(
+            n_clients=n_clients, mix=YCSB[wl], seed=13,
+            # legacy flag: D now defaults to the paper-correct
+            # read-latest draw; fig13 keeps plain zipfian so its
+            # history stays comparable across PRs
+            read_dist="zipfian", **kw)
+        r = throughput_mops(st, n_clients=n_clients)
+        rows.append({"bench": "fig13", "ycsb": wl, "clients": n_clients,
+                     "system": "fusee", "mops": r["mops"],
+                     "avg_rtts": r["avg_rtts"],
+                     "lat_p50_us": st.lat_p50_us,
+                     "lat_p99_us": st.lat_p99_us,
+                     "sim_ops": st.n_ops, "sim_ticks": st.ticks,
+                     "verbs_per_tick": st.verbs_per_tick,
+                     "array_calls_per_tick": st.array_calls_per_tick,
+                     "probe_invocations": st.probe_invocations,
+                     "wall_s": st.wall_s})
+
+    def model_points(wl, n_clients):
+        rows.append({"bench": "fig13", "ycsb": wl, "clients": n_clients,
+                     "system": "clover",
+                     "mops": clover_tput(n_clients=n_clients,
+                                         mix=YCSB[wl],
+                                         md_cores=8)["mops"]})
+        rows.append({"bench": "fig13", "ycsb": wl, "clients": n_clients,
+                     "system": "pdpm",
+                     "mops": pdpm_tput(n_clients=n_clients,
+                                       mix=YCSB[wl])["mops"]})
+
     for wl in ("A", "B", "C", "D"):
         for n_clients in FIG13_CLIENTS:
-            st = run_fleet_workload(
-                n_clients=n_clients, mix=YCSB[wl], seed=13,
-                ops_per_client=max(4, 2048 // n_clients),
-                # legacy flag: D now defaults to the paper-correct
-                # read-latest draw; fig13 keeps plain zipfian so its
-                # history stays comparable across PRs
-                read_dist="zipfian")
-            r = throughput_mops(st, n_clients=n_clients)
-            rows.append({"bench": "fig13", "ycsb": wl, "clients": n_clients,
-                         "system": "fusee", "mops": r["mops"],
-                         "avg_rtts": r["avg_rtts"],
-                         "lat_p50_us": st.lat_p50_us,
-                         "lat_p99_us": st.lat_p99_us,
-                         "sim_ops": st.n_ops, "sim_ticks": st.ticks,
-                         "verbs_per_tick": st.verbs_per_tick,
-                         "array_calls_per_tick": st.array_calls_per_tick,
-                         "probe_invocations": st.probe_invocations,
-                         "wall_s": st.wall_s})
-            rows.append({"bench": "fig13", "ycsb": wl, "clients": n_clients,
-                         "system": "clover",
-                         "mops": clover_tput(n_clients=n_clients,
-                                             mix=YCSB[wl],
-                                             md_cores=8)["mops"]})
-            rows.append({"bench": "fig13", "ycsb": wl, "clients": n_clients,
-                         "system": "pdpm",
-                         "mops": pdpm_tput(n_clients=n_clients,
-                                           mix=YCSB[wl])["mops"]})
+            fusee_point(wl, n_clients,
+                        ops_per_client=max(4, 2048 // n_clients))
+            model_points(wl, n_clients)
+    for wl in FIG13_TAIL_MIXES:
+        for n_clients in FIG13_TAIL_CLIENTS:
+            fusee_point(wl, n_clients, ops_per_client=2, n_keys=8192)
+            model_points(wl, n_clients)
     return rows
 
 

@@ -1,61 +1,194 @@
-"""§Roofline table: read the dry-run artifacts and print the three terms per
-(arch x shape x mesh), plus MODEL_FLOPS / HLO_FLOPs usefulness ratios."""
+"""Fleet-tick roofline: the fused megakernel dispatch vs the per-kind
+batch oracle, on a **captured verb ledger**.
+
+What's measured: a seeded 1024-client YCSB-A fleet run is executed once
+with the fused engine while every ``DMPool.exec_fused_tick`` call records
+its argument tuples — the exact per-tick READ/WRITE/CAS/FAA sweeps the
+protocol issued.  That ledger is then replayed against the (restored)
+pool under both execution paths:
+
+  * **oracle** — the four per-kind ``*_batch`` calls per tick, each
+    dispatching one gather/scatter per (region, replica[, length]) group;
+  * **fused**  — one ``exec_fused_tick`` per tick over the flat region
+    slab with global word addresses.
+
+Replaying the ledger isolates the array-dispatch layer the fusion
+targets from the Python op generators above it (which are identical in
+both modes and dominate end-to-end wall-clock).  The slab bytes are
+restored between timed passes, so both paths execute bit-identical work.
+Rows report ms/tick per path, the speedup, and the verb-traffic roofline
+terms (bytes/tick, effective GB/s).
+
+``run()`` feeds ``benchmarks/run.py``; the ≥3x-at-1024-clients claim is
+checked in ``validate_claims``.
+"""
 from __future__ import annotations
 
-import glob
-import json
-import os
-from typing import Dict, List
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+LEDGER_CLIENTS = (256, 1024)
+REPEATS = 5
 
 
-def load_artifacts(art_dir: str = "artifacts") -> List[Dict]:
-    rows = []
-    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
-        with open(f) as fh:
-            d = json.load(fh)
-        if "roofline" not in d:
+def _ledger_bytes(ledger) -> int:
+    """Verb traffic of the ledger in bytes (words x 8): reads move n
+    words, writes len(words), CAS/FAA two words each (RDMA semantics)."""
+    words = 0
+    for reads, writes, cass, faas in ledger:
+        if reads:
+            words += sum(int(n) for n in reads[3])
+        if writes:
+            words += sum(len(w) for w in writes[3])
+        if cass:
+            words += 2 * len(cass[0])
+        if faas:
+            words += 2 * len(faas[0])
+    return words * 8
+
+
+def capture_ledger(n_clients: int, *, seed: int = 13,
+                   ops_per_client: int = 4):
+    """Run a fused YCSB-A fleet workload, recording the argument tuples
+    of every ``exec_fused_tick`` call (one per fused tick).  Returns
+    ``(cluster, ledger)`` with the pool in its end-of-run state."""
+    from repro.core import FuseeCluster, Op
+
+    from .common import fleet_dmconfig
+
+    n_keys = max(256, 2 * n_clients)
+    cl = FuseeCluster(fleet_dmconfig(n_clients, n_keys),
+                      num_clients=n_clients, seed=seed)
+    fleet = cl.fleet(fused=True)
+    sched, pool = cl.scheduler, cl.pool
+    ledger: List[Tuple] = []
+    orig = pool.exec_fused_tick
+
+    def record(reads=None, writes=None, cass=None, faas=None):
+        ledger.append((reads, writes, cass, faas))
+        return orig(reads, writes, cass, faas)
+
+    pool.exec_fused_tick = record      # instance-attr wrapper (tracer trick)
+    backends = [cl.store(c, max_inflight=0).backend
+                for c in range(n_clients)]
+    for k in range(n_keys):
+        sched.submit(k % n_clients, "insert", k, [k] * 8)
+    fleet.run()
+    wl = cl.rng.stream("workload")
+    plans = [[] for _ in range(n_clients)]
+    for i in range(n_clients * ops_per_client):
+        kind = "update" if wl.random() < 0.5 else "search"
+        key = int(wl.integers(n_keys))
+        plans[i % n_clients].append(
+            Op(kind, key, [i] * 8 if kind == "update" else None))
+    cursor = [0] * n_clients
+    while True:
+        wave = []
+        for c in range(n_clients):
+            room = 4 - sched.inflight(c)
+            if room > 0 and cursor[c] < len(plans[c]):
+                ops = plans[c][cursor[c]:cursor[c] + room]
+                cursor[c] += len(ops)
+                wave.append((backends[c], ops))
+        if wave:
+            fleet.submit_wave(wave)
+        if not sched.has_work():
+            break
+        fleet.tick()
+    pool.exec_fused_tick = orig
+    return cl, ledger
+
+
+def _oracle_args(tick):
+    """The per-kind oracle receives plain Python lists in production
+    (built by ``FleetEngine._exec_kind``); the fused engine hands the
+    pool int64 arrays plus the pre-flattened write values.  Convert —
+    and drop the fused-only write extras — outside the timed region so
+    each path replays its own production input format."""
+    reads, writes, cass, faas = tick
+    if writes:
+        writes = writes[:4]
+    return tuple(
+        t if t is None else tuple(
+            x.tolist() if isinstance(x, np.ndarray) else x for x in t)
+        for t in (reads, writes, cass, faas))
+
+
+def _replay(pool, ledger, *, fused: bool, repeats: int = REPEATS) -> float:
+    """Best-of-N wall-clock (seconds) for one full ledger replay.  The
+    slab bytes and byte counters are restored before every pass, so each
+    pass — and each path — executes bit-identical work."""
+    snap = pool.slab.buf.copy()
+    snap_bytes = pool.mn_bytes.copy()
+    oracle = None if fused else [_oracle_args(t) for t in ledger]
+    best = float("inf")
+    for _ in range(repeats):
+        pool.slab.buf[:] = snap
+        pool.mn_bytes[:] = snap_bytes
+        t0 = time.perf_counter()
+        if fused:
+            for reads, writes, cass, faas in ledger:
+                pool.exec_fused_tick(reads, writes, cass, faas)
+        else:
+            for reads, writes, cass, faas in oracle:
+                if reads:
+                    pool.read_batch(*reads)
+                if writes:
+                    pool.write_batch(*writes)
+                if cass:
+                    pool.cas_batch(*cass)
+                if faas:
+                    pool.faa_batch(*faas)
+        best = min(best, time.perf_counter() - t0)
+    pool.slab.buf[:] = snap
+    pool.mn_bytes[:] = snap_bytes
+    return best
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    for n_clients in LEDGER_CLIENTS:
+        cl, ledger = capture_ledger(n_clients)
+        pool = cl.pool
+        if not ledger:
             continue
-        r = d["roofline"]
+        nbytes = _ledger_bytes(ledger)
+        verbs = sum((len(r[0]) if r else 0)
+                    for tick in ledger for r in tick)
+        t_un = _replay(pool, ledger, fused=False)
+        t_fu = _replay(pool, ledger, fused=True)
+        ticks = len(ledger)
         rows.append({
-            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
-            "step": d.get("step", "?"),
-            "t_compute_s": r["t_compute"], "t_memory_s": r["t_memory"],
-            "t_collective_s": r["t_collective"],
-            "bottleneck": r["bottleneck"],
-            "gb_per_dev": d["memory"]["per_device_bytes"] / 1e9,
-            "fits_16g": d["memory"]["fits_v5e_16g"],
-            "useful_ratio": d.get("useful_flops_ratio"),
-            "mfu_bound": (r["t_compute"] * d.get("useful_flops_ratio", 0)
-                          / max(r["t_bound"], 1e-30)),
+            "bench": "roofline", "mode": "fleet-tick",
+            "clients": n_clients, "ticks": ticks, "verbs": verbs,
+            "verbs_per_tick": verbs / ticks,
+            "bytes_per_tick": nbytes / ticks,
+            "t_unfused_ms_per_tick": 1e3 * t_un / ticks,
+            "t_fused_ms_per_tick": 1e3 * t_fu / ticks,
+            "speedup": t_un / t_fu,
+            "gbps_unfused": nbytes / t_un / 1e9,
+            "gbps_fused": nbytes / t_fu / 1e9,
         })
     return rows
 
 
-def run(art_dir: str = "artifacts") -> List[Dict]:
-    rows = load_artifacts(art_dir)
-    if not rows:
-        return [{"bench": "roofline",
-                 "note": "no artifacts; run repro.launch.dryrun --all first"}]
-    for r in rows:
-        r["bench"] = "roofline"
-    return rows
-
-
 def print_table(rows: List[Dict]):
-    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':6s} {'bottleneck':10s} "
-           f"{'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} {'GB/dev':>7s} "
-           f"{'fit':>4s} {'useful':>7s} {'MFU*':>6s}")
+    hdr = (f"{'clients':>8s} {'ticks':>6s} {'verbs/tick':>11s} "
+           f"{'KB/tick':>9s} {'oracle ms':>10s} {'fused ms':>9s} "
+           f"{'speedup':>8s} {'GB/s':>7s}")
     print(hdr)
     print("-" * len(hdr))
-    for r in sorted(rows, key=lambda r: (r.get("arch", ""), r.get("shape", ""),
-                                         r.get("mesh", ""))):
-        if "arch" not in r:
+    for r in rows:
+        if r.get("mode") != "fleet-tick":
             continue
-        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
-              f"{r['bottleneck']:10s} {r['t_compute_s']:9.2e} "
-              f"{r['t_memory_s']:9.2e} {r['t_collective_s']:9.2e} "
-              f"{r['gb_per_dev']:7.2f} {str(r['fits_16g'])[:4]:>4s} "
-              f"{r['useful_ratio']:7.3f} {r['mfu_bound']:6.3f}")
+        print(f"{r['clients']:8d} {r['ticks']:6d} "
+              f"{r['verbs_per_tick']:11.0f} "
+              f"{r['bytes_per_tick'] / 1024:9.1f} "
+              f"{r['t_unfused_ms_per_tick']:10.3f} "
+              f"{r['t_fused_ms_per_tick']:9.3f} "
+              f"{r['speedup']:8.1f} {r['gbps_fused']:7.2f}")
 
 
 if __name__ == "__main__":

@@ -297,6 +297,12 @@ def summarize(name: str, rows) -> str:
         worst = min(rows, key=lambda r: r.get("mfu_bound", 1))
         return (f"{len(rows)} cells; worst MFU-bound "
                 f"{worst['arch']}/{worst['shape']}={worst['mfu_bound']:.3f}")
+    if name == "roofline" and rows[0].get("mode") == "fleet-tick":
+        top = max(rows, key=lambda r: r["clients"])
+        return (f"fleet tick @{top['clients']}: "
+                f"{top['t_fused_ms_per_tick']:.2f}ms fused vs "
+                f"{top['t_unfused_ms_per_tick']:.2f}ms oracle "
+                f"({top['speedup']:.1f}x, {top['gbps_fused']:.2f}GB/s)")
     return f"{len(rows)} rows"
 
 
@@ -374,6 +380,15 @@ def validate_claims(rows):
                        ov < 3.0,
                        f"paused {ov:+.1f}%, recording "
                        f"{to['recording']['overhead_pct']:+.1f}%"))
+    rl = [r for r in rows if r.get("bench") == "roofline"
+          and r.get("mode") == "fleet-tick"]
+    if rl:
+        top = max(rl, key=lambda r: r["clients"])
+        checks.append(("fused tick >= 3x per-kind oracle @1024 clients",
+                       top["clients"] >= 1024 and top["speedup"] >= 3.0,
+                       f"{top['speedup']:.1f}x at {top['clients']} clients "
+                       f"({top['t_unfused_ms_per_tick']:.2f} -> "
+                       f"{top['t_fused_ms_per_tick']:.2f} ms/tick)"))
     exp = [r for r in rows if r.get("bench") == "explore"]
     if exp:
         r = exp[0]

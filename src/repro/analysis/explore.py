@@ -55,6 +55,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from ..core import client as client_mod
+from ..core import master as master_mod
 from ..core import race as race_mod
 from ..core import sim as sim_mod
 from ..core.heap import DMConfig
@@ -78,7 +79,8 @@ _FAR_FUTURE = 1 << 60
 # --------------------------------------------------------------------- flags
 # the test-only protocol-hole switches a scope may re-enable, addressed as
 # "module.ATTRIBUTE" (the same names the regression tests flip)
-_FLAG_MODULES = {"client": client_mod, "sim": sim_mod}
+_FLAG_MODULES = {"client": client_mod, "master": master_mod,
+                 "sim": sim_mod}
 
 
 def _flag_items(flags: Optional[Dict[str, bool]]) -> List[Tuple[str, bool]]:
@@ -232,6 +234,51 @@ def _scope_cutover() -> ScopeSetup:
     return _setup(cl, [1])
 
 
+def _owned_primary_mn(sc, cid: int):
+    """The MN holding replica 0 of the first data region whose BAT records
+    a block owned by ``cid`` (None until the client has allocated)."""
+    pool = sc.pool
+    for g in pool.data_regions:
+        mem = pool.mns[pool.primary_mn(g)].regions.get(g)
+        if mem is None:
+            continue
+        for b in range(pool.cfg.blocks_per_region):
+            if int(mem[b]) == cid + 1:
+                return pool.primary_mn(g)
+    return None
+
+
+def _scope_loser_reset() -> ScopeSetup:
+    # the storm seeds-8/15 shape, minimized: client 1 dies mid-insert
+    # with its KV object landed on the primary replica only (the crash
+    # drops the backup-write lane), §5.3 recovery REDOES the logged op —
+    # installing the index slot and committing the log off the one good
+    # copy — and then the MN holding that copy dies too.  Alg-3 re-homes
+    # the region onto the surviving (all-zero at the object) replica:
+    # the slot now references garbage, which the heap audit reports as a
+    # slot surviving a loser reset.  master.UNSAFE_REDO_NO_CONVERGE
+    # re-opens the hole; the fix converges the object replicas before
+    # the redo makes the object reachable.
+    cl = _mk_cluster(_small_cfg(num_mns=2, replication=2, regions_per_mn=2),
+                     num_clients=2)
+    k1, k2 = colliding_keys(cl.cfg.index_buckets, 2)
+    cl.scheduler.submit(0, "insert", k1, [10, 1])
+    cl.scheduler.submit(1, "insert", k2, [20, 1])
+    cl.scheduler.arm_event("crash_client:1", lambda sc: sc.crash_client(1),
+                           once=True)
+    cl.scheduler.arm_event(
+        "recover_client:1", lambda sc: cl.recover_client(1),
+        enabled=lambda sc: cl.clients[1].crashed, once=True)
+    # crash the MN holding the primary copy of the crashed client's data
+    # (resolved per-state: placement is deterministic but allocation-time)
+    cl.scheduler.arm_event(
+        "crash_mn_primary", lambda sc: sc.crash_mn(_owned_primary_mn(sc, 1)),
+        enabled=lambda sc: (cl.clients[1].crashed
+                            and _owned_primary_mn(sc, 1) is not None),
+        once=True)
+    return _setup(cl, [k1, k2])
+
+
 SCOPES: Dict[str, Scope] = {s.name: s for s in (
     Scope("insert_race", "2 clients insert the same key (1 MN, r=1) — the "
           "DPOR reduction benchmark scope", _scope_insert_race),
@@ -248,6 +295,10 @@ SCOPES: Dict[str, Scope] = {s.name: s for s in (
     Scope("cutover", "1 client upserting across a live add_mn index "
           "migration; the churn-cutover acked-write-loss scope "
           "(client.UNSAFE_FREE_OWN_ON_RETRY)", _scope_cutover),
+    Scope("loser_reset", "2 clients over colliding keys; client 1 crashes "
+          "mid-insert, is recovered (§5.3 redo), then the MN holding its "
+          "object's primary copy crashes — the storm seeds-8/15 torn-redo "
+          "scope (master.UNSAFE_REDO_NO_CONVERGE)", _scope_loser_reset),
 )}
 
 

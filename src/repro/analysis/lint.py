@@ -1,4 +1,4 @@
-"""AST protocol lints for the FUSEE reproduction (L001-L006).
+"""AST protocol lints for the FUSEE reproduction (L001-L007).
 
 Run as ``python -m repro.analysis.lint [paths...]`` (defaults to the
 ``repro`` package plus the repo's ``tests/`` and ``benchmarks/`` trees);
@@ -39,12 +39,21 @@ L006  **pragma hygiene** — every suppression pragma must carry a
       a pragma whose rule no longer fires on its line is *stale* and gets
       reported (a leftover license would silently cover a future
       regression on that line).
+L007  **Python loops in the fused tick path** — ``*fused*`` functions in
+      ``fleet.py``/``heap.py`` are the megakernel: one array dispatch
+      over the whole fleet's lanes.  Any statement-level ``for``/
+      ``while`` there is a per-lane O(N) regression waiting to scale, so
+      each one must either vanish into array ops or carry an explicit
+      ``allow-fused-loop`` pragma arguing why it is not per-lane work
+      (LUT rebuilds on topology changes, per-verb result unpack at the
+      generator API boundary, inherently sequential same-word races).
 
 Suppression: a trailing ``# lint: allow-<name> (<why>)`` pragma on the
 offending line, or on the enclosing ``def``/``class`` line to cover the
 whole body.  ``<name>`` is the rule id (``L003``) or its alias:
 ``assert`` (L005), ``epoch`` (L001), ``nondet`` (L002), ``pool-mutation``
-(L003), ``scalar-loop`` (L004).  Pragmas are deliberate, documented
+(L003), ``scalar-loop`` (L004), ``fused-loop`` (L007).  Pragmas are
+deliberate, documented
 exemptions — the lint keeps them honest by flagging unknown names,
 missing justifications, and stale sites (L006 itself is exempt from
 suppression: delete the pragma instead).
@@ -71,11 +80,12 @@ RULES = {
     "L005": "bare assert in protocol code",
     "L006": "lint pragma without justification, or stale (suppresses "
             "nothing)",
+    "L007": "Python loop inside a fused tick path",
 }
 
 _ALIASES = {
     "epoch": "L001", "nondet": "L002", "pool-mutation": "L003",
-    "scalar-loop": "L004", "assert": "L005",
+    "scalar-loop": "L004", "assert": "L005", "fused-loop": "L007",
 }
 
 VERBS = ("read", "write", "cas", "faa")
@@ -310,10 +320,12 @@ class _Linter(ast.NodeVisitor):
         if self._tainted and _mentions_regions(node.iter):
             self._tainted[-1].update(_names_in_target(node.target))
         self._check_L004(node)
+        self._check_L007(node)
         self.generic_visit(node)
 
     def visit_While(self, node):
         self._check_L004(node)
+        self._check_L007(node)
         self.generic_visit(node)
 
     def _check_store_targets(self, targets, node):
@@ -365,6 +377,21 @@ class _Linter(ast.NodeVisitor):
                         "array call per verb kind), or add "
                         "`# lint: allow-scalar-loop (<why>)`")
                     return
+
+    # --------------------------------------------------------------- L007
+    def _check_L007(self, node):
+        if self.base not in ("fleet.py", "heap.py"):
+            return
+        if not any("fused" in getattr(fn, "name", "")
+                   for fn in self._fn_stack):
+            return
+        kw = "for" if isinstance(node, ast.For) else "while"
+        self._flag(
+            "L007", node,
+            f"Python `{kw}` loop inside a fused tick path — the megakernel "
+            "contract is ONE array dispatch over all lanes; vectorize it, "
+            "or add `# lint: allow-fused-loop (<why this is not per-lane "
+            "work>)`")
 
 
 # ---------------------------------------------------------------- frontends

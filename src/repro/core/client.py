@@ -73,6 +73,26 @@ UNSAFE_ACK_LOST_EMPTY_CAS = False
 # and assert it is found + minimized.
 UNSAFE_FREE_OWN_ON_RETRY = False
 
+# TEST-ONLY: when True, a SNAPSHOT round that observes the primary moved
+# off ``v_old`` concludes LOSE/FINISH *without first checking whether the
+# primary moved to its OWN ``v_new``* — the storm-seeds-8/15 loser-reset
+# bug.  The master can land a "loser's" value on its behalf: Alg-3
+# recovery (``Master._repair_index_region``) adopts the first alive
+# backup on divergence, and ``Master.fail_query`` adopts a backup
+# majority — both then commit the embedded log of whatever value they
+# installed.  A client whose backup-CAS residue was adopted that way is
+# *the committed winner*, but its LOSE poll (Alg 1 lines 17-22) only
+# tested ``primary != v_old``; under this flag it then resets its own
+# used bit and returns LOSE, leaving the index slot referencing a used=0
+# object (heapcheck: "slot survived a loser reset", CRC/fp failures,
+# key-in-two-slots once the reset object is reclaimed and reused).  The
+# fix treats primary==v_new as MASTER_WIN — every path that can install
+# v_new on our behalf also commits our embedded log, so acking is safe
+# and the used bit must stay set.  Exists solely so the model checker
+# (repro.analysis.explore, scope ``loser_reset``) and regression tests
+# can re-introduce the bug and assert it is found + minimized.
+UNSAFE_LOSE_ON_OWN_COMMIT = False
+
 
 def evaluate_rules_pure(v_list: List[Optional[int]], v_new: int):
     """Pure part of Alg. 2 (no Rule-3 primary check).  ``None`` = FAIL.
@@ -355,6 +375,11 @@ class FuseeClient:
                                                    prev_ptr))
             if int(res[0]) == int(v_old):
                 return OK, R1, v_new
+            if int(res[0]) == int(v_new) and not UNSAFE_LOSE_ON_OWN_COMMIT:
+                # the primary already holds OUR value: the master installed
+                # it on our behalf (fail_query arbitration of an earlier
+                # bounced round) and committed our log — we are the winner
+                return OK, "MASTER_WIN", v_new
             # lost the race; linearize just before the winner
             yield Phase(self._reset_used_verbs(obj_ptr, obj_sc, prev_ptr),
                         label="loser_reset")
@@ -374,6 +399,14 @@ class FuseeClient:
                               label="rule3_check")
             if chk[0] is None:
                 win = FAILV
+            elif int(chk[0][0]) == int(v_new) \
+                    and not UNSAFE_LOSE_ON_OWN_COMMIT:
+                # the primary moved to OUR value: the master's adopt-backup
+                # repair (Alg-3 recovery or fail_query) installed our
+                # backup-CAS residue and committed our log — concluding
+                # FINISH here would reset the used bit of the very object
+                # the index now references (the seeds-8/15 bug)
+                return OK, "MASTER_WIN", v_new
             elif int(chk[0][0]) != int(v_old):
                 win = FINISH
             elif min(v_list) == int(v_new):
@@ -453,6 +486,14 @@ class FuseeClient:
                                                    prev_ptr))
             if int(chk[0][0]) != int(v_old):
                 break
+        if int(chk[0][0]) == int(v_new) and not UNSAFE_LOSE_ON_OWN_COMMIT:
+            # the slot moved to OUR value while we were polling: an MN
+            # crash mid-round let Alg-3 recovery adopt our backup-CAS
+            # residue (``_repair_index_region`` takes the first alive
+            # backup) and commit our embedded log.  We are the committed
+            # winner — resetting the used bit now would leave the index
+            # slot referencing a dead object (storm seeds 8/15).
+            return OK, "MASTER_WIN", v_new
         # reset our used bit before returning so recovery never redoes a
         # returned (lost) op — required for linearizability under redo (§5.3).
         yield Phase(self._reset_used_verbs(obj_ptr, obj_sc, prev_ptr),

@@ -31,6 +31,7 @@ fleet ticks; it captures only step-mode decisions.
 """
 from __future__ import annotations
 
+from itertools import chain
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -64,16 +65,27 @@ class FleetEngine:
     benchmarks use pure fleet ticks, correctness tests mix freely.
     """
 
-    def __init__(self, scheduler: Scheduler, *, use_kernel: bool = True):
+    def __init__(self, scheduler: Scheduler, *, use_kernel: bool = True,
+                 fused: bool = True):
         self.sched = scheduler
         self.use_kernel = use_kernel
+        # fused=True executes each tick's four array-verb sweeps as ONE
+        # pool dispatch over the flat region slab
+        # (heap.DMPool.exec_fused_tick); per tick it falls back to the
+        # per-kind *_batch oracle whenever semantics demand it (live
+        # migration dual-writes, an attached + recording tracer).  Both
+        # paths are bit-identical — tests/test_fleet_fused.py is the
+        # differential replay oracle.
+        self.fused = fused
         self.counters: Dict[str, int] = {
             "ticks": 0, "verbs": 0, "array_calls": 0, "master_calls": 0,
             "index_probe_verbs": 0, "probe_invocations": 0, "probe_keys": 0,
             "probe_hits": 0, "shadow_rebuilds": 0, "max_lanes": 0,
             "ord_leaf_verbs": 0, "scan_locate_invocations": 0,
-            "scan_locate_keys": 0,
+            "scan_locate_keys": 0, "fused_ticks": 0, "fallback_ticks": 0,
         }
+        for _k in _VERB_ORDER:
+            self.counters["verbs_" + _k] = 0
         # memoized combined shadow: (per-backend fingerprints, entries, table)
         self._probe_memo = (None, None, None)
 
@@ -107,20 +119,41 @@ class FleetEngine:
 
         finished: List[Tuple[int, Any]] = []
         epoch = sched.pool.epoch
+        pool = sched.pool
+        tr = pool._tracer
+        # the fused sweep bypasses the *_batch entry points (which a
+        # recording tracer instruments via instance-attribute wrappers)
+        # and cannot mirror migration dual-writes — those ticks fall back
+        # to the per-kind oracle path rather than silently dropping verbs
+        use_fused = (self.fused and not pool.migrations
+                     and (tr is None or tr.paused))
+        live_by_kind: Dict[str, list] = {}
+        for kind, items in by_kind.items():
+            self.counters["verbs_" + kind] += len(items)
+            # stale-epoch verbs FAIL without touching the pool (§5.2 —
+            # mirrors sim._exec_verb's guard; same test-only bypass flag)
+            if sim_module.UNSAFE_EXEC_STALE_EPOCH:
+                live_by_kind[kind] = items
+            else:
+                live_by_kind[kind] = [it for it in items
+                                      if not (0 <= it[3].epoch != epoch)]
+        fused_res: Dict[str, list] = {}
+        if use_fused and any(live_by_kind.get(k)
+                             for k in ("read", "write", "cas", "faa")):
+            fused_res = self._exec_fused(live_by_kind)
+            self.counters["fused_ticks"] += 1
+        elif lanes and self.fused:
+            self.counters["fallback_ticks"] += 1
         for kind in _VERB_ORDER:
             items = by_kind.get(kind)
             if not items:
                 continue
-            # stale-epoch verbs FAIL without touching the pool (§5.2 —
-            # mirrors sim._exec_verb's guard; same test-only bypass flag)
-            if sim_module.UNSAFE_EXEC_STALE_EPOCH:
-                live = items
+            live = live_by_kind[kind]
+            if kind in fused_res:
+                results = fused_res[kind]
             else:
-                live = [it for it in items
-                        if not (0 <= it[3].epoch != epoch)]
-            res_by_id = {id(it): r
-                         for it, r in zip(live, self._exec_kind(kind, live))} \
-                if live else {}
+                results = self._exec_kind(kind, live) if live else []
+            res_by_id = {id(it): r for it, r in zip(live, results)}
             for it in items:
                 cid, run, idx, _verb = it
                 run.results[idx] = res_by_id.get(id(it))
@@ -190,6 +223,82 @@ class FleetEngine:
         if kind == "free":
             return [pool.free_block(v.mn, v.region, v.off) for v in verbs]
         raise ValueError(kind)
+
+    def _exec_fused(self, live_by_kind) -> Dict[str, list]:
+        """ONE pool dispatch for the tick's four array-verb sweeps
+        (``heap.DMPool.exec_fused_tick`` over the flat region slab).
+        Returns ``{kind: results}`` aligned with ``live_by_kind[kind]`` —
+        element-wise identical to four ``_exec_kind`` calls.  ALLOC/FREE
+        are MN-CPU RPCs, not array verbs; they stay on the per-item path.
+        """
+        pool = self.sched.pool
+
+        def _i64(vals, k):
+            # verb coords go straight to int64 arrays (asarray in the pool
+            # sweeps is then a no-op) — the per-kind oracle builds lists
+            return np.fromiter(vals, np.int64, count=k)
+
+        def _u64(verbs_, attr, k):
+            # word values as uint64 arrays; out-of-range values fall back
+            # to the plain list (the pool sweeps mask them per element)
+            try:
+                return np.fromiter((getattr(v, attr) for v in verbs_),
+                                   np.uint64, count=k)
+            except (OverflowError, TypeError, ValueError):
+                return [getattr(v, attr) for v in verbs_]
+
+        reads = writes = cass = faas = None
+        r_items = live_by_kind.get("read")
+        if r_items:
+            verbs = [v for (_c, _r, _i, v) in r_items]
+            shard_set = pool.index_region_set
+            self.counters["index_probe_verbs"] += sum(
+                v.region in shard_set for v in verbs)
+            self.counters["ord_leaf_verbs"] += sum(
+                v.region in pool.ordered_region_set for v in verbs)
+            k = len(verbs)
+            reads = (_i64((v.region for v in verbs), k),
+                     _i64((v.replica for v in verbs), k),
+                     _i64((v.off for v in verbs), k),
+                     _i64((v.n for v in verbs), k))
+        w_items = live_by_kind.get("write")
+        if w_items:
+            verbs = [v for (_c, _r, _i, v) in w_items]
+            k = len(verbs)
+            words = [v.words for v in verbs]
+            ns = _i64(map(len, words), k)
+            try:
+                # flatten all word values in one C pass while the verb
+                # list is hot; the sweep scatters this directly and only
+                # falls back to per-list flattening when absent
+                vals = np.fromiter(chain.from_iterable(words), np.uint64,
+                                   count=int(ns.sum()))
+            except (OverflowError, TypeError, ValueError):
+                vals = None        # out-of-range word: sweep masks per list
+            writes = (_i64((v.region for v in verbs), k),
+                      _i64((v.replica for v in verbs), k),
+                      _i64((v.off for v in verbs), k),
+                      words, ns, vals)
+        c_items = live_by_kind.get("cas")
+        if c_items:
+            verbs = [v for (_c, _r, _i, v) in c_items]
+            k = len(verbs)
+            cass = (_i64((v.region for v in verbs), k),
+                    _i64((v.replica for v in verbs), k),
+                    _i64((v.off for v in verbs), k),
+                    _u64(verbs, "exp", k), _u64(verbs, "new", k))
+        f_items = live_by_kind.get("faa")
+        if f_items:
+            verbs = [v for (_c, _r, _i, v) in f_items]
+            k = len(verbs)
+            faas = (_i64((v.region for v in verbs), k),
+                    _i64((v.replica for v in verbs), k),
+                    _i64((v.off for v in verbs), k),
+                    _u64(verbs, "delta", k))
+        self.counters["array_calls"] += 1
+        r, w, c, f = pool.exec_fused_tick(reads, writes, cass, faas)
+        return {"read": r, "write": [True if ok else None for ok in w],
+                "cas": c, "faa": f}
 
     # ------------------------------------------------------------- driving
     def run(self, max_ticks: int = 1_000_000) -> int:

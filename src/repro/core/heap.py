@@ -29,6 +29,7 @@ Faithfulness notes
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from itertools import chain
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -92,24 +93,97 @@ META_WORDS_PER_CLIENT = 64  # sc list heads + scratch
 BAT_ORPHAN = 1 << 32
 
 
+class RegionSlab:
+    """Flat backing store for every hosted region copy.
+
+    One contiguous uint64 buffer carved into region-sized *cells*; each
+    ``MemoryNode.regions[g]`` entry is a zero-copy view of one cell, so
+    all existing per-region code is unchanged while the fused tick
+    (``DMPool.exec_fused_tick``) can gather/scatter/CAS an entire tick's
+    verbs against the single flat buffer with **global word addresses**
+    (``cell * region_words + offset``) — no per-(region, replica) group
+    dispatch.
+
+    Growth doubles the buffer and re-binds every registered node's views;
+    nothing outside ``MemoryNode.regions`` may hold a cell view across a
+    carve (callers that copy regions snapshot with ``.copy()`` first).
+    """
+
+    def __init__(self, region_words: int, capacity: int = 8):
+        self.region_words = region_words
+        self.capacity = max(1, capacity)
+        self.buf = np.zeros(self.capacity * region_words, np.uint64)
+        # free cells, descending, so pop() hands out the lowest cell first
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self.cells: Dict[tuple, int] = {}      # (mid, region) -> cell
+        self._nodes: List["MemoryNode"] = []   # rebind targets on growth
+        self.gen = 0        # bumped on carve/release: cell-map version
+
+    def register(self, mn: "MemoryNode"):
+        self._nodes.append(mn)
+
+    def view(self, cell: int) -> np.ndarray:
+        rw = self.region_words
+        return self.buf[cell * rw:(cell + 1) * rw]
+
+    def carve(self, mid: int, region: int) -> np.ndarray:
+        """Allocate (and zero) a cell for one region copy."""
+        if not self._free:
+            self._grow()
+        cell = self._free.pop()
+        self.cells[(mid, region)] = cell
+        self.gen += 1
+        v = self.view(cell)
+        v[:] = 0
+        return v
+
+    def release(self, mid: int, region: int):
+        cell = self.cells.pop((mid, region), None)
+        if cell is not None:
+            self._free.append(cell)
+            self.gen += 1
+
+    def _grow(self):
+        old_cap = self.capacity
+        self.capacity = old_cap * 2
+        buf = np.zeros(self.capacity * self.region_words, np.uint64)
+        buf[:self.buf.size] = self.buf
+        self.buf = buf
+        self._free.extend(range(self.capacity - 1, old_cap - 1, -1))
+        for mn in self._nodes:
+            for (mid, region), cell in self.cells.items():
+                if mid == mn.mid and region in mn.regions:
+                    mn.regions[region] = self.view(cell)
+
+
 class MemoryNode:
     """A passive memory node.  Owns replica copies of regions."""
 
-    def __init__(self, mid: int, cfg: DMConfig):
+    def __init__(self, mid: int, cfg: DMConfig,
+                 slab: Optional[RegionSlab] = None):
         self.mid = mid
         self.cfg = cfg
         self.alive = True
         self.retired = False            # gracefully removed (not crashed)
         self.regions: Dict[int, np.ndarray] = {}
+        self._slab = slab               # pool-shared flat backing store
         # MN-side coarse allocation cursor per primary region (compute-light)
         self.alloc_cursor: Dict[int, int] = {}
         self.cpu_ops = 0  # number of MN-CPU operations served (for netmodel)
+        if slab is not None:
+            slab.register(self)
 
     def host_region(self, region_id: int):
-        self.regions[region_id] = np.zeros(self.cfg.region_words, dtype=np.uint64)
+        if self._slab is not None:
+            self.regions[region_id] = self._slab.carve(self.mid, region_id)
+        else:
+            self.regions[region_id] = np.zeros(self.cfg.region_words,
+                                               dtype=np.uint64)
 
     def drop_region(self, region_id: int):
-        self.regions.pop(region_id, None)
+        if self.regions.pop(region_id, None) is not None \
+                and self._slab is not None:
+            self._slab.release(self.mid, region_id)
 
 
 class DMPool:
@@ -118,7 +192,13 @@ class DMPool:
     def __init__(self, cfg: DMConfig, num_clients: int = 64, seed: int = 0):
         self.cfg = cfg
         self.num_clients = num_clients
-        self.mns = [MemoryNode(i, cfg) for i in range(cfg.num_mns)]
+        # flat backing store for every hosted region copy (fused tick
+        # substrate); sized for the initial placement, grows by doubling
+        r_eff = min(cfg.replication, cfg.num_mns)
+        init_cells = (cfg.num_mns * cfg.regions_per_mn + 1
+                      + cfg.index_shards + int(cfg.ordered_index)) * r_eff
+        self.slab = RegionSlab(cfg.region_words, capacity=init_cells + 2)
+        self.mns = [MemoryNode(i, cfg, self.slab) for i in range(cfg.num_mns)]
         self.epoch = 0
         # pinned, epoch-versioned region -> ordered MN list (replica 0 =
         # primary); mutated ONLY by recovery/migration (ring.py)
@@ -135,6 +215,10 @@ class DMPool:
         # tracer installs instance-attribute wrappers over the verb
         # methods, so the un-attached pool pays zero per-verb cost
         self._tracer = None
+        # fused-tick (region, replica) -> (cell, mid) lookup table, cached
+        # until the topology token changes (see _fused_cells)
+        self._fused_lut = None
+        self._alive_gen = 0     # bumped whenever an MN leaves the pool
 
     # ---------------- placement -------------------------------------------
     @property
@@ -226,7 +310,7 @@ class DMPool:
         ring.  Region placement does NOT change here — the migration
         engine re-homes shards and grants the node fresh data regions."""
         mid = len(self.mns)
-        self.mns.append(MemoryNode(mid, self.cfg))
+        self.mns.append(MemoryNode(mid, self.cfg, self.slab))
         self.mn_bytes = np.concatenate(
             [self.mn_bytes, np.zeros(1, np.int64)])
         self.directory.add_member(mid)
@@ -266,6 +350,7 @@ class DMPool:
                 f"{sorted(mn.regions)}: drain (migrate) them first")
         mn.retired = True
         mn.alive = False
+        self._alive_gen += 1
         self.directory.remove_member(mid)
 
     # ---------------- dual-write mirroring (live migration) ----------------
@@ -487,6 +572,245 @@ class DMPool:
                 2 * len(sel) * L.WORD
         return out
 
+    # ---------------- fused tick (fleet megakernel substrate) --------------
+    # One fleet tick's READ/WRITE/CAS/FAA sweeps executed against the flat
+    # region slab with GLOBAL word addresses (cell * region_words + off)
+    # instead of one gather/scatter per (region, replica[, length]) group.
+    # Results are bit-identical to the *_batch twins above — the twins stay
+    # the oracle (and the tracer's instrumentation point); the fused path
+    # delegates back to them wherever ordering could differ (dual-write
+    # migration windows, overlapping same-tick writes).
+
+    def _fused_cells(self, regions: np.ndarray, replicas: np.ndarray):
+        """Per-verb (cell, mid): the slab cell of the addressed replica copy
+        and its MN id; cell -1 where the verb FAILs (dead/absent replica).
+
+        Resolution is a dense (region, replica) lookup table, rebuilt only
+        when the topology token changes: fresh regions always carve a cell
+        (slab.gen), rehomes and membership changes bump directory.gen, and
+        MNs are crash-stop (_alive_gen covers kills and retires)."""
+        tok = (self.slab.gen, self.directory.gen, self._alive_gen)
+        lut = self._fused_lut
+        if lut is None or lut[0] != tok:
+            table = self.placement
+            nr = (max(table) + 1) if table else 1
+            nrep = max((len(r) for r in table.values()), default=1)
+            cell_lut = np.full((nr, nrep), -1, np.int64)
+            mid_lut = np.zeros((nr, nrep), np.int64)
+            for region, reps in table.items():  # lint: allow-fused-loop (LUT rebuild — runs only on topology changes, not per tick)
+                for replica, mid in enumerate(reps):  # lint: allow-fused-loop (LUT rebuild — bounded by the replication factor)
+                    mn = self.mns[mid]
+                    if not mn.alive or region not in mn.regions:
+                        continue
+                    cell = self.slab.cells.get((mid, region))
+                    if cell is not None:
+                        cell_lut[region, replica] = cell
+                        mid_lut[region, replica] = mid
+            lut = self._fused_lut = (tok, cell_lut, mid_lut)
+        _tok, cell_lut, mid_lut = lut
+        nr, nrep = cell_lut.shape
+        # verb coords are built from placement lookups, so they are never
+        # negative; two scalar reductions cover the hot path
+        if regions.size == 0 or (int(regions.max()) < nr
+                                 and int(replicas.max()) < nrep):
+            return cell_lut[regions, replicas], mid_lut[regions, replicas]
+        ok = (regions < nr) & (replicas < nrep)
+        rg = np.where(ok, regions, 0)
+        rp = np.where(ok, replicas, 0)
+        return (np.where(ok, cell_lut[rg, rp], -1),
+                np.where(ok, mid_lut[rg, rp], 0))
+
+    def exec_fused_tick(self, reads=None, writes=None, cass=None, faas=None):
+        """Execute one fleet tick's verb sweeps in ``_VERB_ORDER`` against
+        the flat slab.  Each argument is the positional-arg tuple of the
+        corresponding ``*_batch`` twin (or None); ``writes`` may carry
+        two extra trailing args (per-verb lengths + pre-flattened uint64
+        values, built by the fleet layer while draining lanes).  Returns
+        the four result lists ``(read_out, write_out, cas_out, faa_out)``,
+        element-wise identical to what the twins would return.
+
+        During a live migration the dual-write mirror must observe every
+        mutation, so the whole tick delegates to the (mirroring) twins."""
+        if self.migrations:
+            return (self.read_batch(*reads) if reads else [],
+                    self.write_batch(*writes[:4]) if writes else [],
+                    self.cas_batch(*cass) if cass else [],
+                    self.faa_batch(*faas) if faas else [])
+        r = self._fused_read_sweep(*reads) if reads else []
+        w = self._fused_write_sweep(*writes) if writes else []
+        c = self._fused_cas_sweep(*cass) if cass else []
+        f = self._fused_faa_sweep(*faas) if faas else []
+        return r, w, c, f
+
+    def _fused_read_sweep(self, regions, replicas, offs, ns) -> list:
+        regions = np.asarray(regions, np.int64)
+        replicas = np.asarray(replicas, np.int64)
+        offs = np.asarray(offs, np.int64)
+        ns = np.asarray(ns, np.int64)
+        cells, mids = self._fused_cells(regions, replicas)
+        live = (cells >= 0) & (ns > 0)
+        out: list = [None] * len(regions)
+        if not live.any():
+            return out
+        flat = self.slab.buf
+        base = cells * self.slab.region_words + offs
+        self.mn_bytes += (np.bincount(
+            mids[live], weights=ns[live] * L.WORD,
+            minlength=self.mn_bytes.size)).astype(np.int64)
+        # ONE ragged gather for every live verb regardless of length: flat
+        # address vector built with the repeat/cumsum trick, then split
+        # back into per-verb rows (views of the gathered copy)
+        sel = np.nonzero(live)[0]
+        ln = ns[sel]
+        ends = np.cumsum(ln)
+        addrs = np.repeat(base[sel], ln) \
+            + (np.arange(int(ends[-1])) - np.repeat(ends - ln, ln))
+        rows = flat[addrs]
+        lo = 0
+        for i, hi in zip(sel.tolist(), ends.tolist()):  # lint: allow-fused-loop (per-verb result unpack at the generator API boundary — same loop as the read_batch oracle)
+            out[i] = rows[lo:hi]
+            lo = hi
+        return out
+
+    def _fused_write_sweep(self, regions, replicas, offs, words_list,
+                           ns=None, vals=None) -> list:
+        regions = np.asarray(regions, np.int64)
+        replicas_a = np.asarray(replicas, np.int64)
+        offs_a = np.asarray(offs, np.int64)
+        if ns is None:
+            ns = np.fromiter(map(len, words_list), np.int64,
+                             count=len(words_list))
+        else:
+            ns = np.asarray(ns, np.int64)
+        cells, mids = self._fused_cells(regions, replicas_a)
+        live = cells >= 0
+        live_pos = live & (ns > 0)
+        sel = np.nonzero(live_pos)[0]
+        if len(sel):
+            base = cells * self.slab.region_words + offs_a
+            ln = ns[sel]
+            ends = np.cumsum(ln)
+            total = int(ends[-1])
+            # ONE ragged scatter for every live verb (repeat/cumsum
+            # addressing, values flattened in a single fromiter pass)
+            # overlap test on per-verb [base, base+n) intervals: contiguous
+            # word ranges overlap iff they share an address, so sorting the
+            # ~V starts is equivalent to (and much cheaper than) sorting
+            # the full ~sum(n) address vector
+            order = np.argsort(base[sel], kind="stable")
+            sb = base[sel][order]
+            if ((sb[:-1] + ln[order][:-1]) > sb[1:]).any():
+                # overlapping same-tick writes: their landing order is the
+                # twin's (deterministic) group order — delegate the sweep
+                return self.write_batch(regions, replicas, offs, words_list)
+            addrs = np.repeat(base[sel], ln) \
+                + (np.arange(total) - np.repeat(ends - ln, ln))
+            if vals is not None:
+                # values pre-flattened by the fleet layer: scatter them
+                # directly (dropping dead verbs' words when any exist)
+                if len(sel) != len(words_list):
+                    vals = vals[np.repeat(live_pos, ns)]
+            else:
+                rows = words_list if len(sel) == len(words_list) \
+                    else map(words_list.__getitem__, sel.tolist())
+                try:
+                    # all-C flattening: chain + one fromiter pass
+                    vals = np.fromiter(chain.from_iterable(rows),
+                                       np.uint64, count=total)
+                except (OverflowError, TypeError, ValueError):
+                    vals = np.fromiter(
+                        (int(x) & 0xFFFF_FFFF_FFFF_FFFF
+                         for i in sel.tolist() for x in words_list[i]),
+                        np.uint64, count=total)
+            self.slab.buf[addrs] = vals
+        self.mn_bytes += (np.bincount(
+            mids[live], weights=ns[live] * L.WORD,
+            minlength=self.mn_bytes.size)).astype(np.int64)
+        return live.tolist()
+
+    def _fused_cas_sweep(self, regions, replicas, offs, exps, news) -> list:
+        regions = np.asarray(regions, np.int64)
+        replicas = np.asarray(replicas, np.int64)
+        offs = np.asarray(offs, np.int64)
+        try:
+            exps = np.asarray(exps, np.uint64)
+            news = np.asarray(news, np.uint64)
+        except (OverflowError, TypeError, ValueError):
+            exps = np.array([int(e) & 0xFFFF_FFFF_FFFF_FFFF for e in exps],
+                            np.uint64)
+            news = np.array([int(v) & 0xFFFF_FFFF_FFFF_FFFF for v in news],
+                            np.uint64)
+        cells, mids = self._fused_cells(regions, replicas)
+        live = cells >= 0
+        out: list = [None] * len(regions)
+        if not live.any():
+            return out
+        flat = self.slab.buf
+        addr = cells * self.slab.region_words + offs
+        li = np.nonzero(live)[0]
+        sa = np.sort(addr[li])
+        if not (sa[1:] == sa[:-1]).any():        # common: no same-word race
+            vsel, dsel = li, li[:0]
+        else:
+            _u, inv, counts = np.unique(addr[li], return_inverse=True,
+                                        return_counts=True)
+            dup = counts[inv] > 1
+            vsel, dsel = li[~dup], li[dup]
+        av = addr[vsel]                          # each word touched once
+        old = flat[av]               # advanced indexing: already a copy
+        hit = old == exps[vsel]
+        flat[av[hit]] = news[vsel][hit]
+        for i, o in zip(vsel.tolist(), old):  # lint: allow-fused-loop (per-verb result unpack at the generator API boundary — same loop as the cas_batch oracle)
+            out[i] = o
+        for i in dsel:  # lint: allow-fused-loop (same-word CAS races are inherently sequential — input order, exactly like the cas_batch oracle)
+            a = int(addr[i])
+            o = np.uint64(flat[a])
+            if int(o) == int(exps[i]):
+                flat[a] = news[i]
+            out[int(i)] = o
+        self.mn_bytes += np.bincount(
+            mids[live], minlength=self.mn_bytes.size) * (2 * L.WORD)
+        return out
+
+    def _fused_faa_sweep(self, regions, replicas, offs, deltas) -> list:
+        regions = np.asarray(regions, np.int64)
+        replicas = np.asarray(replicas, np.int64)
+        offs = np.asarray(offs, np.int64)
+        try:
+            deltas = np.asarray(deltas, np.uint64)
+        except (OverflowError, TypeError, ValueError):
+            deltas = np.array([int(d) & 0xFFFF_FFFF_FFFF_FFFF for d in deltas],
+                              np.uint64)
+        cells, mids = self._fused_cells(regions, replicas)
+        live = cells >= 0
+        out: list = [None] * len(regions)
+        if not live.any():
+            return out
+        flat = self.slab.buf
+        addr = cells * self.slab.region_words + offs
+        li = np.nonzero(live)[0]
+        sa = np.sort(addr[li])
+        if not (sa[1:] == sa[:-1]).any():        # common: no same-word race
+            vsel, dsel = li, li[:0]
+        else:
+            _u, inv, counts = np.unique(addr[li], return_inverse=True,
+                                        return_counts=True)
+            dup = counts[inv] > 1
+            vsel, dsel = li[~dup], li[dup]
+        av = addr[vsel]
+        old = flat[av]               # advanced indexing: already a copy
+        flat[av] = old + deltas[vsel]            # uint64 wraparound
+        for i, o in zip(vsel.tolist(), old):  # lint: allow-fused-loop (per-verb result unpack at the generator API boundary — same loop as the faa_batch oracle)
+            out[i] = o
+        for i in dsel:  # lint: allow-fused-loop (same-word FAAs accumulate sequentially in input order, exactly like the faa_batch oracle)
+            a = int(addr[i])
+            o = np.uint64(flat[a])
+            flat[a] = o + deltas[i]
+            out[int(i)] = o
+        self.mn_bytes += np.bincount(
+            mids[live], minlength=self.mn_bytes.size) * (2 * L.WORD)
+        return out
+
     # ---------------- MN-side coarse allocation (ALLOC RPC, §4.4) ----------
     def alloc_block(self, mid: int, cid: int):
         """MN-side handler: grab a free block from one of this MN's primary
@@ -540,6 +864,7 @@ class DMPool:
     # ---------------- failure injection ------------------------------------
     def crash_mn(self, mid: int):
         self.mns[mid].alive = False
+        self._alive_gen += 1
 
     def recover_mn_placement(self, region: int, new_replicas: List[int]):
         """Master-side: re-home a region on a new replica set (copies bytes).
@@ -556,8 +881,12 @@ class DMPool:
             raise RegionLost(region,
                              f"old placement {self.placement[region]}, "
                              f"requested re-home to {new_replicas}")
+        # snapshot before carving: a slab growth re-binds views, so the
+        # source view must not be held across host_region
+        snap = src.copy()
         for mid in new_replicas:
             mn = self.mns[mid]
             if region not in mn.regions:
-                mn.regions[region] = src.copy()
+                mn.host_region(region)
+                mn.regions[region][:] = snap
         self.directory.rehome(region, list(new_replicas))

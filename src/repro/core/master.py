@@ -26,6 +26,18 @@ from .events import OK, OpResult
 from .heap import (BAT_ORPHAN, INDEX_REGION, META_REGION,
                    META_WORDS_PER_CLIENT, DMPool)
 
+# TEST-ONLY protocol hole: skip the §5.3 replica convergence of a crashed
+# client's log-entry object before its redo re-installs the index slot.
+# A client that dies mid-write-phase can leave the KV object on a subset
+# of its replicas (the crash drops the remaining QP lanes); without the
+# convergence the redo publishes a slot whose object exists only on the
+# replica the log was read from, and a later MN recovery that loses that
+# replica adopts an all-zero copy — the storm seeds-8/15 heap-audit
+# failure.  The `loser_reset` model-checker scope
+# (repro.analysis.explore) and regression tests re-enable the hole to
+# prove the minimized schedule still reproduces it.
+UNSAFE_REDO_NO_CONVERGE = False
+
 
 @dataclass
 class RecoveryStats:
@@ -139,7 +151,14 @@ class Master:
                     arr[:] = src
         old_reps = list(pool.placement[mig.region])
         for mid, arr in mig.targets.items():
-            pool.mns[mid].regions[mig.region] = arr
+            # install by copy into a slab-backed cell (heap.RegionSlab):
+            # the staged target is a detached staging buffer, but every
+            # *hosted* copy must live in the pool's flat slab so the fused
+            # tick can address it
+            mn = pool.mns[mid]
+            if mig.region not in mn.regions:
+                mn.host_region(mig.region)
+            mn.regions[mig.region][:] = arr
         pool.directory.rehome(mig.region, mig.new_reps)
         for mid in old_reps:
             if mid not in mig.new_reps:
@@ -175,13 +194,38 @@ class Master:
             self.migrator.on_membership_change()
         return True
 
+    def _slot_value_live(self, slot_val: int) -> bool:
+        """May ``slot_val`` be adopted during repair?  A nonzero slot value
+        whose object's used bit is already 0 is the *residue of a concluded
+        round*: its writer lost, reset its embedded log (Alg 1 loser path)
+        and may since have reclaimed and reused the object.  Adopting such
+        a value resurrects a dead round — the index slot ends up
+        referencing a reset object (heapcheck: "slot survived a loser
+        reset", the storm-seeds-8/15 corruption).  Empty (0) values adopt
+        freely (an in-flight DELETE broadcast)."""
+        if slot_val == 0:
+            return True
+        ptr = L.slot_ptr(slot_val)
+        region, off = L.ptr_region(ptr), L.ptr_offset(ptr)
+        n = L.size_class_words(L.slot_size_class(slot_val))
+        for rep_mid in self.pool.placement.get(region, []):
+            mn = self.pool.mns[rep_mid]
+            if mn.alive and region in mn.regions:
+                return bool(L.log_tail_used(
+                    int(mn.regions[region][off + n - 1])))
+        return False        # object unreadable: never adopt blind
+
     def _repair_index_region(self, g: int):
         """Alg 3, modification phase, for one index shard: for every slot
         where alive replicas disagree, adopt an alive *backup* value
         (backups are never older than the primary under SNAPSHOT) and
         commit that round's embedded log.  Shared by MN recovery and the
         migration cutover (which must converge straddling rounds before
-        replica roles change)."""
+        replica roles change).
+
+        Adoption skips backup values whose round already concluded LOSE
+        (``_slot_value_live``): only a value with a live embedded log may
+        be installed, otherwise the first alive replica's value stands."""
         pool = self.pool
         reps = pool.placement[g]
         alive = [(i, r) for i, r in enumerate(reps) if pool.mns[r].alive]
@@ -194,7 +238,8 @@ class Master:
             if all(v == vals[0] for v in vals):
                 continue
             backup_vals = [int(a[off]) for (i, _), a in zip(alive, arrays) if i > 0]
-            chosen = backup_vals[0] if backup_vals else vals[0]
+            chosen = next((v for v in backup_vals
+                           if self._slot_value_live(v)), vals[0])
             for a in arrays:
                 a[off] = np.uint64(chosen)
             self._commit_log_of(chosen)
@@ -287,9 +332,13 @@ class Master:
                              f"(slot_off={slot_off}, placement={reps}) even "
                              "after maybe_recover_mns")
         backups = [v for v in vals[1:] if v is not None]
-        if backups:
+        # only values whose round is still live may be installed — the
+        # residue of a concluded (reset) loser must never win arbitration
+        # (same guard as _repair_index_region; storm seeds 8/15)
+        live = [v for v in backups if self._slot_value_live(v)]
+        if live:
             counts: Dict[int, int] = {}
-            for v in backups:
+            for v in live:
                 counts[v] = counts.get(v, 0) + 1
             v_maj = max(counts, key=lambda k: (counts[k], -k))
             if (2 * counts[v_maj] >= len(backups)
@@ -431,6 +480,15 @@ class Master:
             # c0: crashed while writing the KV pair itself -> reclaim silently
             self._reclaim_obj(ptr, sc)
             return
+        # the client may have crashed mid-write-phase with the KV object
+        # landed on a subset of its replicas only (the crash drops the
+        # remaining QP lanes).  Every branch below keeps the object
+        # reachable, so converge the replicas from the copy the log was
+        # validated against first — otherwise a later MN recovery can adopt
+        # a torn (all-zero) copy and the index ends up referencing garbage
+        # (storm seeds 8/15).
+        if not UNSAFE_REDO_NO_CONVERGE:
+            self._converge_obj_replicas(ptr, sc)
         if not crc_ok:
             # c1 (or a non-returned loser): old value incomplete -> REDO the
             # request on the client's behalf, via the normal SNAPSHOT path.
@@ -517,6 +575,26 @@ class Master:
             self._reclaim_obj(ptr, sc)
         else:
             ordered.ensure_entry_direct(self.pool, key)
+
+    def _converge_obj_replicas(self, ptr: int, sc: int) -> None:
+        """§5.3: re-replicate a recovered log-entry object to all replicas.
+
+        The embedded log is traversed on the primary replica, so the copy
+        the repair decision was made from is authoritative; backup replicas
+        that missed the crashed client's write phase are brought up to date
+        before the entry is (re-)installed in the index.
+        """
+        pool = self.pool
+        region, off = L.ptr_region(ptr), L.ptr_offset(ptr)
+        n = L.size_class_words(sc)
+        src = pool.read(region, 0, off, n)
+        if src is None:
+            return
+        words = [int(w) for w in src]
+        for i in range(1, len(pool.placement.get(region, []))):
+            cur = pool.read(region, i, off, n)
+            if cur is not None and [int(w) for w in cur] != words:
+                pool.write(region, i, off, words)
 
     def _reclaim_obj(self, ptr: int, sc: int):
         region, off = L.ptr_region(ptr), L.ptr_offset(ptr)

@@ -236,16 +236,23 @@ class FuseeCluster:
         """Drive every in-flight op of every live client to completion."""
         self.scheduler.run_round_robin()
 
-    def fleet(self, *, use_kernel: bool = True):
+    def fleet(self, *, use_kernel: bool = True, fused: bool = True):
         """The (memoized) fleet engine over this cluster's scheduler: one
         tick advances every client's in-flight op-phases as batched array
         operations — the ≥1024-concurrent-client driving mode.  See
-        core/fleet.py."""
+        core/fleet.py.
+
+        ``fused=True`` (the default) executes each tick's array-verb
+        sweeps as a single fused dispatch over the flat region slab;
+        ``fused=False`` keeps the per-kind batch path — the differential
+        oracle both must match bit-for-bit."""
         from .fleet import FleetEngine            # local: avoid import cycle
         if self._fleet is None:
-            self._fleet = FleetEngine(self.scheduler, use_kernel=use_kernel)
+            self._fleet = FleetEngine(self.scheduler, use_kernel=use_kernel,
+                                      fused=fused)
         else:
-            self._fleet.use_kernel = use_kernel   # honor the latest setting
+            self._fleet.use_kernel = use_kernel   # honor the latest settings
+            self._fleet.fused = fused
         return self._fleet
 
     # ------------------------------------------------------- choice points

@@ -1,0 +1,2 @@
+from .ops import fleet_read, fleet_read_sweep  # noqa: F401
+from .ref import fleet_read_ref  # noqa: F401

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel for the fused fleet-tick READ sweep — the gather
+half of ``DMPool.exec_fused_tick`` as a device twin.
+
+The fused tick reads are a paged gather: every verb names a region
+*cell* in the flat slab plus a word offset, and pulls ``n`` contiguous
+words.  On TPU that is exactly the block-table pattern the paged
+attention kernel uses: the cell indices are **scalar-prefetched**
+(``pltpu.PrefetchScalarGridSpec``) so the DMA engine can route each grid
+step's HBM->VMEM copy to the right slab row before the kernel body runs,
+and the in-row slice is a cheap dynamic slice in VMEM.
+
+64-bit words on 32-bit lanes: the slab arrives pre-split into (hi, lo)
+uint32 planes of shape ``(n_cells, region_words)``; callers recombine
+after the gather.  Verb lengths are uniform per call — the host groups
+verbs by their (few, small) distinct lengths, mirroring how the numpy
+sweep's ragged addressing collapses for uniform rows.
+
+Grid: (N,) — one verb per step; the slab row stays in HBM and only the
+selected row streams in per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _read_sweep_kernel(cells_ref, offs_ref, hi_ref, lo_ref,
+                       ohi_ref, olo_ref, *, n):
+    off = offs_ref[pl.program_id(0)]
+    ohi_ref[0, :] = hi_ref[0, pl.ds(off, n)]
+    olo_ref[0, :] = lo_ref[0, pl.ds(off, n)]
+
+
+def fleet_read_fwd(slab_hi, slab_lo, cells, offs, *, n: int,
+                   interpret: bool = True):
+    """slab planes: (n_cells, region_words) uint32; cells/offs: (N,)
+    int32; -> ((N, n) hi, (N, n) lo) uint32 gathered rows."""
+    N = cells.shape[0]
+    _n_cells, region_words = slab_hi.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # cells, offs
+        grid=(N,),
+        in_specs=[
+            # DMA the verb's slab row, routed by the prefetched cell id
+            pl.BlockSpec((1, region_words), lambda i, cells, offs:
+                         (cells[i], 0)),
+            pl.BlockSpec((1, region_words), lambda i, cells, offs:
+                         (cells[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i, cells, offs: (i, 0)),
+            pl.BlockSpec((1, n), lambda i, cells, offs: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_read_sweep_kernel, n=n),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((N, n), jnp.uint32),
+                   jax.ShapeDtypeStruct((N, n), jnp.uint32)],
+        interpret=interpret,
+    )(cells.astype(jnp.int32), offs.astype(jnp.int32), slab_hi, slab_lo)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused fleet-tick READ sweep.
+
+Same contract as the Pallas kernel: gather ``n`` contiguous words per
+verb from the 2-D slab view ``(n_cells, region_words)``, operating on
+(hi, lo) uint32 planes (64-bit slab words on 32-bit lanes).  The fancy
+index below is the jnp transliteration of the numpy sweep's
+repeat/cumsum addressing collapsed for uniform row lengths.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fleet_read_ref(slab_hi, slab_lo, cells, offs, *, n: int):
+    """slab planes: (n_cells, region_words) uint32; cells/offs: (N,)
+    int -> ((N, n) hi, (N, n) lo) uint32."""
+    cols = offs[:, None].astype(jnp.int32) + jnp.arange(n, dtype=jnp.int32)
+    rows = cells[:, None].astype(jnp.int32)
+    return slab_hi[rows, cols], slab_lo[rows, cols]

@@ -489,6 +489,26 @@ def test_lint_L004_scalar_loop_in_batch_path():
                        rules={"L004"}) == []
 
 
+def test_lint_L007_loop_in_fused_path():
+    src = ("def _fused_read_sweep(self, regions):\n"
+           "    for r in regions:\n"
+           "        pass\n")
+    got = lint_source(src, "heap.py", rel="core/heap.py", rules={"L007"})
+    assert [f.rule for f in got] == ["L007"]
+    # same loop outside a *fused* function, or outside fleet/heap: clean
+    assert lint_source(src.replace("_fused_read_sweep", "read_batch"),
+                       "heap.py", rel="core/heap.py", rules={"L007"}) == []
+    assert lint_source(src, "client.py", rel="core/client.py",
+                       rules={"L007"}) == []
+    # a justified pragma on the loop line suppresses it
+    ok = ("def _fused_read_sweep(self, regions):\n"
+          "    for r in regions:  # lint: allow-fused-loop (unpack at the"
+          " API boundary)\n"
+          "        pass\n")
+    assert lint_source(ok, "heap.py", rel="core/heap.py",
+                       rules={"L006", "L007"}) == []
+
+
 def test_lint_L005_bare_assert():
     src = "def f(x):\n    assert x > 0\n"
     got = lint_source(src, "client.py", rel="core/client.py")

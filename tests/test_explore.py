@@ -17,6 +17,7 @@ count, execution count and visit digest on every run.
 import pytest
 
 import repro.core.client as client_mod
+import repro.core.master as master_mod
 from repro.analysis.explore import (SCOPES, Explorer, check_invariants,
                                     explore, load_counterexample, main,
                                     replay, save_counterexample)
@@ -156,6 +157,55 @@ def test_seed7_cutover_cold_start_find_and_minimize():
     kinds = {v.kind for v in res.violations}
     assert "acked_write_lost" in kinds, res.summary()
     v = next(x for x in res.violations if x.kind == "acked_write_lost")
+    ex.minimize(v)
+    assert len(v.minimized) <= 25
+
+
+# -------------------------------------------------- seeds-8/15 torn redo
+# The ddmin'd storm seeds-8/15 counterexample: client 1 dies mid-insert
+# with its KV object written to the primary replica only (the crash drops
+# the backup-write lane), §5.3 recovery redoes the logged op — installing
+# the index slot off the one good copy — and the leftmost continuation
+# then crashes the MN holding that copy; Alg-3 re-homes onto the all-zero
+# surviving replica and the slot references garbage.  6 choice points,
+# found and minimized by the explorer.
+LOSER_RESET_MIN_SCHEDULE = [
+    Choice("lane", cid=1, mn=1),
+    Choice("lane", cid=1, mn=1),
+    Choice("lane", cid=1, mn=0),
+    Choice("lane", cid=1, mn=1),
+    Choice("event", name="crash_client:1"),
+    Choice("event", name="recover_client:1"),
+]
+
+
+def test_loser_reset_schedule_is_clean_with_fix():
+    setup = _fire_schedule("loser_reset", LOSER_RESET_MIN_SCHEDULE)
+    assert check_invariants(setup) == []
+
+
+def test_loser_reset_schedule_violates_with_fix_reverted(monkeypatch):
+    monkeypatch.setattr(master_mod, "UNSAFE_REDO_NO_CONVERGE", True)
+    setup = _fire_schedule("loser_reset", LOSER_RESET_MIN_SCHEDULE)
+    kinds = {v.kind for v in check_invariants(setup)}
+    assert "heap_audit" in kinds, kinds
+
+
+def test_loser_reset_clean_bounded_prefix():
+    res = explore("loser_reset", minimize=False, max_states=300)
+    assert not res.violations, res.summary()
+
+
+@pytest.mark.slow
+def test_loser_reset_cold_start_find_and_minimize():
+    # with the fix reverted the explorer rediscovers the heap corruption
+    # from nothing but the scope definition and ddmins it small
+    ex = Explorer("loser_reset",
+                  flags={"master.UNSAFE_REDO_NO_CONVERGE": True})
+    res = ex.run()
+    kinds = {v.kind for v in res.violations}
+    assert "heap_audit" in kinds, res.summary()
+    v = next(x for x in res.violations if x.kind == "heap_audit")
     ex.minimize(v)
     assert len(v.minimized) <= 25
 

@@ -174,6 +174,70 @@ def test_leaf_probe_batch_entry_point():
     assert got.tolist() == [0, 0, 1, 2, 3, 3, 3]
 
 
+# ------------------------------------------------------- fleet-tick read --
+@pytest.mark.parametrize("n_verbs,n", [(16, 1), (48, 7), (32, 16)])
+def test_fleet_read_sweep_kernel_matches_numpy(n_verbs, n):
+    """The fused-tick READ sweep device twin: Pallas kernel (interpret
+    mode, scalar-prefetched cell routing), jnp oracle, and the numpy
+    entry point must be bit-exact on uint64 slab words — including words
+    straddling the 32-bit boundary (the hi/lo split)."""
+    from repro.kernels.fleet_tick.kernel import fleet_read_fwd
+    from repro.kernels.fleet_tick.ref import fleet_read_ref
+    from repro.kernels.fleet_tick import fleet_read_sweep
+
+    rng = np.random.default_rng(n_verbs * 31 + n)
+    n_cells, region_words = 6, 64
+    slab = rng.integers(0, 1 << 64, size=n_cells * region_words,
+                        dtype=np.uint64)
+    slab[::7] = (1 << 32) - 1                        # hi/lo boundary words
+    slab[::11] = 1 << 32
+    cells = rng.integers(0, n_cells, size=n_verbs).astype(np.int64)
+    offs = rng.integers(0, region_words - n + 1,
+                        size=n_verbs).astype(np.int64)
+    slab2d = slab.reshape(n_cells, region_words)
+    want = slab2d[cells[:, None], offs[:, None] + np.arange(n)]
+
+    got_np = fleet_read_sweep(slab, region_words, cells, offs, n,
+                              prefer_kernel=False)
+    assert (got_np == want).all()
+    hi = jnp.asarray((slab2d >> np.uint64(32)).astype(np.uint32))
+    lo = jnp.asarray((slab2d & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    ci = jnp.asarray(cells, jnp.int32)
+    oi = jnp.asarray(offs, jnp.int32)
+    for rhi, rlo in (fleet_read_ref(hi, lo, ci, oi, n=n),
+                     fleet_read_fwd(hi, lo, ci, oi, n=n, interpret=True)):
+        got = (np.asarray(rhi, np.uint64) << np.uint64(32)) \
+            | np.asarray(rlo, np.uint64)
+        assert (got == want).all()
+
+
+def test_fleet_read_sweep_matches_pool_sweep():
+    """The device twin gathers the same rows the pool's fused read sweep
+    returns for uniform-length verbs on a live cluster slab."""
+    from repro.core import FuseeCluster, DMConfig
+    from repro.kernels.fleet_tick import fleet_read_sweep
+
+    cl = FuseeCluster(DMConfig(), num_clients=4, seed=3)
+    for c in range(4):
+        for k in range(6):
+            cl.scheduler.submit(c, "insert", 10 * c + k, [c, k, 7])
+    cl.fleet().run()
+    pool = cl.pool
+    table = pool.placement
+    regions = np.array([g for g in sorted(table) for _ in (0, 1)][:8],
+                       np.int64)
+    replicas = np.zeros(len(regions), np.int64)
+    offs = np.arange(len(regions), dtype=np.int64)
+    n = 3
+    want = pool._fused_read_sweep(regions, replicas, offs,
+                                  np.full(len(regions), n, np.int64))
+    cells, _mids = pool._fused_cells(regions, replicas)
+    got = fleet_read_sweep(pool.slab.buf, pool.slab.region_words,
+                           cells, offs, n, prefer_kernel=False)
+    for w, g in zip(want, got):
+        assert (np.asarray(w) == g).all()
+
+
 # ------------------------------------------------------ slot packing twin --
 @settings(max_examples=50, deadline=None)
 @given(fp=st.integers(1, 255), ptr=st.integers(0, (1 << 24) - 1))
