@@ -17,11 +17,18 @@ def main(argv=None):
     ap.add_argument("--only", default=None)
     ap.add_argument("--skip-serving", action="store_true")
     ap.add_argument("--out", default="bench_results.json")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a registry metrics snapshot (JSON) of a "
+                         "seeded churn-storm telemetry run")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Perfetto/Chrome-trace JSON of the same "
+                         "telemetry run (load at ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     from . import figures, roofline
     benches = [(f.__name__, f) for f in figures.ALL_FIGURES]
     benches.append(("trace_overhead", trace_overhead))
+    benches.append(("obs_overhead", obs_overhead))
     benches.append(("explore_dpor", explore_dpor))
     benches.append(("roofline", roofline.run))
     if not args.skip_serving:
@@ -52,6 +59,8 @@ def main(argv=None):
             raise
     with open(args.out, "w") as f:
         json.dump(all_rows, f, indent=1, default=float)
+    if args.metrics_out or args.trace_out:
+        export_telemetry(args.metrics_out, args.trace_out)
     validate_claims(all_rows)
 
 
@@ -126,6 +135,133 @@ def trace_overhead():
              "us_per_tick_median": statistics.median(times[m]),
              "overhead_pct": 100.0 * (best[m] / best["off"] - 1.0)}
             for m in modes]
+
+
+def obs_overhead():
+    """Observability-hub overhead on the fused fleet tick path.
+
+    Two modes over the identical seeded YCSB-A fleet workload:
+    ``detached`` (``cluster.detach_obs()`` — every hook site collapses to
+    one attribute load + ``is None`` test) and ``attached`` (the default
+    always-on hub: flight recorder, latency histograms, heat sketch, and
+    the per-MN load series all recording).  Each mode reports us/tick;
+    the claims check asserts attached recording costs < 5% over the
+    detached baseline, which is what justifies leaving the hub on for
+    the life of every cluster.
+    """
+    import gc
+    import statistics
+
+    from repro.core import FuseeCluster
+    from .common import YCSB, fleet_dmconfig
+
+    n_clients, n_keys, repeats, batches = 64, 256, 5, 3
+    mix, value_words = YCSB["A"], 8
+
+    def one_run(mode):
+        cfg = fleet_dmconfig(n_clients, n_keys)
+        cl = FuseeCluster(cfg, num_clients=n_clients, seed=23)
+        if mode == "detached":
+            cl.detach_obs()
+        sched, fleet = cl.scheduler, cl.fleet()
+        for k in range(n_keys):
+            sched.submit(k % n_clients, "insert", k, [k] * value_words)
+        fleet.run()
+        wl = cl.rng.stream("workload")
+        kinds = list(mix)
+        weights = [mix[k] for k in kinds]
+        samples = []
+        for _ in range(batches):
+            for i in range(n_clients * 8):
+                kind = kinds[int(wl.choice(len(kinds), p=weights))]
+                key = int(wl.integers(n_keys))
+                v = [i] * value_words if kind in ("insert", "update") \
+                    else None
+                sched.submit(i % n_clients, kind, key, v)
+            gc.collect()
+            gc.disable()
+            try:
+                t0 = time.perf_counter()
+                ticks0 = sched.tick
+                fleet.run()
+                dt = time.perf_counter() - t0
+            finally:
+                gc.enable()
+            samples.append(dt * 1e6 / max(1, sched.tick - ticks0))
+        return samples
+
+    modes = ("detached", "attached")
+    one_run("detached")                  # warmup: JIT / allocator caches
+    times = {m: [] for m in modes}
+    for _ in range(repeats):             # interleaved: drift hits all modes
+        for m in modes:
+            times[m].extend(one_run(m))
+    best = {m: min(times[m]) for m in modes}
+    return [{"bench": "obs_overhead", "mode": m,
+             "us_per_tick": best[m],
+             "us_per_tick_median": statistics.median(times[m]),
+             "overhead_pct": 100.0 * (best[m] / best["detached"] - 1.0)}
+            for m in modes]
+
+
+def export_telemetry(metrics_path=None, trace_path=None, *, seed=33):
+    """Seeded churn-storm telemetry run for the CI artifacts: drives a
+    crash/recover/add-MN storm on the fleet engine, then writes the
+    registry snapshot (``--metrics-out``) and a Perfetto trace of the
+    fault-triggered flight dump (``--trace-out``).  Deterministic: the
+    metrics JSON is byte-identical for a given seed."""
+    import os
+    import tempfile
+
+    from repro.core import (ClientCrashed, DMConfig, FaultPlan,
+                            FuseeCluster, Op)
+    from repro.obs import flight_to_perfetto, load_flight, metrics_to_json
+
+    n_clients, n_mns, repl, total_ops = 6, 5, 3, 160
+    with tempfile.TemporaryDirectory() as td:
+        cl = FuseeCluster(DMConfig(num_mns=n_mns, replication=repl,
+                                   region_words=1 << 15, regions_per_mn=16,
+                                   index_shards=4),
+                          num_clients=n_clients, seed=seed,
+                          obs_dump_dir=td)
+        plan = FaultPlan.storm(cl.rng.stream("faults"),
+                               clients=range(n_clients), mns=n_mns,
+                               replication=repl, n_client_crashes=2,
+                               n_mn_crashes=1, n_add_mns=1,
+                               remove_added=True, first_op=10, spacing=14,
+                               recover_delay=8)
+        cl.inject(plan)
+        fleet = cl.fleet()
+        stores = {c: cl.store(c, max_inflight=0) for c in range(n_clients)}
+        submitted = 0
+        while submitted < total_ops:
+            for c in range(n_clients):
+                if submitted >= total_ops:
+                    break
+                k = submitted
+                submitted += 1
+                try:
+                    stores[c].submit(Op.put(k, [k, c]))
+                except ClientCrashed:
+                    pass
+            for _ in range(4):
+                if cl.scheduler.has_work():
+                    fleet.tick()
+        fleet.run()
+        if cl.migrator.busy:
+            cl.migrator.drive()
+            fleet.run()
+        if metrics_path:
+            metrics_to_json(cl.metrics(), metrics_path)
+            print(f"telemetry: metrics snapshot -> {metrics_path}")
+        if trace_path:
+            # prefer the first fault-triggered dump; fall back to a
+            # manual end-of-run dump if the storm somehow never fired
+            dumps = sorted(cl.obs.dumped.values())
+            path = dumps[0] if dumps else cl.obs.dump("manual", force=True)
+            flight_to_perfetto(load_flight(path), trace_path)
+            print(f"telemetry: perfetto trace ({os.path.basename(path)}) "
+                  f"-> {trace_path}")
 
 
 def explore_dpor():
@@ -240,6 +376,11 @@ def summarize(name: str, rows) -> str:
         return (f"fleet tick {by['off']['us_per_tick']:.0f}us/tick; "
                 f"paused {by['paused']['overhead_pct']:+.1f}% "
                 f"recording {by['recording']['overhead_pct']:+.1f}%")
+    if name == "obs_overhead":
+        by = {r["mode"]: r for r in rows}
+        return (f"fleet tick {by['detached']['us_per_tick']:.0f}us/tick "
+                f"detached; attached "
+                f"{by['attached']['overhead_pct']:+.1f}%")
     if name == "explore_dpor":
         r = rows[0]
         return (f"{r['scope']}: dpor {r['dpor_states']} states/"
@@ -380,6 +521,11 @@ def validate_claims(rows):
                        ov < 3.0,
                        f"paused {ov:+.1f}%, recording "
                        f"{to['recording']['overhead_pct']:+.1f}%"))
+    oo = {r["mode"]: r for r in rows if r.get("bench") == "obs_overhead"}
+    if oo:
+        ov = oo["attached"]["overhead_pct"]
+        checks.append(("attached obs hub overhead on fleet ticks < 5%",
+                       ov < 5.0, f"attached {ov:+.1f}%"))
     rl = [r for r in rows if r.get("bench") == "roofline"
           and r.get("mode") == "fleet-tick"]
     if rl:

@@ -199,6 +199,76 @@ def scan_drill():
     print(f" health: {cluster.health().summary()}")
 
 
+def metrics_drill():
+    """Telemetry drill: run a fleet workload through an MN crash with the
+    observability hub armed, then read the story back three ways — op
+    latency percentiles from the registry histograms, the per-MN load
+    table from the ``mn.load`` time-series, and the fault-triggered
+    flight-recorder dump exported to a Perfetto trace."""
+    import tempfile
+
+    from repro.obs import flight_to_perfetto, load_flight
+
+    print("\n== telemetry drill (histograms / per-MN load / flight dump) ==")
+    dump_dir = tempfile.mkdtemp(prefix="fusee_flight_")
+    n_clients = 8
+    cluster = FuseeCluster(DMConfig(num_mns=4, replication=3,
+                                    region_words=1 << 15, regions_per_mn=16,
+                                    index_shards=4),
+                           num_clients=n_clients, seed=7,
+                           obs_dump_dir=dump_dir)
+    cluster.inject(FaultPlan().crash_mn(3, after_ops=120))
+    fleet = cluster.fleet()
+    stores = {c: cluster.store(c, max_inflight=0) for c in range(n_clients)}
+    for k in range(256):
+        stores[k % n_clients].submit(Op.put(k, [k]))
+        if k % 32 == 31:
+            fleet.run()
+    for k in range(256):
+        stores[k % n_clients].submit(Op.get(k))
+        if k % 32 == 31:
+            fleet.run()
+    fleet.run()
+
+    m = cluster.metrics()
+    print(f" ops: {m['counters']['op.begun']} begun, "
+          f"{m['counters']['op.settled']} settled, "
+          f"{m['counters']['op.crashed']} crashed")
+    print(" op latency percentiles (conservative bucket upper edges):")
+    print(f"  {'metric':<34}{'count':>7}{'p50':>6}{'p99':>6}{'p999':>7}")
+    for name, p in sorted(m["percentiles"].items()):
+        if ".kind." in name:
+            print(f"  {name:<34}{p['count']:>7}{p['p50']:>6}"
+                  f"{p['p99']:>6}{p['p999']:>7}")
+
+    series = m["series"]["mn.load"]
+    by = {f: i for i, f in enumerate(series["fields"])}
+    per_mn = {}
+    for row in series["rows"]:
+        agg = per_mn.setdefault(int(row[by["mid"]]),
+                                {"bytes": 0.0, "verbs": 0.0,
+                                 "cpu_ops": 0.0, "util": []})
+        agg["bytes"] += row[by["bytes"]]
+        agg["verbs"] += row[by["verbs"]]
+        agg["cpu_ops"] += row[by["cpu_ops"]]
+        agg["util"].append(row[by["util"]])
+    print(f" per-MN load ({len(series['rows'])} window samples):")
+    print(f"  {'mn':>4}{'bytes':>10}{'verbs':>8}{'cpu_ops':>9}"
+          f"{'peak util':>11}")
+    for mid, agg in sorted(per_mn.items()):
+        print(f"  {mid:>4}{agg['bytes']:>10.0f}{agg['verbs']:>8.0f}"
+              f"{agg['cpu_ops']:>9.0f}{max(agg['util']):>10.4f}")
+
+    print(" dump-on-fault:")
+    for reason, path in sorted(cluster.obs.dumped.items()):
+        dump = load_flight(path)
+        trace_path = path.replace(".npz", ".perfetto.json")
+        flight_to_perfetto(dump, trace_path)
+        print(f"  {reason}: {len(dump['tick'])} events -> {path}")
+        print(f"   perfetto trace (ui.perfetto.dev) -> {trace_path}")
+    assert cluster.obs.dumped, "MN crash must trigger a flight dump"
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-train", action="store_true",
@@ -207,6 +277,9 @@ if __name__ == "__main__":
                     help="also run the online MN scale-out drill")
     ap.add_argument("--scan", action="store_true",
                     help="also run the ordered-index crash-mid-split drill")
+    ap.add_argument("--metrics", action="store_true",
+                    help="also run the telemetry drill (latency percentiles, "
+                         "per-MN load table, dump-on-fault + Perfetto export)")
     args = ap.parse_args()
     if not args.skip_train:
         train_drill()
@@ -215,3 +288,5 @@ if __name__ == "__main__":
         elastic_drill()
     if args.scan:
         scan_drill()
+    if args.metrics:
+        metrics_drill()

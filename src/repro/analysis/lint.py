@@ -1,4 +1,4 @@
-"""AST protocol lints for the FUSEE reproduction (L001-L007).
+"""AST protocol lints for the FUSEE reproduction (L001-L008).
 
 Run as ``python -m repro.analysis.lint [paths...]`` (defaults to the
 ``repro`` package plus the repo's ``tests/`` and ``benchmarks/`` trees);
@@ -47,13 +47,20 @@ L007  **Python loops in the fused tick path** — ``*fused*`` functions in
       ``allow-fused-loop`` pragma arguing why it is not per-lane work
       (LUT rebuilds on topology changes, per-verb result unpack at the
       generator API boundary, inherently sequential same-word races).
+L008  **bare counters-dict mutation** — protocol/fleet code must not
+      write through ad-hoc ``counters`` dicts (``self.counters[k] += 1``
+      or rebinding ``.counters`` to a dict literal): metrics live in the
+      typed registry (``repro.obs.registry``) under stable dotted names,
+      where snapshots are deterministic, mergeable, and covered by the
+      fused-vs-oracle differential gate.  The surviving ``counters``
+      attributes are read-only deprecation views.
 
 Suppression: a trailing ``# lint: allow-<name> (<why>)`` pragma on the
 offending line, or on the enclosing ``def``/``class`` line to cover the
 whole body.  ``<name>`` is the rule id (``L003``) or its alias:
 ``assert`` (L005), ``epoch`` (L001), ``nondet`` (L002), ``pool-mutation``
-(L003), ``scalar-loop`` (L004), ``fused-loop`` (L007).  Pragmas are
-deliberate, documented
+(L003), ``scalar-loop`` (L004), ``fused-loop`` (L007), ``counters``
+(L008).  Pragmas are deliberate, documented
 exemptions — the lint keeps them honest by flagging unknown names,
 missing justifications, and stale sites (L006 itself is exempt from
 suppression: delete the pragma instead).
@@ -81,11 +88,13 @@ RULES = {
     "L006": "lint pragma without justification, or stale (suppresses "
             "nothing)",
     "L007": "Python loop inside a fused tick path",
+    "L008": "write through a bare counters dict in protocol code",
 }
 
 _ALIASES = {
     "epoch": "L001", "nondet": "L002", "pool-mutation": "L003",
     "scalar-loop": "L004", "assert": "L005", "fused-loop": "L007",
+    "counters": "L008",
 }
 
 VERBS = ("read", "write", "cas", "faa")
@@ -307,6 +316,7 @@ class _Linter(ast.NodeVisitor):
     # --------------------------------------------------------------- L003
     def visit_Assign(self, node):
         self._check_store_targets(node.targets, node)
+        self._check_L008(node.targets, node, rebind=True)
         if self._tainted and _mentions_regions(node.value):
             for t in node.targets:
                 self._tainted[-1].update(_names_in_target(t))
@@ -314,6 +324,7 @@ class _Linter(ast.NodeVisitor):
 
     def visit_AugAssign(self, node):
         self._check_store_targets([node.target], node)
+        self._check_L008([node.target], node, rebind=False)
         self.generic_visit(node)
 
     def visit_For(self, node):
@@ -349,6 +360,35 @@ class _Linter(ast.NodeVisitor):
                     "region array — only DMPool (and master-authority "
                     "modules) may bypass the verb layer; issue verbs, or "
                     "add `# lint: allow-pool-mutation (<why>)`")
+
+    # --------------------------------------------------------------- L008
+    def _check_L008(self, targets, node, *, rebind: bool):
+        """Writes through bare ``counters`` dicts in protocol code: the
+        typed registry (repro.obs.registry) is the sanctioned metric
+        store; the surviving ``counters`` attributes are read-only
+        deprecation views."""
+        if not self.in_core:
+            return
+        for t in targets:
+            if isinstance(t, ast.Subscript):
+                base = _dotted(t.value)
+                if base == "counters" or base.endswith(".counters"):
+                    self._flag(
+                        "L008", node,
+                        f"write through `{base}[...]` — metrics belong in "
+                        "the typed registry (repro.obs.registry) under "
+                        "dotted names, not ad-hoc counters dicts; bump a "
+                        "registry handle, or add "
+                        "`# lint: allow-counters (<why>)`")
+            elif rebind and isinstance(t, ast.Attribute) \
+                    and t.attr == "counters" \
+                    and isinstance(node.value, (ast.Dict, ast.DictComp)):
+                self._flag(
+                    "L008", node,
+                    "rebinding `.counters` to a dict literal — register "
+                    "Counter/Gauge handles on the metrics registry "
+                    "(repro.obs.registry) instead, or add "
+                    "`# lint: allow-counters (<why>)`")
 
     # --------------------------------------------------------------- L004
     def _in_batch_scope(self) -> bool:

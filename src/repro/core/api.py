@@ -40,6 +40,7 @@ from . import codec
 from . import ordered
 from .events import CRASHED, NOT_FOUND, OK, OpResult
 from .faults import ClientCrashed, OrderedIndexDisabled, SchedulerStalled
+from ..obs.registry import LegacyCounters, Registry, legacy_counters_view
 
 __all__ = ["Op", "KVFuture", "KVStore", "SimBackend"]
 
@@ -179,12 +180,27 @@ class SimBackend:
         self.max_inflight = max_inflight
         self.batch_search_min = batch_search_min
         self.use_kernel = use_kernel
-        self.counters = {"ops": 0, "batch_lookups": 0, "batch_fast_hits": 0,
-                         "batch_fallbacks": 0, "shadow_rebuilds": 0,
-                         "scans": 0, "scan_locate_batches": 0}
+        # per-backend metrics registry ("api.*" names): backends are
+        # transient (one per ``cluster.store()`` call), so each carries
+        # its own small registry rather than sharing the scheduler's —
+        # aggregate across backends with obs.registry.snapshot_merge.
+        # The old ``counters`` dict survives one release as a read-only
+        # deprecation alias (see obs/registry.py).
+        self.metrics = Registry()
+        self._handles = {
+            k: self.metrics.counter("api." + k)
+            for k in ("ops", "batch_lookups", "batch_fast_hits",
+                      "batch_fallbacks", "shadow_rebuilds", "scans",
+                      "scan_locate_batches")}
         # memoized shadow index: (cache fingerprint, entries, shadow table)
         self._shadow = (None, None, None)
         self._pump_rr = 0     # rotating QP-lane pick (starvation freedom)
+
+    @property
+    def counters(self) -> LegacyCounters:
+        """Deprecated read-only view of the backend metrics under their
+        historical key names; read ``stats()`` or ``self.metrics``."""
+        return legacy_counters_view("SimBackend", self._handles)
 
     # ------------------------------------------------------------- submit
     def submit_many(self, ops: Sequence[Op], *,
@@ -207,7 +223,7 @@ class SimBackend:
                                 "removed" if self.cid in self.sched.removed
                                 else "replaced")
         futs = [KVFuture(self) for _ in ops]
-        self.counters["ops"] += len(ops)
+        self._handles["ops"].value += len(ops)
         scans = [i for i, op in enumerate(ops)
                  if op.kind in ("scan", "range")]
         if scans and not self.client.pool.ordered_regions:
@@ -224,7 +240,7 @@ class SimBackend:
                 starts = [codec.encode_key(ops[i].key) for i in scans]
                 hints = dict(zip(scans,
                                  ordered.locate_leaves(self.client, starts)))
-                self.counters["scan_locate_batches"] += 1
+                self._handles["scan_locate_batches"].value += 1
         batched: Dict[int, Any] = {}
         gets = [i for i, op in enumerate(ops) if op.kind == "search"]
         if (len(gets) >= self.batch_search_min and self.client.enable_cache
@@ -254,7 +270,7 @@ class SimBackend:
         if op.kind in ("scan", "range"):
             if not self.client.pool.ordered_regions:
                 raise OrderedIndexDisabled()
-            self.counters["scans"] += 1
+            self._handles["scans"].value += 1
             if op.kind == "scan":
                 value = int(op.value)
                 gen = self.client.op_scan(key, value, hint=hint)
@@ -282,7 +298,7 @@ class SimBackend:
                  zip(gets, keys64, hit_entries) if ce is not None]
         if len(batch) < self.batch_search_min:
             return {}
-        self.counters["batch_lookups"] += 1
+        self._handles["batch_lookups"].value += 1
         items = [(k, ce.slot_off, ce.slot_val) for (_, k, ce) in batch]
         rec = self.sched.submit(
             self.cid, "search_batch", None, None,
@@ -311,13 +327,13 @@ class SimBackend:
                         result=res, rtts=0)
                     self.sched.history.append(sub)
                     futs[i]._resolve(res, record=sub)
-                    self.counters["batch_fast_hits"] += 1
+                    self._handles["batch_fast_hits"].value += 1
                 else:
                     # cache entry went stale mid-flight: full SEARCH,
                     # invoked at the batch's response tick
                     futs[i].record = self.sched.submit(self.cid, "search",
                                                        key64)
-                    self.counters["batch_fallbacks"] += 1
+                    self._handles["batch_fallbacks"].value += 1
 
         rec.on_done = finish
         return {i: k for (i, k, _ce) in batch}
@@ -367,10 +383,16 @@ class SimBackend:
             entries = self._cache_entries()
             shadow = self._shadow_index(entries)
             self._shadow = (fpr, entries, shadow)
-            self.counters["shadow_rebuilds"] += 1
+            self._handles["shadow_rebuilds"].value += 1
+        q = np.array([_fold32(k) for k in keys64], np.uint32)
+        obs = self.sched.obs
+        if obs is not None and len(q):
+            # heat sketch over the RACE first-choice bucket family (the
+            # fleet probe_wave records its own wave; the two paths are
+            # mutually exclusive per batch, so no double-count)
+            obs.heat_keys(_hash32_np(q, 1))
         if not entries:
             return [None] * len(keys64)
-        q = np.array([_fold32(k) for k in keys64], np.uint32)
         ptr, found = self._race_lookup(q, shadow)
         out = []
         for j, k in enumerate(keys64):
@@ -439,7 +461,7 @@ class SimBackend:
             # until the region is resized; size it for the keyspace —
             # benchmarks.common.fleet_dmconfig(ordered=True) does)
             "ord_full_drops": self.client.ord_full_drops,
-            **self.counters,
+            **{k: h.value for k, h in self._handles.items()},
         }
 
 

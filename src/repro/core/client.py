@@ -638,6 +638,9 @@ class FuseeClient:
                      and self._cache_fresh(ce, region))
         if ce is not None:
             ce.access += 1
+        obs = self.pool._obs
+        if obs is not None:
+            obs.heat_key64(key)      # buffered; hashed vectorized at flush
         if use_cache:
             # 1 RTT fast path: read the cached slot + the cached KV in parallel
             sv = ce.slot_val
@@ -895,6 +898,9 @@ class FuseeClient:
                      and self._cache_fresh(ce, region))
         if ce is not None:
             ce.access += 1
+        obs = self.pool._obs
+        if obs is not None:
+            obs.heat_key64(key)      # buffered; hashed vectorized at flush
         while True:
             target = v_old = None
             if use_cache and retries == 0:

@@ -286,6 +286,11 @@ class FaultInjector:
             self.cluster.recover_client(ev.target,
                                         reassign_to_cid=ev.reassign_to)
         self.fired.append((sched.tick, ev))
+        obs = sched.obs
+        if obs is not None:
+            # auto-dump the flight ring once per injected fault class
+            # (no-op unless the hub was armed with a dump_dir)
+            obs.dump("fault_" + ev.action)
 
 
 # ------------------------------------------------------------ health views

@@ -43,6 +43,7 @@ from .faults import SchedulerStalled
 from .shadow import build_shadow, hash32_np, race_lookup_np
 from . import sim as sim_module
 from .sim import Scheduler
+from ..obs.registry import LegacyCounters, legacy_counters_view
 
 __all__ = ["FleetEngine"]
 
@@ -77,17 +78,40 @@ class FleetEngine:
         # paths are bit-identical — tests/test_fleet_fused.py is the
         # differential replay oracle.
         self.fused = fused
-        self.counters: Dict[str, int] = {
-            "ticks": 0, "verbs": 0, "array_calls": 0, "master_calls": 0,
-            "index_probe_verbs": 0, "probe_invocations": 0, "probe_keys": 0,
-            "probe_hits": 0, "shadow_rebuilds": 0, "max_lanes": 0,
-            "ord_leaf_verbs": 0, "scan_locate_invocations": 0,
-            "scan_locate_keys": 0, "fused_ticks": 0, "fallback_ticks": 0,
-        }
+        # fleet counters live in the scheduler's metrics registry under
+        # "fleet.<name>" dotted names; the old ``counters`` dict survives
+        # one release as a read-only deprecation alias (see obs/registry).
+        reg = scheduler.metrics
+        names = ("ticks", "verbs", "array_calls", "master_calls",
+                 "index_probe_verbs", "probe_invocations", "probe_keys",
+                 "probe_hits", "shadow_rebuilds", "ord_leaf_verbs",
+                 "scan_locate_invocations", "scan_locate_keys",
+                 "fused_ticks", "fallback_ticks")
+        self._handles: Dict[str, Any] = {
+            k: reg.counter("fleet." + k) for k in names}
+        self._handles["max_lanes"] = reg.gauge("fleet.max_lanes")
         for _k in _VERB_ORDER:
-            self.counters["verbs_" + _k] = 0
+            self._handles["verbs_" + _k] = reg.counter("fleet.verbs_" + _k)
+        # hot-loop handle caches: bump .value directly, no dict lookups
+        self._c_ticks = self._handles["ticks"]
+        self._c_verbs = self._handles["verbs"]
+        self._c_master = self._handles["master_calls"]
+        self._g_max_lanes = self._handles["max_lanes"]
+        self._c_array = self._handles["array_calls"]
+        self._c_idx_probe = self._handles["index_probe_verbs"]
+        self._c_ord_leaf = self._handles["ord_leaf_verbs"]
+        self._c_fused = self._handles["fused_ticks"]
+        self._c_fallback = self._handles["fallback_ticks"]
+        self._c_verbs_kind = {k: self._handles["verbs_" + k]
+                              for k in _VERB_ORDER}
         # memoized combined shadow: (per-backend fingerprints, entries, table)
         self._probe_memo = (None, None, None)
+
+    @property
+    def counters(self) -> LegacyCounters:
+        """Deprecated read-only view of the fleet metrics under their
+        historical key names; read ``stats()`` or the registry instead."""
+        return legacy_counters_view("FleetEngine", self._handles)
 
     # ------------------------------------------------------------- ticking
     def tick(self) -> int:
@@ -112,10 +136,10 @@ class FleetEngine:
                 by_kind.setdefault(verb.kind, []).append((cid, run, idx, verb))
                 lanes += 1
         executed = lanes + len(master_runs)
-        self.counters["ticks"] += 1
-        self.counters["verbs"] += lanes
-        self.counters["master_calls"] += len(master_runs)
-        self.counters["max_lanes"] = max(self.counters["max_lanes"], lanes)
+        self._c_ticks.value += 1
+        self._c_verbs.value += lanes
+        self._c_master.value += len(master_runs)
+        self._g_max_lanes.set_max(lanes)
 
         finished: List[Tuple[int, Any]] = []
         epoch = sched.pool.epoch
@@ -129,7 +153,7 @@ class FleetEngine:
                      and (tr is None or tr.paused))
         live_by_kind: Dict[str, list] = {}
         for kind, items in by_kind.items():
-            self.counters["verbs_" + kind] += len(items)
+            self._c_verbs_kind[kind].value += len(items)
             # stale-epoch verbs FAIL without touching the pool (§5.2 —
             # mirrors sim._exec_verb's guard; same test-only bypass flag)
             if sim_module.UNSAFE_EXEC_STALE_EPOCH:
@@ -141,9 +165,9 @@ class FleetEngine:
         if use_fused and any(live_by_kind.get(k)
                              for k in ("read", "write", "cas", "faa")):
             fused_res = self._exec_fused(live_by_kind)
-            self.counters["fused_ticks"] += 1
+            self._c_fused.value += 1
         elif lanes and self.fused:
-            self.counters["fallback_ticks"] += 1
+            self._c_fallback.value += 1
         for kind in _VERB_ORDER:
             items = by_kind.get(kind)
             if not items:
@@ -168,6 +192,9 @@ class FleetEngine:
             sched._advance(cid, run, sched._master_dispatch(call))
         for cid, run in finished:
             sched._advance(cid, run, run.results)
+        obs = sched.obs
+        if obs is not None:
+            obs.on_fleet_tick(self, by_kind)
         return executed
 
     def _exec_kind(self, kind: str, items) -> list:  # lint: allow-epoch (tick() drops stale-epoch verbs before dispatch)
@@ -185,34 +212,34 @@ class FleetEngine:
                 [tr.intern(r.phase_label) for (_c, r, _i, _v) in items],
                 [v.epoch for v in verbs])
         if kind == "read":
-            self.counters["array_calls"] += 1
+            self._c_array.value += 1
             shard_set = pool.index_region_set
-            self.counters["index_probe_verbs"] += sum(
+            self._c_idx_probe.value += sum(
                 v.region in shard_set for v in verbs)
             # ordered-keydir leaf sweeps of EVERY in-flight scan coalesce
             # into this same one-gather-per-tick read sweep
-            self.counters["ord_leaf_verbs"] += sum(
+            self._c_ord_leaf.value += sum(
                 v.region in pool.ordered_region_set for v in verbs)
             return pool.read_batch([v.region for v in verbs],
                                    [v.replica for v in verbs],
                                    [v.off for v in verbs],
                                    [v.n for v in verbs])
         if kind == "write":
-            self.counters["array_calls"] += 1
+            self._c_array.value += 1
             oks = pool.write_batch([v.region for v in verbs],
                                    [v.replica for v in verbs],
                                    [v.off for v in verbs],
                                    [v.words for v in verbs])
             return [True if ok else None for ok in oks]
         if kind == "cas":
-            self.counters["array_calls"] += 1
+            self._c_array.value += 1
             return pool.cas_batch([v.region for v in verbs],
                                   [v.replica for v in verbs],
                                   [v.off for v in verbs],
                                   [v.exp for v in verbs],
                                   [v.new for v in verbs])
         if kind == "faa":
-            self.counters["array_calls"] += 1
+            self._c_array.value += 1
             return pool.faa_batch([v.region for v in verbs],
                                   [v.replica for v in verbs],
                                   [v.off for v in verbs],
@@ -252,9 +279,9 @@ class FleetEngine:
         if r_items:
             verbs = [v for (_c, _r, _i, v) in r_items]
             shard_set = pool.index_region_set
-            self.counters["index_probe_verbs"] += sum(
+            self._c_idx_probe.value += sum(
                 v.region in shard_set for v in verbs)
-            self.counters["ord_leaf_verbs"] += sum(
+            self._c_ord_leaf.value += sum(
                 v.region in pool.ordered_region_set for v in verbs)
             k = len(verbs)
             reads = (_i64((v.region for v in verbs), k),
@@ -295,7 +322,7 @@ class FleetEngine:
                     _i64((v.replica for v in verbs), k),
                     _i64((v.off for v in verbs), k),
                     _u64(verbs, "delta", k))
-        self.counters["array_calls"] += 1
+        self._c_array.value += 1
         r, w, c, f = pool.exec_fused_tick(reads, writes, cass, faas)
         return {"read": r, "write": [True if ok else None for ok in w],
                 "cas": c, "faa": f}
@@ -346,18 +373,28 @@ class FleetEngine:
                     keys32.append(_fold32(k) ^ salt)
             shadow = build_shadow(np.array(keys32, np.uint32))
             self._probe_memo = (fprint, entries_all, shadow)
-            self.counters["shadow_rebuilds"] += 1
+            self._handles["shadow_rebuilds"].value += 1
         q: List[int] = []
         spans: List[Tuple[int, int]] = []
         for be, keys64 in wants:
             salt = _cid_salt(be.cid)
             spans.append((len(q), len(keys64)))
             q.extend(_fold32(k) ^ salt for k in keys64)
-        self.counters["probe_invocations"] += 1
-        self.counters["probe_keys"] += len(q)
+        self._handles["probe_invocations"].value += 1
+        self._handles["probe_keys"].value += len(q)
+        obs = self.sched.obs
+        if obs is not None and q:
+            # heat sketch: UNsalted fold32 keys hashed into the RACE
+            # first-choice bucket family — one vectorized update per wave
+            qa = np.asarray(q, np.uint32)
+            salts = np.empty(len(q), np.uint32)
+            for (be, _k), (s, m) in zip(wants, spans):
+                salts[s:s + m] = np.uint32(_cid_salt(be.cid))
+            obs.heat_keys(hash32_np(qa ^ salts, 1))
         if not entries_all or not q:
             return [[None] * n for (_s, n) in spans]
         ptr, found = self._race_lookup(np.array(q, np.uint32), shadow)
+        c_hits = self._handles["probe_hits"]
         out: List[list] = []
         for (be, keys64), (start, n) in zip(wants, spans):
             hits = []
@@ -371,7 +408,7 @@ class FleetEngine:
                         ce = entry
                 hits.append(ce)
                 if ce is not None:
-                    self.counters["probe_hits"] += 1
+                    c_hits.value += 1
             out.append(hits)
         return out
 
@@ -408,8 +445,8 @@ class FleetEngine:
         by_low = sorted((low, lid) for lid, low in fences.items())
         lows = np.array([low for (low, _lid) in by_low], np.uint64)
         idx = ordered._leaf_probe(np.array(starts, np.uint64), lows)
-        self.counters["scan_locate_invocations"] += 1
-        self.counters["scan_locate_keys"] += len(starts)
+        self._handles["scan_locate_invocations"].value += 1
+        self._handles["scan_locate_keys"].value += len(starts)
         hints = [by_low[int(i)][1] if i >= 0 else by_low[0][1]
                  for i in idx]
         return {row: hints[s:s + n] for (row, s, n) in spans}
@@ -446,7 +483,7 @@ class FleetEngine:
 
     # --------------------------------------------------------------- stats
     def stats(self) -> Dict[str, Any]:
-        c = dict(self.counters)
+        c = {k: h.value for k, h in self._handles.items()}
         c["verbs_per_tick"] = c["verbs"] / max(c["ticks"], 1)
         c["array_calls_per_tick"] = c["array_calls"] / max(c["ticks"], 1)
         return c

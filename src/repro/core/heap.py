@@ -215,6 +215,10 @@ class DMPool:
         # tracer installs instance-attribute wrappers over the verb
         # methods, so the un-attached pool pays zero per-verb cost
         self._tracer = None
+        # observability hub (repro.obs.ClusterObs) — None unless attached
+        # by the cluster surface; client.py's scalar cache path feeds the
+        # heat sketch through it (one is-None test when detached)
+        self._obs = None
         # fused-tick (region, replica) -> (cell, mid) lookup table, cached
         # until the topology token changes (see _fused_cells)
         self._fused_lut = None

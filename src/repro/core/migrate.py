@@ -58,6 +58,7 @@ from . import layout as L
 from .faults import InsufficientReplicas, SchedulerStalled
 from .heap import DMPool
 from .ring import ring_replicas
+from ..obs.registry import LegacyCounters, legacy_counters_view
 
 __all__ = ["MigrationEngine", "RegionMigration"]
 
@@ -103,9 +104,19 @@ class MigrationEngine:
         # so the hook would move the cutover boundary outside the
         # checker's enumerated schedule.
         self.manual = False
-        self.counters = {"migrations": 0, "cutovers": 0, "aborts": 0,
-                         "copied_words": 0, "adds": 0, "removes": 0,
-                         "retires": 0}
+        # migration counters live in the scheduler's metrics registry
+        # under "migrate.<name>"; the old ``counters`` dict survives one
+        # release as a read-only deprecation alias (see obs/registry.py).
+        self._handles = {
+            k: scheduler.metrics.counter("migrate." + k)
+            for k in ("migrations", "cutovers", "aborts", "copied_words",
+                      "adds", "removes", "retires")}
+
+    @property
+    def counters(self) -> LegacyCounters:
+        """Deprecated read-only view of the migration metrics under their
+        historical key names; read the registry instead."""
+        return legacy_counters_view("MigrationEngine", self._handles)
 
     # ----------------------------------------------------------- public API
     def add_mn(self) -> int:
@@ -116,7 +127,10 @@ class MigrationEngine:
         pool = self.pool
         mid = pool.add_node()
         pool.add_data_regions(mid)
-        self.counters["adds"] += 1
+        self._handles["adds"].value += 1
+        obs = self.sched.obs
+        if obs is not None:
+            obs.fault("add_mn", mid, self.sched.tick)
         # membership commit: new MR visible, stale verbs FAIL and retry
         self.master.commit_membership()
         self._plan_index_rebalance()
@@ -142,7 +156,10 @@ class MigrationEngine:
                 f"replication factor {pool.cfg.replication}")
         pool.directory.remove_member(mid)
         self.removing.add(mid)
-        self.counters["removes"] += 1
+        self._handles["removes"].value += 1
+        obs = self.sched.obs
+        if obs is not None:
+            obs.fault("remove_mn", mid, self.sched.tick)
         # in-flight migrations may still be HEADED for the draining MN
         # (e.g. shard moves planned by a recent add_mn): abort them before
         # re-planning, or their cutovers would install regions onto the
@@ -233,7 +250,10 @@ class MigrationEngine:
                               dir_version=pool.directory.version(region))
         pool.migrations[region] = mig
         self.active[region] = mig
-        self.counters["migrations"] += 1
+        self._handles["migrations"].value += 1
+        obs = self.sched.obs
+        if obs is not None:
+            obs.migration("start", region, self.sched.tick)
         return True
 
     # ------------------------------------------------------------- ticking
@@ -284,13 +304,16 @@ class MigrationEngine:
                     arr[mig.copied:mig.copied + len(words)] = words
                     pool.mn_bytes[mid] += len(words) * L.WORD
                 mig.copied += len(words)
-                self.counters["copied_words"] += len(words)
+                self._handles["copied_words"].value += len(words)
         for g in sorted(self.active):
             mig = self.active[g]
             if mig.copied >= pool.cfg.region_words:
                 self.active.pop(g)
                 self.master.commit_cutover(mig)
-                self.counters["cutovers"] += 1
+                self._handles["cutovers"].value += 1
+                obs = self.sched.obs
+                if obs is not None:
+                    obs.migration("cutover", g, self.sched.tick)
         self._finalize_retires()
 
     def _finalize_retires(self):
@@ -303,13 +326,16 @@ class MigrationEngine:
                 continue
             pool.retire_node(mid)
             self.removing.discard(mid)
-            self.counters["retires"] += 1
+            self._handles["retires"].value += 1
             self.master.commit_membership()
 
     def _abort(self, region: int):
         self.pool.migrations.pop(region, None)
         self.active.pop(region, None)
-        self.counters["aborts"] += 1
+        self._handles["aborts"].value += 1
+        obs = self.sched.obs
+        if obs is not None:
+            obs.migration("abort", region, self.sched.tick)
 
     # ------------------------------------------------------------ recovery
     def abort_for_dead(self, dead: List[int]):

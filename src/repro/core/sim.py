@@ -44,6 +44,7 @@ from .faults import ClientCrashed, ProtocolViolation, SchedulerStalled
 from .heap import DMPool
 from .master import Master
 from .rng import SimRng, as_simrng
+from ..obs.registry import Registry
 
 # TEST-ONLY: when True, the §5.2 stale-lease-epoch guard is bypassed — a
 # verb posted under an expired epoch executes against the *new* placement
@@ -209,6 +210,15 @@ class Scheduler:
         self.completed_ops = 0                       # ops that responded OK-ish
         self.crashed_ops = 0                         # ops resolved CRASHED
         self.mn_recoveries = 0
+        # the cluster metrics registry (repro.obs): protocol components
+        # (fleet, migrate, obs hub) register their counters here under
+        # stable dotted names; always present, a Counter bump is the only
+        # per-event cost.  ``obs`` is the ClusterObs hub (op latency
+        # histograms, flight recorder, per-MN series) — None unless a
+        # FuseeCluster attached one; every hook site is a single
+        # ``is None`` test, so a detached scheduler pays nothing.
+        self.metrics = Registry()
+        self.obs = None
         # automatic MN failure detection: crash_mn() arms a deadline; the
         # master's Alg-3 recovery runs inside step() once it passes.
         self.auto_mn_recovery = auto_mn_recovery
@@ -296,6 +306,9 @@ class Scheduler:
         self.history.append(rec)
         run = _Running(gen=gen, record=rec)
         self.pipes.setdefault(cid, _ClientPipe()).runs[rec.op_id] = run
+        obs = self.obs
+        if obs is not None:
+            obs.op_begin(rec, self.tick)
         self._advance(cid, run, None)  # prime to the first phase
         return rec
 
@@ -316,6 +329,9 @@ class Scheduler:
                 run.done = True
                 self.completed_ops += 1
                 pipe.runs.pop(run.record.op_id, None)
+                obs = self.obs
+                if obs is not None:   # buffered; bulk-flushed (obs/flight)
+                    obs.op_settled(run.record, self.tick)
                 if run.record.on_done is not None:
                     cb, run.record.on_done = run.record.on_done, None
                     cb(run.record)   # cleared first: history retains the
@@ -379,6 +395,9 @@ class Scheduler:
             self._mn_detect_at = None
             if self.master.maybe_recover_mns():
                 self.mn_recoveries += 1
+                obs = self.obs
+                if obs is not None:
+                    obs.recovery("mn_recovery", self.tick)
 
     def step(self, cid: int, pick: int = 0) -> bool:
         """Execute one verb (or master call) of client ``cid``.
@@ -475,6 +494,9 @@ class Scheduler:
                 self._mn_detect_at = None
                 if self.master.maybe_recover_mns():
                     self.mn_recoveries += 1
+                    obs = self.obs
+                    if obs is not None:
+                        obs.recovery("mn_recovery", self.tick)
                 return True
             ev = self._events.get(ch.name)
             if ev is None or (ev.enabled is not None
@@ -558,6 +580,7 @@ class Scheduler:
             return
         runs = list(pipe.runs.values())
         self.pipes[cid] = _ClientPipe()
+        obs = self.obs
         for run in runs:
             rec = run.record
             rec.result = OpResult(CRASHED, rtts=rec.rtts,
@@ -565,6 +588,8 @@ class Scheduler:
             rec.resp_tick = self.tick
             run.done = True
             self.crashed_ops += 1
+            if obs is not None:
+                obs.op_settled(rec, self.tick)
             if rec.on_done is not None:
                 cb, rec.on_done = rec.on_done, None
                 cb(rec)

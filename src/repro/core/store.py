@@ -28,7 +28,7 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
-from .api import KVStore, SimBackend
+from .api import KINDS, KVStore, SimBackend
 from .client import FuseeClient
 from .events import CRASHED
 from .faults import (ClientCrashed, ClientHealth, ClusterHealth, FaultInjector,
@@ -39,6 +39,8 @@ from .master import Master
 from .migrate import MigrationEngine
 from .rng import SimRng
 from .sim import Choice, Scheduler, SimTrace
+from ..configs.fusee_paper import FuseePaperConfig
+from ..obs.flight import ClusterObs
 
 
 class FuseeCluster:
@@ -46,7 +48,8 @@ class FuseeCluster:
                  seed: int = 0, enable_cache: bool = True,
                  cache_threshold: float = 0.5,
                  replication_mode: str = "snapshot",
-                 mn_detect_delay: int = 0):
+                 mn_detect_delay: int = 0,
+                 obs_dump_dir: Optional[str] = None):
         self.cfg = cfg or DMConfig()
         self.seed = seed
         # single randomness root: every random decision of the run
@@ -67,6 +70,18 @@ class FuseeCluster:
         self.migrator = MigrationEngine(self.pool, self.master,
                                         self.scheduler)
         self.master.migrator = self.migrator
+        # observability hub (repro.obs): op-level flight recorder, latency
+        # histograms, per-MN load series, heat sketch — attached to the
+        # hot-path hook points by default; detach_obs() restores the
+        # structurally-zero-cost path (one is-None test per hook site).
+        # The cap-model link rate comes from the paper config: one tick is
+        # one verb RTT, so link_gbps/8 * rtt_us of bytes move per tick.
+        pc = FuseePaperConfig()
+        self.obs = ClusterObs(
+            self.scheduler, self.pool, kinds=KINDS + ("search_batch",),
+            link_bytes_per_tick=pc.link_gbps * 1e9 / 8 * pc.rtt_us * 1e-6,
+            dump_dir=obs_dump_dir)
+        self.attach_obs()
         self._fleet = None
         self.clients: Dict[int, FuseeClient] = {}
         self._next_cid = 0
@@ -206,11 +221,17 @@ class FuseeCluster:
     def crash_mn(self, mid: int):
         """Crash-stop an MN; the scheduler auto-detects and the master
         re-homes its regions (Alg. 3) ``mn_detect_delay`` ticks later."""
+        obs = self.scheduler.obs
+        if obs is not None:
+            obs.fault("crash_mn", mid, self.scheduler.tick)
         self.scheduler.crash_mn(mid)
 
     def crash_client(self, cid: int):
         """Crash-stop a client; its in-flight futures resolve ``CRASHED``
         (retriable) and later submits raise ``ClientCrashed``."""
+        obs = self.scheduler.obs
+        if obs is not None:
+            obs.fault("crash_client", cid, self.scheduler.tick)
         self.scheduler.crash_client(cid)
 
     def recover_client(self, cid: int, reassign_to_cid: Optional[int] = None
@@ -223,6 +244,13 @@ class FuseeCluster:
         st = self.master.recover_client(cid, reassign_to=target)
         accumulate_recovery(self.recovery_totals, st)
         self.client_recoveries += 1
+        obs = self.scheduler.obs
+        if obs is not None:
+            obs.recovery("client_recovery", self.scheduler.tick, cid=cid,
+                         arg=st.redone_ops,
+                         rtts=(st.get_metadata_rtts + st.traverse_log_rtts
+                               + st.recover_requests_rtts
+                               + st.construct_free_list_rtts))
         return st
 
     def inject(self, plan: FaultPlan) -> FaultInjector:
@@ -318,15 +346,57 @@ class FuseeCluster:
             raise ValueError(
                 "no tracer attached — call attach_tracer() before running "
                 "the race detector")
-        return races.detect(self.pool._tracer, scheduler=self.scheduler,
-                            rules=rules, on_truncated=on_truncated)
+        findings = races.detect(self.pool._tracer, scheduler=self.scheduler,
+                                rules=rules, on_truncated=on_truncated)
+        obs = self.scheduler.obs
+        if obs is not None and findings:
+            obs.dump("race_finding")
+        return findings
 
     def heap_audit(self):
         """Post-drain DM heap/epoch sanitizer (``repro.analysis.heapcheck``):
         index→object reachability, leak/double-free/use-after-free checks,
         placement-ring epoch consistency.  Call after ``drain()``."""
         from ..analysis import heapcheck         # local: analysis is opt-in
-        return heapcheck.audit(self)
+        report = heapcheck.audit(self)
+        obs = self.scheduler.obs
+        if obs is not None and not report.ok:
+            obs.dump("heap_audit")
+        return report
+
+    # --------------------------------------------------------- observability
+    def attach_obs(self) -> ClusterObs:
+        """(Re)attach the observability hub to the hot-path hook points
+        (scheduler op begin/settle, fleet per-tick sampling, heap heat)."""
+        self.scheduler.obs = self.obs
+        self.pool._obs = self.obs
+        return self.obs
+
+    def detach_obs(self) -> ClusterObs:
+        """Detach the hub: every hook site degrades to one attribute load
+        + ``is None`` test (claims-checked by ``benchmarks/run.py --only
+        obs_overhead``).  The metrics registry itself stays live — fleet /
+        migration counters are plain handle bumps, not hub hooks."""
+        self.obs.flush()
+        self.scheduler.obs = None
+        self.pool._obs = None
+        return self.obs
+
+    def metrics(self) -> Dict:
+        """Registry snapshot plus a latency summary: for every op-latency
+        histogram, conservative p50/p99/p999 (bucket upper edges) and the
+        sample count.  Deterministic — ``json.dumps`` of this snapshot is
+        byte-identical across same-(seed, config, schedule) runs."""
+        snap = self.obs.snapshot()
+        reg = self.scheduler.metrics
+        pct: Dict[str, Dict] = {}
+        for name in snap["histograms"]:
+            h = reg.get(name)
+            pct[name] = {"count": h.total, "p50": h.percentile(0.50),
+                         "p99": h.percentile(0.99),
+                         "p999": h.percentile(0.999)}
+        snap["percentiles"] = pct
+        return snap
 
     # ---------------------------------------------------------------- health
     def health(self) -> ClusterHealth:

@@ -1,0 +1,17 @@
+"""Cluster observability: typed metrics registry, op-level flight
+recorder, per-MN load time-series, heat sketches, and trace export.
+
+FUSEE's client-centric design leaves no metadata server where telemetry
+naturally accumulates; this package is the deterministic, vectorized
+substitute.  See README "Observability" for the metric naming contract,
+histogram bucket scheme, and the Perfetto export walkthrough.
+"""
+from .registry import (Counter, Gauge, HeatSketch, Histogram,  # noqa: F401
+                       LegacyCounters, PATH_DEPENDENT, Registry, Series,
+                       deterministic_view, legacy_counters_view,
+                       snapshot_diff, snapshot_merge)
+from .flight import (ClusterObs, FlightRecorder,  # noqa: F401
+                     EV_BEGIN, EV_FAULT, EV_MIG, EV_RECOVERY, EV_SETTLE,
+                     EV_NAMES, FIELDS)
+from .export import (flight_to_perfetto, load_flight,  # noqa: F401
+                     load_metrics, load_perfetto, metrics_to_json)

@@ -136,6 +136,25 @@ class ServeEngine:
             **self._backend.stats(),
         }
 
+    def metrics(self) -> Dict:
+        """Registry-style metrics snapshot (the serving twin of
+        ``FuseeCluster.metrics()``): the engine/backend counters under
+        ``serve.*`` dotted names in the same sectioned layout, so merge /
+        diff / export tooling (``repro.obs``) applies unchanged."""
+        counters = {
+            "serve.active": len(self.active),
+            "serve.queued": len(self.queue),
+            "serve.finished": len(self.finished),
+            "serve.steps": self.steps,
+        }
+        for k, v in self._backend.stats().items():
+            if isinstance(v, (int, np.integer)) and not isinstance(v, bool):
+                counters["serve." + k] = int(v)
+        return {"counters": counters,
+                "gauges": {"serve.slots_free": len(self.slots_free),
+                           "serve.pool_shards": self.pool.cfg.n_shards},
+                "histograms": {}, "series": {}, "heat": {}}
+
     def list_prefixes(self, start: int = 0, count: int = 64) -> List[tuple]:
         """Ordered listing of live prefix-cache entries: the next
         ``count`` block-hash keys >= ``start`` in key order, each with its

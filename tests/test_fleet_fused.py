@@ -11,11 +11,14 @@ YCSB-A/C/E mixes, a churn fault storm, and an ``add_mn`` fired mid-run
 mixed fused/fallback schedule is covered too).  A recording tracer must
 force the fallback rather than silently dropping verbs.
 """
+import json
+
 import numpy as np
 import pytest
 
 from repro.core import (OK, ClientCrashed, DMConfig, FaultPlan,
                         FuseeCluster, Op)
+from repro.obs import deterministic_view
 
 
 # --------------------------------------------------------------- signatures
@@ -57,9 +60,18 @@ def _history_signature(cl):
         for r in cl.scheduler.history if r.result is not None)
 
 
+def _metrics_signature(cl):
+    """The whole metrics registry minus the path-dependent names
+    (PATH_DEPENDENT): latency histograms, per-MN load series, heat
+    sketch, flight-derived counters — all must be bit-identical across
+    the fused and oracle paths."""
+    return json.dumps(deterministic_view(cl.metrics()), sort_keys=True)
+
+
 def _signature(cl, fleet):
     return (_pool_bytes(cl), _health_signature(cl), _history_signature(cl),
-            _counter_signature(fleet), tuple(cl.pool.mn_bytes.tolist()))
+            _counter_signature(fleet), tuple(cl.pool.mn_bytes.tolist()),
+            _metrics_signature(cl))
 
 
 def _assert_differential(run, *, expect_fused_ticks=True):
@@ -69,7 +81,7 @@ def _assert_differential(run, *, expect_fused_ticks=True):
     cl_f, fl_f = run(fused=True)
     sig_o, sig_f = _signature(cl_o, fl_o), _signature(cl_f, fl_f)
     for name, a, b in zip(("pool_bytes", "health", "history", "counters",
-                           "mn_bytes"), sig_o, sig_f):
+                           "mn_bytes", "metrics"), sig_o, sig_f):
         assert a == b, f"fused/oracle divergence in {name}"
     if expect_fused_ticks:
         assert fl_f.counters["fused_ticks"] > 0
