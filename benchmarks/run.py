@@ -3,6 +3,14 @@ serving.  Prints ``name,us_per_call,derived`` CSV rows per bench and writes
 the full row dump to bench_results.json.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig13] [--skip-serving]
+
+Regression gate: ``--compare benchmarks/BASELINE.json`` checks this run's
+claim metrics (``claim_metrics``) against a committed baseline and exits
+non-zero on any >10% regression in the metric's bad direction
+(percentage-point metrics additionally need a >1.5-point absolute move, so
+wall-clock ratio noise does not flap the gate).  ``--claims-out PATH``
+writes the current metrics in the baseline format; refresh the committed
+baseline with it when a PR intentionally shifts performance.
 """
 from __future__ import annotations
 
@@ -23,6 +31,13 @@ def main(argv=None):
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Perfetto/Chrome-trace JSON of the same "
                          "telemetry run (load at ui.perfetto.dev)")
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="regression gate: compare this run's claim "
+                         "metrics against a baseline; exit 1 on any >10% "
+                         "regression")
+    ap.add_argument("--claims-out", default=None, metavar="PATH",
+                    help="write this run's claim metrics as a baseline "
+                         "JSON (commit as benchmarks/BASELINE.json)")
     args = ap.parse_args(argv)
 
     from . import figures, roofline
@@ -61,7 +76,18 @@ def main(argv=None):
         json.dump(all_rows, f, indent=1, default=float)
     if args.metrics_out or args.trace_out:
         export_telemetry(args.metrics_out, args.trace_out)
+    if args.claims_out:
+        with open(args.claims_out, "w") as f:
+            json.dump(claim_metrics(all_rows), f, indent=1, sort_keys=True)
+        print(f"claim metrics -> {args.claims_out}")
+    regressed = False
+    if args.compare:
+        with open(args.compare) as f:
+            baseline = json.load(f)
+        regressed = not compare_baseline(claim_metrics(all_rows), baseline)
     validate_claims(all_rows)
+    if regressed:
+        sys.exit(1)
 
 
 def trace_overhead():
@@ -140,14 +166,17 @@ def trace_overhead():
 def obs_overhead():
     """Observability-hub overhead on the fused fleet tick path.
 
-    Two modes over the identical seeded YCSB-A fleet workload:
+    Three modes over the identical seeded YCSB-A fleet workload:
     ``detached`` (``cluster.detach_obs()`` — every hook site collapses to
-    one attribute load + ``is None`` test) and ``attached`` (the default
+    one attribute load + ``is None`` test), ``attached`` (the default
     always-on hub: flight recorder, latency histograms, heat sketch, and
-    the per-MN load series all recording).  Each mode reports us/tick;
-    the claims check asserts attached recording costs < 5% over the
-    detached baseline, which is what justifies leaving the hub on for
-    the life of every cluster.
+    the per-MN load series all recording), and ``profiled`` (attached
+    hub + the hot-key/skew monitor enabled — the full online profiling
+    surface; the verb tracer's separate cost is ``trace_overhead``'s
+    business).  Each mode reports us/tick; the claims check asserts both
+    attached recording AND the profiled mode cost < 5% over the detached
+    baseline, which is what justifies leaving them on for the life of a
+    cluster.
     """
     import gc
     import statistics
@@ -163,6 +192,8 @@ def obs_overhead():
         cl = FuseeCluster(cfg, num_clients=n_clients, seed=23)
         if mode == "detached":
             cl.detach_obs()
+        elif mode == "profiled":
+            cl.enable_hotspot()
         sched, fleet = cl.scheduler, cl.fleet()
         for k in range(n_keys):
             sched.submit(k % n_clients, "insert", k, [k] * value_words)
@@ -190,7 +221,7 @@ def obs_overhead():
             samples.append(dt * 1e6 / max(1, sched.tick - ticks0))
         return samples
 
-    modes = ("detached", "attached")
+    modes = ("detached", "attached", "profiled")
     one_run("detached")                  # warmup: JIT / allocator caches
     times = {m: [] for m in modes}
     for _ in range(repeats):             # interleaved: drift hits all modes
@@ -368,6 +399,77 @@ def explore_dpor():
     }]
 
 
+# ------------------------------------------------------- regression gate
+# metric fields worth gating, by good direction.  Simulated metrics
+# (mops, RTTs, ok_frac, ...) are deterministic per seed so a relative
+# threshold is exact; the wall-clock-derived ratios (speedup,
+# overhead_pct) are kept because same-machine ratios are stable, with an
+# absolute floor on the *_pct family so near-zero values cannot flap.
+_HIGHER_BETTER = ("mops", "ops_per_rtt", "batch_ops_per_rtt", "speedup",
+                  "ok_frac", "reduction_transitions", "reduction_schedules")
+_LOWER_BETTER = ("latency_us", "lat_p99_us", "ms", "scan_rtts",
+                 "overhead_pct")
+# row fields that identify a measurement (stable key parts)
+_KEY_FIELDS = ("ycsb", "clients", "system", "shards", "mns", "r", "op",
+               "batch", "step", "window", "mode", "alloc", "scope",
+               "scan_len")
+REGRESSION_REL = 0.10          # >10% move in the bad direction regresses
+REGRESSION_PCT_FLOOR = 1.5     # *_pct metrics also need >1.5 points
+
+
+def claim_metrics(rows):
+    """Flatten bench rows into ``{stable-name: value}`` for the
+    regression gate — only fields from the gated whitelists, keyed by the
+    row's identifying fields so baselines survive row reordering."""
+    out = {}
+    for r in rows:
+        bench = r.get("bench")
+        if not bench:
+            continue
+        key = ".".join([str(bench)] + [f"{k}={r[k]}" for k in _KEY_FIELDS
+                                       if r.get(k) is not None])
+        for f in _HIGHER_BETTER + _LOWER_BETTER:
+            v = r.get(f)
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                out[f"{key}.{f}"] = float(v)
+    return out
+
+
+def compare_baseline(current, baseline) -> bool:
+    """Print a regression report; True when no gated metric moved >10%
+    in its bad direction vs the baseline.  Metrics missing on either
+    side (bench not run / newly added) are skipped, so ``--only`` runs
+    gate just their own rows."""
+    regressions, improved, checked = [], 0, 0
+    for name in sorted(set(current) & set(baseline)):
+        old, new = baseline[name], current[name]
+        field = name.rsplit(".", 1)[-1]
+        lower_better = field in _LOWER_BETTER
+        delta = (new - old) if lower_better else (old - new)   # bad if > 0
+        denom = max(abs(old), 1e-9)
+        rel = delta / denom
+        checked += 1
+        bad = rel > REGRESSION_REL
+        if field.endswith("_pct"):
+            bad = bad and abs(delta) > REGRESSION_PCT_FLOOR
+        if bad:
+            regressions.append((name, old, new, rel))
+        elif rel < -REGRESSION_REL:
+            improved += 1
+    print(f"\n== baseline comparison ({checked} metrics) ==")
+    for name, old, new, rel in regressions:
+        print(f"  [REGRESSED] {name}: {old:.4g} -> {new:.4g} "
+              f"({100 * rel:+.1f}% worse)")
+    if not regressions:
+        print(f"  no regressions >{100 * REGRESSION_REL:.0f}% "
+              f"({improved} metrics improved >10%)")
+    skipped = len(set(current) - set(baseline))
+    if skipped:
+        print(f"  ({skipped} new metric(s) not in baseline — refresh it "
+              f"with --claims-out)")
+    return not regressions
+
+
 def summarize(name: str, rows) -> str:
     if not rows:
         return "no-rows"
@@ -380,7 +482,8 @@ def summarize(name: str, rows) -> str:
         by = {r["mode"]: r for r in rows}
         return (f"fleet tick {by['detached']['us_per_tick']:.0f}us/tick "
                 f"detached; attached "
-                f"{by['attached']['overhead_pct']:+.1f}%")
+                f"{by['attached']['overhead_pct']:+.1f}% profiled "
+                f"{by['profiled']['overhead_pct']:+.1f}%")
     if name == "explore_dpor":
         r = rows[0]
         return (f"{r['scope']}: dpor {r['dpor_states']} states/"
@@ -526,6 +629,9 @@ def validate_claims(rows):
         ov = oo["attached"]["overhead_pct"]
         checks.append(("attached obs hub overhead on fleet ticks < 5%",
                        ov < 5.0, f"attached {ov:+.1f}%"))
+        op = oo["profiled"]["overhead_pct"]
+        checks.append(("hub + hot-key monitor (profiled) overhead < 5%",
+                       op < 5.0, f"profiled {op:+.1f}%"))
     rl = [r for r in rows if r.get("bench") == "roofline"
           and r.get("mode") == "fleet-tick"]
     if rl:

@@ -269,6 +269,81 @@ def metrics_drill():
     assert cluster.obs.dumped, "MN crash must trigger a flight dump"
 
 
+def profile_drill():
+    """Causal-profiler drill: a planted zipf(0.99) fleet workload through
+    an MN crash with the verb tracer AND the hot-key monitor armed, then
+    the full profiling surface read back — the top-5 critical-path rows
+    (op kind x protocol phase x retry cause, RTT-conservation-checked),
+    the hot-key top-k table with the online zipf-θ estimate, and a
+    Perfetto trace with the causal phase sub-spans nested under each op
+    lane."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.obs import flight_to_perfetto
+    from repro.obs.profile import format_report
+
+    print("\n== profile drill (critical path + hot keys, zipf 0.99) ==")
+    n_clients, n_keys, n_ops, theta = 8, 256, 1200, 0.99
+    cluster = FuseeCluster(DMConfig(num_mns=4, replication=3,
+                                    region_words=1 << 15, regions_per_mn=16,
+                                    index_shards=4),
+                           num_clients=n_clients, seed=5)
+    cluster.attach_tracer(capacity=1 << 17)
+    cluster.enable_hotspot()
+    cluster.inject(FaultPlan().crash_mn(3, after_ops=300))
+    fleet = cluster.fleet()
+    stores = {c: cluster.store(c, max_inflight=0) for c in range(n_clients)}
+    for k in range(n_keys):
+        stores[k % n_clients].submit(Op.insert(k, [k]))
+        if k % 32 == 31:
+            fleet.run()
+    fleet.run()
+    # planted zipfian read/update mix (the hot head is keys 0, 1, 2, ...)
+    wl = cluster.rng.stream("workload")
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    p = ranks ** (-theta)
+    p /= p.sum()
+    keys = wl.choice(n_keys, size=n_ops, p=p)
+    for i, k in enumerate(keys):
+        st = stores[i % n_clients]
+        op = Op.update(int(k), [i]) if i % 2 else Op.get(int(k))
+        st.submit(op)
+        if i % 64 == 63:
+            fleet.run()
+    fleet.run()
+
+    prof = cluster.profile()
+    print(" top-5 critical-path rows:")
+    print("  " + format_report(prof, top=5).replace("\n", "\n  "))
+    c = prof["conservation"]
+    assert c["ok"], f"RTT conservation violated: {c}"
+
+    hot = cluster.metrics()["hotspot"]
+    print(f" hot-key monitor: θ~{hot['theta_milli'] / 1000:.2f} "
+          f"(planted {theta}), regime={hot['regime']}, "
+          f"{hot['keys_seen']} keys folded:")
+    print(f"  {'key':>6}{'count':>8}{'err':>6}")
+    for key, count, err in hot["top"][:10]:
+        print(f"  {key:>6}{count:>8}{err:>6}")
+
+    trace_path = tempfile.mktemp(prefix="fusee_profile_",
+                                 suffix=".perfetto.json")
+    flight_to_perfetto({"labels": cluster.obs.labels(),
+                        **cluster.obs.flight_events(),
+                        "dropped": cluster.obs.flight.dropped},
+                       trace_path, spans=prof["spans"])
+    print(f" perfetto trace with causal sub-spans -> {trace_path}")
+    if "tick_phases" in prof:
+        tp = prof["tick_phases"]
+        print(f" fused tick phases: coord {tp['coord_build_frac']:.0%} "
+              f"sweep {tp['sweep_frac']:.0%} "
+              f"scatter {tp['scatter_frac']:.0%} "
+              f"bookkeeping {tp['bookkeeping_frac']:.0%} "
+              f"({tp['us_per_tick']:.0f}us/tick over {tp['ticks']} ticks)")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip-train", action="store_true",
@@ -280,6 +355,9 @@ if __name__ == "__main__":
     ap.add_argument("--metrics", action="store_true",
                     help="also run the telemetry drill (latency percentiles, "
                          "per-MN load table, dump-on-fault + Perfetto export)")
+    ap.add_argument("--profile", action="store_true",
+                    help="also run the causal-profiler drill (critical-path "
+                         "RTT attribution, hot-key top-k, Perfetto sub-spans)")
     args = ap.parse_args()
     if not args.skip_train:
         train_drill()
@@ -290,3 +368,5 @@ if __name__ == "__main__":
         scan_drill()
     if args.metrics:
         metrics_drill()
+    if args.profile:
+        profile_drill()

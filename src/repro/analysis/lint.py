@@ -1,4 +1,4 @@
-"""AST protocol lints for the FUSEE reproduction (L001-L008).
+"""AST protocol lints for the FUSEE reproduction (L001-L009).
 
 Run as ``python -m repro.analysis.lint [paths...]`` (defaults to the
 ``repro`` package plus the repo's ``tests/`` and ``benchmarks/`` trees);
@@ -54,13 +54,21 @@ L008  **bare counters-dict mutation** — protocol/fleet code must not
       where snapshots are deterministic, mergeable, and covered by the
       fused-vs-oracle differential gate.  The surviving ``counters``
       attributes are read-only deprecation views.
+L009  **Python loops in obs hot paths** — the observability package's
+      cost contract (obs/flight.py docstring, claims-checked by the
+      ``obs_overhead`` bench) is tuple-append per op and array passes per
+      flush.  A statement-level ``for``/``while`` inside an ``obs/``
+      flush/update/observe/fold/build-family function is a per-element
+      regression waiting to scale exactly like L004/L007; vectorize it,
+      or carry an ``allow-obs-loop`` pragma arguing why the loop is not
+      per-element work (taxonomy-bounded group walks, export paths).
 
 Suppression: a trailing ``# lint: allow-<name> (<why>)`` pragma on the
 offending line, or on the enclosing ``def``/``class`` line to cover the
 whole body.  ``<name>`` is the rule id (``L003``) or its alias:
 ``assert`` (L005), ``epoch`` (L001), ``nondet`` (L002), ``pool-mutation``
 (L003), ``scalar-loop`` (L004), ``fused-loop`` (L007), ``counters``
-(L008).  Pragmas are deliberate, documented
+(L008), ``obs-loop`` (L009).  Pragmas are deliberate, documented
 exemptions — the lint keeps them honest by flagging unknown names,
 missing justifications, and stale sites (L006 itself is exempt from
 suppression: delete the pragma instead).
@@ -89,13 +97,22 @@ RULES = {
             "nothing)",
     "L007": "Python loop inside a fused tick path",
     "L008": "write through a bare counters dict in protocol code",
+    "L009": "Python loop inside an obs hot path",
 }
 
 _ALIASES = {
     "epoch": "L001", "nondet": "L002", "pool-mutation": "L003",
     "scalar-loop": "L004", "assert": "L005", "fused-loop": "L007",
-    "counters": "L008",
+    "counters": "L008", "obs-loop": "L009",
 }
+
+# L009 scope: function-name prefixes (leading underscores stripped) of
+# the obs/ batch entry points — per-flush / per-wave code where a
+# per-element Python loop silently reverts the vectorized cost contract
+_OBS_HOT_PREFIXES = (
+    "flush", "update", "observe", "touch", "heat", "push", "emit",
+    "fold", "build", "evaluate", "top", "group", "critical",
+    "spans_to", "op_begin", "op_settled", "append")
 
 VERBS = ("read", "write", "cas", "faa")
 
@@ -214,6 +231,8 @@ class _Linter(ast.NodeVisitor):
         self.base = os.path.basename(rel)
         self.in_core = f"{os.sep}core{os.sep}" in rel or \
             rel.replace("/", os.sep).startswith(f"core{os.sep}")
+        self.in_obs = f"{os.sep}obs{os.sep}" in rel or \
+            rel.replace("/", os.sep).startswith(f"obs{os.sep}")
         self.is_rng = rel.replace(os.sep, "/").endswith("core/rng.py")
         self.rules = rules
         self.pragmas = _pragmas(text)
@@ -332,11 +351,13 @@ class _Linter(ast.NodeVisitor):
             self._tainted[-1].update(_names_in_target(node.target))
         self._check_L004(node)
         self._check_L007(node)
+        self._check_L009(node)
         self.generic_visit(node)
 
     def visit_While(self, node):
         self._check_L004(node)
         self._check_L007(node)
+        self._check_L009(node)
         self.generic_visit(node)
 
     def _check_store_targets(self, targets, node):
@@ -432,6 +453,22 @@ class _Linter(ast.NodeVisitor):
             "contract is ONE array dispatch over all lanes; vectorize it, "
             "or add `# lint: allow-fused-loop (<why this is not per-lane "
             "work>)`")
+
+    # --------------------------------------------------------------- L009
+    def _check_L009(self, node):
+        if not self.in_obs or not self._fn_stack:
+            return
+        name = getattr(self._fn_stack[-1], "name", "").lstrip("_")
+        if not name.startswith(_OBS_HOT_PREFIXES):
+            return
+        kw = "for" if isinstance(node, ast.For) else "while"
+        self._flag(
+            "L009", node,
+            f"Python `{kw}` loop inside an obs hot path "
+            f"(`{self._fn_stack[-1].name}`) — the hub's cost contract is "
+            "tuple-append per op and array passes per flush; vectorize "
+            "it, or add `# lint: allow-obs-loop (<why this is not "
+            "per-element work>)`")
 
 
 # ---------------------------------------------------------------- frontends

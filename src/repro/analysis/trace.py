@@ -25,6 +25,16 @@ Each recorded event is one row across parallel int64 ring-buffer columns:
     arg          cas: expected value; faa: delta; write: first word
     val          cas: new value; write: crc32 of the full payload
     old          cas/faa: value found at the word (bit pattern)
+    cause        interned retry/stall cause of the issuing phase (see
+                 core/events.py CAUSES; -1 = no cause).  Verbs executed
+                 inside a live-migration dual-write window that carry no
+                 issue-side cause are stamped ``mig_dual_write`` at
+                 execution time (deterministic: migration state is a
+                 protocol event).
+    bg           1 when the issuing phase is background (off the op's
+                 latency critical path); the span profiler separates
+                 foreground RTT attribution on this bit, not on label
+                 string conventions
 
 Execution context (tick / cid / op / phase / issue epoch) is not visible
 at the pool layer, so the scheduler (sim.py) and the fleet engine
@@ -51,7 +61,7 @@ _MASK = 0xFFFF_FFFF_FFFF_FFFF
 FIELDS = (
     "seq", "tick", "cid", "op_id", "phase", "label", "verb", "region",
     "replica", "off", "n", "epoch_issue", "epoch_exec", "ok", "arg",
-    "val", "old",
+    "val", "old", "cause", "bg",
 )
 
 _WRAPPED = ("read", "write", "cas", "faa",
@@ -90,6 +100,9 @@ class VerbTracer:
         self._phase = -1
         self._label = 0
         self._epoch = -1
+        self._cause = -1
+        self._bg = 0
+        self._mig_cause = self.intern("mig_dual_write")
         self._bc = None                 # one-shot batch context
 
     # ------------------------------------------------------------- context
@@ -104,26 +117,35 @@ class VerbTracer:
     def labels(self) -> List[str]:
         return list(self._labels)
 
-    def set_ctx(self, tick, cid, op_id, phase, label_id, epoch):
+    def set_ctx(self, tick, cid, op_id, phase, label_id, epoch,
+                cause_id=-1, bg=0):
         self._tick = tick
         self._cid = cid
         self._op = op_id
         self._phase = phase
         self._label = label_id
         self._epoch = epoch
+        self._cause = cause_id
+        self._bg = bg
 
     def set_master_ctx(self, tick):
         self.set_ctx(tick, MASTER_CID, -1, -1, 0, -1)
 
-    def set_batch_ctx(self, tick, cids, op_ids, phases, label_ids, epochs):
+    def set_batch_ctx(self, tick, cids, op_ids, phases, label_ids, epochs,
+                      causes=None, bgs=None):
         """Per-verb context for the next ``*_batch`` pool call (fleet tick).
         Consumed by exactly one batch; cleared afterwards."""
         self._tick = tick
+        n = len(np.asarray(cids, np.int64))
         self._bc = (np.asarray(cids, np.int64),
                     np.asarray(op_ids, np.int64),
                     np.asarray(phases, np.int64),
                     np.asarray(label_ids, np.int64),
-                    np.asarray(epochs, np.int64))
+                    np.asarray(epochs, np.int64),
+                    np.full(n, -1, np.int64) if causes is None
+                    else np.asarray(causes, np.int64),
+                    np.zeros(n, np.int64) if bgs is None
+                    else np.asarray(bgs, np.int64))
 
     def pause(self):
         self.paused = True
@@ -269,6 +291,11 @@ class VerbTracer:
         b["arg"][i] = _i64(arg)
         b["val"][i] = _i64(val)
         b["old"][i] = _i64(old)
+        c = self._cause
+        if c < 0 and self.pool.migrations:
+            c = self._mig_cause
+        b["cause"][i] = c
+        b["bg"][i] = self._bg
         self.n += 1
 
     def _emit_vec(self, verb, regions, replicas, offs, ns, oks,
@@ -282,14 +309,21 @@ class VerbTracer:
         b["seq"][idx] = self.n + np.arange(m)
         b["tick"][idx] = self._tick
         if bc is not None and len(bc[0]) == m:
-            cids, op_ids, phases, label_ids, epochs = bc
+            cids, op_ids, phases, label_ids, epochs, causes, bgs = bc
         else:   # un-attributed batch traffic (e.g. migration bulk copy)
             cids = op_ids = phases = -1
             label_ids, epochs = 0, -1
+            causes, bgs = -1, 0
+        if self.pool.migrations:
+            # dual-write window: stamp verbs that carry no issue-side cause
+            causes = np.where(np.asarray(causes, np.int64) < 0,
+                              self._mig_cause, causes)
         b["cid"][idx] = cids
         b["op_id"][idx] = op_ids
         b["phase"][idx] = phases
         b["label"][idx] = label_ids
+        b["cause"][idx] = causes
+        b["bg"][idx] = bgs
         b["verb"][idx] = verb
         b["region"][idx] = np.asarray(regions, np.int64)
         b["replica"][idx] = np.asarray(replicas, np.int64)
@@ -329,7 +363,11 @@ class VerbTracer:
     def load(path):
         """Load a saved trace -> (events dict, labels list)."""
         with np.load(path, allow_pickle=True) as z:
-            ev = {f: z[f] for f in FIELDS}
+            n = len(z["seq"])
+            # traces saved before the cause/bg columns load with defaults
+            ev = {f: z[f] if f in z.files
+                  else np.full(n, -1 if f == "cause" else 0, np.int64)
+                  for f in FIELDS}
             labels = [str(x) for x in z["_labels"]]
         return ev, labels
 

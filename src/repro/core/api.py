@@ -462,6 +462,21 @@ class SimBackend:
             # benchmarks.common.fleet_dmconfig(ordered=True) does)
             "ord_full_drops": self.client.ord_full_drops,
             **{k: h.value for k, h in self._handles.items()},
+            **self._hot_stats(),
+        }
+
+    def _hot_stats(self) -> Dict[str, Any]:
+        """Hot-key monitor summary (cluster-wide, not per-cid) when the
+        obs hub carries one — empty otherwise so baseline stats dicts are
+        unchanged."""
+        obs = self.sched.obs
+        if obs is None or obs.hotspot is None:
+            return {}
+        hs = obs.hotspot
+        return {
+            "hot_keys": [k for k, _c, _e in hs.sketch.top(8)],
+            "hot_theta_milli": int(round(hs.theta * 1000)),
+            "hot_regime": hs.regime,
         }
 
 

@@ -24,7 +24,9 @@ import numpy as np
 from . import layout as L
 from . import ordered
 from . import race
-from .events import (EXISTS, FULL, NOT_FOUND, OK, MasterCall, OpResult, Phase,
+from .events import (CAUSE_CAS_LOST, CAUSE_FP_COLLISION, CAUSE_FULL,
+                     CAUSE_LOSE_POLL, CAUSE_NONE, CAUSE_STALE_EPOCH,
+                     EXISTS, FULL, NOT_FOUND, OK, MasterCall, OpResult, Phase,
                      Verb)
 from .heap import FIRST_DATA_REGION, INDEX_REGION, META_REGION, \
     META_WORDS_PER_CLIENT, DMConfig, DMPool
@@ -226,6 +228,7 @@ class FuseeClient:
             return FULL
         st = self._sc_state(sc)
         attempts = 0
+        cause = CAUSE_NONE
         while len(st.free) < 2:
             mn = self._alloc_mn_rr % self.cfg.num_mns
             self._alloc_mn_rr += 1
@@ -234,8 +237,10 @@ class FuseeClient:
                 return FULL
             if not self.pool.mns[mn].alive:
                 continue
-            res = yield Phase([Verb("alloc", mn=mn)], label="alloc")
+            res = yield Phase([Verb("alloc", mn=mn)], label="alloc",
+                              cause=cause)
             if res[0] is None:
+                cause = CAUSE_FULL   # failed grant: re-asking under pressure
                 continue
             region, blk = res[0]
             base = self.pool.block_base(blk)
@@ -336,7 +341,9 @@ class FuseeClient:
         attempts = 0
         while pending and attempts <= MAX_OP_RETRIES:
             res = yield Phase([v for v, _ in pending], label=label,
-                              background=True)
+                              background=True,
+                              cause=CAUSE_STALE_EPOCH if attempts
+                              else CAUSE_NONE)
             nxt = []
             for (v, mn), r in zip(pending, res):
                 if r is not None:
@@ -350,17 +357,21 @@ class FuseeClient:
 
     # ------------------------------------------------- SNAPSHOT WRITE (Alg 1)
     def _snapshot_write(self, region: int, slot_off: int, v_old: int,
-                        v_new: int, obj_ptr: int, obj_sc: int, prev_ptr: int):
+                        v_new: int, obj_ptr: int, obj_sc: int, prev_ptr: int,
+                        cause: str = CAUSE_NONE):
         """Returns (status, rule, committed_value_now_in_primary_or_None).
 
         ``region`` is the key's index shard (shard routing); the whole
         round — backup broadcast, rule 3 check, primary CAS, fail path —
         addresses that shard's replicas.  ``obj_ptr/obj_sc/prev_ptr``
         identify this writer's object so the commit (phase 3) and loser
-        used-bit reset target the embedded log.
+        used-bit reset target the embedded log.  ``cause`` carries the
+        op-level retry cause into this round's opening phase so the span
+        profiler attributes re-entered SNAPSHOT rounds to what forced them.
         """
         if self.replication_mode == "cr":
-            return (yield from self._cr_write(region, slot_off, v_old, v_new))
+            return (yield from self._cr_write(region, slot_off, v_old, v_new,
+                                              cause))
         r = len(self.pool.placement[region])   # this shard's replica count
         extra = 0
         if r == 1:
@@ -368,11 +379,12 @@ class FuseeClient:
             # skipped (§6.1, single-index-replica comparison mode).
             res = yield Phase([Verb("cas", region=region, replica=0,
                                     off=slot_off, exp=v_old, new=v_new)],
-                              label="4:cas_primary")
+                              label="4:cas_primary", cause=cause)
             if res[0] is None:
                 return (yield from self._fail_path(region, slot_off, v_old,
                                                    v_new, obj_ptr, obj_sc,
-                                                   prev_ptr))
+                                                   prev_ptr,
+                                                   cause=CAUSE_STALE_EPOCH))
             if int(res[0]) == int(v_old):
                 return OK, R1, v_new
             if int(res[0]) == int(v_new) and not UNSAFE_LOSE_ON_OWN_COMMIT:
@@ -382,13 +394,14 @@ class FuseeClient:
                 return OK, "MASTER_WIN", v_new
             # lost the race; linearize just before the winner
             yield Phase(self._reset_used_verbs(obj_ptr, obj_sc, prev_ptr),
-                        label="loser_reset")
+                        label="loser_reset", cause=CAUSE_CAS_LOST)
             return OK, LOSE, int(res[0])
 
         # Phase 2: broadcast CAS to all backups (Alg 1, line 7)
         res = yield Phase([Verb("cas", region=region, replica=i,
                                 off=slot_off, exp=v_old, new=v_new)
-                           for i in range(1, r)], label="2:cas_backups")
+                           for i in range(1, r)], label="2:cas_backups",
+                          cause=cause)
         v_list = [None if v is None else
                   (int(v_new) if int(v) == int(v_old) else int(v))
                   for v in res]
@@ -416,7 +429,8 @@ class FuseeClient:
 
         if win == FAILV:
             return (yield from self._fail_path(region, slot_off, v_old, v_new,
-                                               obj_ptr, obj_sc, prev_ptr))
+                                               obj_ptr, obj_sc, prev_ptr,
+                                               cause=CAUSE_STALE_EPOCH))
 
         if win in (R1, R2, R3):
             # Phase 3: commit the embedded log (write old_value + CRC into our
@@ -443,14 +457,16 @@ class FuseeClient:
                 # master's arbitration (Alg 4) instead.
                 return (yield from self._fail_path(region, slot_off, v_old,
                                                    v_new, obj_ptr, obj_sc,
-                                                   prev_ptr))
+                                                   prev_ptr,
+                                                   cause=CAUSE_STALE_EPOCH))
             res = yield Phase([Verb("cas", region=region, replica=0,
                                     off=slot_off, exp=v_old, new=v_new)],
                               label="4:cas_primary")
             if res[0] is None:
                 return (yield from self._fail_path(region, slot_off, v_old,
                                                    v_new, obj_ptr, obj_sc,
-                                                   prev_ptr))
+                                                   prev_ptr,
+                                                   cause=CAUSE_STALE_EPOCH))
             if int(res[0]) != int(v_old):
                 # The primary moved after our rule check: a concurrent round
                 # (possibly for a DIFFERENT key colliding on this slot)
@@ -460,12 +476,13 @@ class FuseeClient:
                 # value (lose; op_insert's empty-slot guard re-runs us).
                 return (yield from self._fail_path(region, slot_off, v_old,
                                                    v_new, obj_ptr, obj_sc,
-                                                   prev_ptr))
+                                                   prev_ptr,
+                                                   cause=CAUSE_CAS_LOST))
             return OK, win, v_new
 
         if win == FINISH:
             yield Phase(self._reset_used_verbs(obj_ptr, obj_sc, prev_ptr),
-                        label="loser_reset")
+                        label="loser_reset", cause=CAUSE_CAS_LOST)
             return OK, FINISH, None
 
         # LOSE: poll the primary until the winner commits (Alg 1, lines 17-22)
@@ -476,14 +493,16 @@ class FuseeClient:
                 # long (crashed mid-commit?): escalate to the master
                 return (yield from self._fail_path(region, slot_off, v_old,
                                                    v_new, obj_ptr, obj_sc,
-                                                   prev_ptr))
+                                                   prev_ptr,
+                                                   cause=CAUSE_LOSE_POLL))
             polls += 1
             chk = yield Phase([self._slot_verb_read_primary(region, slot_off)],
-                              label="lose_poll")
+                              label="lose_poll", cause=CAUSE_LOSE_POLL)
             if chk[0] is None:
                 return (yield from self._fail_path(region, slot_off, v_old,
                                                    v_new, obj_ptr, obj_sc,
-                                                   prev_ptr))
+                                                   prev_ptr,
+                                                   cause=CAUSE_STALE_EPOCH))
             if int(chk[0][0]) != int(v_old):
                 break
         if int(chk[0][0]) == int(v_new) and not UNSAFE_LOSE_ON_OWN_COMMIT:
@@ -497,10 +516,11 @@ class FuseeClient:
         # reset our used bit before returning so recovery never redoes a
         # returned (lost) op — required for linearizability under redo (§5.3).
         yield Phase(self._reset_used_verbs(obj_ptr, obj_sc, prev_ptr),
-                    label="loser_reset")
+                    label="loser_reset", cause=CAUSE_CAS_LOST)
         return OK, LOSE, int(chk[0][0])
 
-    def _cr_write(self, region: int, slot_off: int, v_old: int, v_new: int):
+    def _cr_write(self, region: int, slot_off: int, v_old: int, v_new: int,
+                  cause: str = CAUSE_NONE):
         """FUSEE-CR baseline (§6.1): sequentially CAS every replica.
 
         One CAS per RTT, primary last — latency grows linearly with r.
@@ -510,12 +530,13 @@ class FuseeClient:
             while True:
                 res = yield Phase([Verb("cas", region=region, replica=i,
                                         off=slot_off, exp=v_old, new=v_new)],
-                                  label=f"cr:cas_{i}")
+                                  label=f"cr:cas_{i}", cause=cause)
                 if res[0] is None:
                     return FAILV, None, None
                 old = int(res[0])
                 if old == int(v_old) or old == int(v_new):
                     break
+                cause = CAUSE_CAS_LOST   # lost this replica's round: re-CAS
                 if i == r - 1:
                     # lost on the first replica: adopt last-writer-wins by
                     # retrying on the new value
@@ -542,15 +563,21 @@ class FuseeClient:
 
     # ------------------------------------------------------- failure path
     def _fail_path(self, region: int, slot_off: int, v_old: int, v_new: int,
-                   obj_ptr: int, obj_sc: int, prev_ptr: int):
-        """Alg 4 lines 34-38: ask the master, retry if our write is too new."""
+                   obj_ptr: int, obj_sc: int, prev_ptr: int,
+                   cause: str = CAUSE_STALE_EPOCH):
+        """Alg 4 lines 34-38: ask the master, retry if our write is too new.
+
+        ``cause`` records WHY the round escalated (bounced verb vs lost
+        CAS vs stalled LOSE poll) so the wait-master stall beats are
+        attributed to the triggering event, not lumped together.
+        """
         while True:
             ans = yield MasterCall("fail_query", payload=dict(
                 region=region, slot_off=slot_off, v_old=v_old, v_new=v_new,
                 cid=self.cid))
             if ans is None:
                 # master has not yet detected/recovered; wait a beat
-                yield Phase([], label="wait_master")
+                yield Phase([], label="wait_master", cause=cause)
                 continue
             self.epoch = self.pool.epoch
             self.notified_prepare = False
@@ -563,14 +590,16 @@ class FuseeClient:
                 return "RETRY", None, v_dec
             # someone else's newer value was committed; we linearize before it
             yield Phase(self._reset_used_verbs(obj_ptr, obj_sc, prev_ptr),
-                        label="loser_reset")
+                        label="loser_reset", cause=CAUSE_CAS_LOST)
             return OK, "MASTER_LOSE", v_dec
 
     # ------------------------------------------------------------ index read
-    def _read_index_for(self, key: int, extra_verbs: List[Verb]):
+    def _read_index_for(self, key: int, extra_verbs: List[Verb],
+                        cause: str = CAUSE_NONE):
         """Phase 1 helper: read both candidate buckets of the key's index
         shard (+ any op-specific verbs folded into the same doorbell
         batch).  Shard routing happens here for every op's index read.
+        ``cause`` marks re-entered rounds (op-level retry loops).
 
         Returns (bucket_words, base_offs, extra_results).
         """
@@ -583,7 +612,7 @@ class FuseeClient:
                       n=cfg.slots_per_bucket),
                  Verb("read", region=region, replica=0, off=o2,
                       n=cfg.slots_per_bucket)] + extra_verbs
-        res = yield Phase(verbs, label="1:read_index")
+        res = yield Phase(verbs, label="1:read_index", cause=cause)
         if res[0] is None or res[1] is None:
             return None, None, res[2:]
         return ([list(res[0]), list(res[1])], [o1, o2], res[2:])
@@ -596,7 +625,7 @@ class FuseeClient:
             cands += race.find_matches(words, base, fp)
         return cands
 
-    def _verify_candidates(self, key: int, cands):
+    def _verify_candidates(self, key: int, cands, cause: str = CAUSE_NONE):
         """Read all fp-matching KV objects in one batch; return the match.
 
         Returns (slot_off, slot_val, obj, stale).  ``stale`` means some
@@ -609,7 +638,7 @@ class FuseeClient:
             return None, None, None, False
         verbs = [self._read_obj_verb(L.slot_ptr(v), L.slot_size_class(v))
                  for (_, v) in cands]
-        res = yield Phase(verbs, label="2:read_kv")
+        res = yield Phase(verbs, label="2:read_kv", cause=cause)
         stale = False
         for (off_v, raw) in zip(cands, res):
             if raw is None:
@@ -666,13 +695,16 @@ class FuseeClient:
                             ce.slot_val = cur_slot
                             return OpResult(OK, value=obj2["value"], rtts=2)
             # fall through to the miss path
+        cause = CAUSE_NONE
         for _attempt in range(8):
-            out = yield from self._read_index_for(key, [])
+            out = yield from self._read_index_for(key, [], cause=cause)
             buckets, base_offs, _ = out
             if buckets is None:
                 return (yield from self._search_degraded(key))
             cands = self._locate(key, buckets, base_offs)
-            slot_off, slot_val, obj, stale = yield from self._verify_candidates(key, cands)
+            slot_off, slot_val, obj, stale = yield from self._verify_candidates(
+                key, cands, cause=cause)
+            cause = CAUSE_FP_COLLISION   # only stale re-reads loop back here
             if obj is not None:
                 if self.enable_cache:
                     e = self.cache.setdefault(key, CacheEntry(slot_off, slot_val))
@@ -744,13 +776,14 @@ class FuseeClient:
         offs = [race.bucket_off(b1, cfg.slots_per_bucket),
                 race.bucket_off(b2, cfg.slots_per_bucket)]
         attempts = 0
+        cause = CAUSE_STALE_EPOCH   # entered because the primary read failed
         while True:
             attempts += 1
             r = len(self.pool.placement[region])  # re-read: may change
             verbs = [Verb("read", region=region, replica=i, off=o,
                           n=cfg.slots_per_bucket)
                      for o in offs for i in range(r)]
-            res = yield Phase(verbs, label="deg:read_all")
+            res = yield Phase(verbs, label="deg:read_all", cause=cause)
             per_bucket, bounced = {}, False
             for j, o in enumerate(offs):
                 reps = [res[j * r + i] for i in range(r)]
@@ -769,14 +802,17 @@ class FuseeClient:
                     # genuinely unreachable (> r-1 failures): best effort
                     return OpResult(NOT_FOUND, rtts=2)
                 yield MasterCall("fail_report", payload=dict(cid=self.cid))
-                yield Phase([], label="wait_membership")
+                yield Phase([], label="wait_membership",
+                            cause=CAUSE_STALE_EPOCH)
+                cause = CAUSE_STALE_EPOCH
                 continue
             buckets = [per_bucket[offs[0]], per_bucket[offs[1]]]
             cands = self._locate(key, buckets, offs)
             slot_off, slot_val, obj, stale = \
-                yield from self._verify_candidates(key, cands)
+                yield from self._verify_candidates(key, cands, cause=cause)
             if obj is None:
                 if stale and attempts <= MAX_OP_RETRIES:
+                    cause = CAUSE_FP_COLLISION
                     continue             # mid-write / bounced object read
                 return OpResult(NOT_FOUND, rtts=3)
             return OpResult(OK, value=obj["value"], rtts=3)
@@ -804,9 +840,11 @@ class FuseeClient:
         region = self._index_region(key)
         v_new = int(L.pack_slot(fp, sc, ptr))
         retries = 0
+        cause = CAUSE_NONE
         while True:
             # Phase 1: write KV (all replicas) + read both index buckets
-            out = yield from self._read_index_for(key, self._write_obj_verbs(ptr, words))
+            out = yield from self._read_index_for(
+                key, self._write_obj_verbs(ptr, words), cause=cause)
             buckets, base_offs, wres = out
             if buckets is None or any(w is None for w in wres):
                 # index read or an object-replica write bounced: a dead MN
@@ -815,20 +853,24 @@ class FuseeClient:
                 # replica hole would lose the write on the next re-homing
                 # — report, wait for the membership commit, start over.
                 yield MasterCall("fail_report", payload=dict(cid=self.cid))
-                yield Phase([], label="wait_membership")
+                yield Phase([], label="wait_membership",
+                            cause=CAUSE_STALE_EPOCH)
+                cause = CAUSE_STALE_EPOCH
                 continue
             # duplicate key?  -> treat as racing UPDATE on the existing slot
             cands = self._locate(key, buckets, base_offs)
             target = None
             v_old = 0
             if cands:
-                slot_off2, slot_val2, obj2, stale = yield from self._verify_candidates(key, cands)
+                slot_off2, slot_val2, obj2, stale = \
+                    yield from self._verify_candidates(key, cands, cause=cause)
                 if obj2 is not None:
                     target, v_old = slot_off2, slot_val2
                 elif stale:
                     retries += 1
                     if retries > MAX_OP_RETRIES:
                         return OpResult(FULL)
+                    cause = CAUSE_FP_COLLISION
                     continue
             if target is None:
                 empty = None
@@ -840,11 +882,12 @@ class FuseeClient:
                     return OpResult(FULL)
                 target, v_old = empty, 0
             status, rule, fin = yield from self._snapshot_write(
-                region, target, v_old, v_new, ptr, sc, prev_ptr)
+                region, target, v_old, v_new, ptr, sc, prev_ptr, cause=cause)
             if status == "RETRY":
                 retries += 1
                 if retries > MAX_OP_RETRIES:
                     return OpResult(FULL)
+                cause = CAUSE_CAS_LOST
                 continue
             if status != OK:
                 return OpResult(status, rule=rule)
@@ -860,6 +903,7 @@ class FuseeClient:
                 retries += 1
                 if retries > MAX_OP_RETRIES:
                     return OpResult(FULL)
+                cause = CAUSE_CAS_LOST
                 continue
             bg = []
             if rule in (R1, R2, R3, "MASTER_WIN", "CR") and v_old != 0 \
@@ -901,6 +945,7 @@ class FuseeClient:
         obs = self.pool._obs
         if obs is not None:
             obs.heat_key64(key)      # buffered; hashed vectorized at flush
+        cause = CAUSE_NONE
         while True:
             target = v_old = None
             if use_cache and retries == 0:
@@ -909,13 +954,16 @@ class FuseeClient:
                          + [Verb("read", region=region, replica=0,
                                  off=ce.slot_off, n=1),
                             self._read_obj_verb(L.slot_ptr(sv), L.slot_size_class(sv))])
-                res = yield Phase(verbs, label="1:write+cached_read")
+                res = yield Phase(verbs, label="1:write+cached_read",
+                                  cause=cause)
                 nrep = self._obj_region_replicas(L.ptr_region(ptr))
                 if any(w is None for w in res[:nrep]):
                     # an object-replica write bounced (dead MN / stale
                     # epoch): never ack with a replica hole — see op_insert
                     yield MasterCall("fail_report", payload=dict(cid=self.cid))
-                    yield Phase([], label="wait_membership")
+                    yield Phase([], label="wait_membership",
+                                cause=CAUSE_STALE_EPOCH)
+                    cause = CAUSE_STALE_EPOCH
                     continue
                 slot_raw, kv_raw = res[nrep], res[nrep + 1]
                 if slot_raw is not None and kv_raw is not None:
@@ -936,24 +984,30 @@ class FuseeClient:
                                     target, v_old = ce.slot_off, cur
                 elif slot_raw is None:
                     yield MasterCall("fail_report", payload=dict(cid=self.cid))
-                    yield Phase([], label="wait_membership")
+                    yield Phase([], label="wait_membership",
+                                cause=CAUSE_STALE_EPOCH)
+                    cause = CAUSE_STALE_EPOCH
                     continue
             if target is None:
                 extra = self._write_obj_verbs(ptr, words) if (not use_cache or retries > 0) else []
-                out = yield from self._read_index_for(key, extra)
+                out = yield from self._read_index_for(key, extra, cause=cause)
                 buckets, base_offs, wres = out
                 if buckets is None or any(w is None for w in wres):
                     yield MasterCall("fail_report", payload=dict(cid=self.cid))
-                    yield Phase([], label="wait_membership")
+                    yield Phase([], label="wait_membership",
+                                cause=CAUSE_STALE_EPOCH)
+                    cause = CAUSE_STALE_EPOCH
                     continue
                 cands = self._locate(key, buckets, base_offs)
-                slot_off2, slot_val2, obj2, stale = yield from self._verify_candidates(key, cands)
+                slot_off2, slot_val2, obj2, stale = \
+                    yield from self._verify_candidates(key, cands, cause=cause)
                 if obj2 is None:
                     if stale:
                         retries += 1
                         use_cache = False
                         if retries > MAX_OP_RETRIES:
                             return OpResult(FULL)
+                        cause = CAUSE_FP_COLLISION
                         continue
                     yield from self._bg_cleanup(
                         self._reset_used_verbs(ptr, sc, prev_ptr),
@@ -961,12 +1015,13 @@ class FuseeClient:
                     return OpResult(NOT_FOUND)
                 target, v_old = slot_off2, slot_val2
             status, rule, fin = yield from self._snapshot_write(
-                region, target, v_old, v_new, ptr, sc, prev_ptr)
+                region, target, v_old, v_new, ptr, sc, prev_ptr, cause=cause)
             if status == "RETRY":
                 retries += 1
                 use_cache = False
                 if retries > MAX_OP_RETRIES:
                     return OpResult(FULL)
+                cause = CAUSE_CAS_LOST
                 continue
             if status != OK:
                 return OpResult(status, rule=rule)
@@ -994,31 +1049,39 @@ class FuseeClient:
         ptr, sc, prev_ptr, words = prep
         region = self._index_region(key)
         retries = 0
+        cause = CAUSE_NONE
         while True:
-            out = yield from self._read_index_for(key, self._write_obj_verbs(ptr, words))
+            out = yield from self._read_index_for(
+                key, self._write_obj_verbs(ptr, words), cause=cause)
             buckets, base_offs, wres = out
             if buckets is None or any(w is None for w in wres):
                 yield MasterCall("fail_report", payload=dict(cid=self.cid))
-                yield Phase([], label="wait_membership")
+                yield Phase([], label="wait_membership",
+                            cause=CAUSE_STALE_EPOCH)
+                cause = CAUSE_STALE_EPOCH
                 continue
             cands = self._locate(key, buckets, base_offs)
-            slot_off2, slot_val2, obj2, stale = yield from self._verify_candidates(key, cands)
+            slot_off2, slot_val2, obj2, stale = \
+                yield from self._verify_candidates(key, cands, cause=cause)
             if obj2 is None:
                 if stale:
                     retries += 1
                     if retries > MAX_OP_RETRIES:
                         return OpResult(FULL)
+                    cause = CAUSE_FP_COLLISION
                     continue
                 yield from self._bg_cleanup(
                     self._reset_used_verbs(ptr, sc, prev_ptr),
                     "abort_reset")
                 return OpResult(NOT_FOUND)
             status, rule, fin = yield from self._snapshot_write(
-                region, slot_off2, slot_val2, 0, ptr, sc, prev_ptr)
+                region, slot_off2, slot_val2, 0, ptr, sc, prev_ptr,
+                cause=cause)
             if status == "RETRY":
                 retries += 1
                 if retries > MAX_OP_RETRIES:
                     return OpResult(FULL)
+                cause = CAUSE_CAS_LOST
                 continue
             if status != OK:
                 return OpResult(status, rule=rule)

@@ -46,12 +46,29 @@ class Verb:
         return reps[self.replica]
 
 
+# Typed retry/stall cause vocabulary (obs/spans.py span trees): why a
+# phase was (re)issued.  "" = first-attempt protocol work.  Client state
+# machines stamp these on the Phase; the verb tracer records them per row
+# so the causal profiler can attribute every RTT of a retry loop to the
+# event that forced it.
+CAUSE_NONE = ""
+CAUSE_CAS_LOST = "cas_lost"          # lost a SNAPSHOT/empty-slot CAS round
+CAUSE_FP_COLLISION = "fp_collision"  # fp matched, object didn't verify (stale/collision)
+CAUSE_STALE_EPOCH = "stale_epoch"    # §5.2 lease bounce / dead-MN FAIL -> reissue
+CAUSE_LOSE_POLL = "lose_poll"        # SNAPSHOT loser polling the winner's commit
+CAUSE_FULL = "full"                  # allocation pressure: re-ask after failed grant
+CAUSE_MIG_DUAL = "mig_dual_write"    # executed inside a live-migration dual-write window
+CAUSES = (CAUSE_NONE, CAUSE_CAS_LOST, CAUSE_FP_COLLISION, CAUSE_STALE_EPOCH,
+          CAUSE_LOSE_POLL, CAUSE_FULL, CAUSE_MIG_DUAL)
+
+
 @dataclass
 class Phase:
     verbs: List[Verb]
     label: str = ""
     background: bool = False   # off the op's latency critical path (§4.4 frees,
                                # loser used-bit resets) but still bandwidth-counted
+    cause: str = CAUSE_NONE    # typed retry/stall cause (see CAUSES above)
 
 
 @dataclass

@@ -31,6 +31,7 @@ fleet ticks; it captures only step-mode decisions.
 """
 from __future__ import annotations
 
+import time
 from itertools import chain
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -106,6 +107,14 @@ class FleetEngine:
                               for k in _VERB_ORDER}
         # memoized combined shadow: (per-backend fingerprints, entries, table)
         self._probe_memo = (None, None, None)
+        # wall-clock per-tick phase accumulators (seconds): coord-build /
+        # sweep / scatter / bookkeeping.  Host- and path-dependent by
+        # nature, so they live on the engine, NOT in the metrics registry —
+        # same-seed registry snapshots stay byte-identical.  Folded into
+        # the fused-tick phase breakdown by obs/profile.py.
+        self._tp = [0.0, 0.0, 0.0, 0.0]
+        self._tp_ticks = 0
+        self._fused_tp = (0.0, 0.0)
 
     @property
     def counters(self) -> LegacyCounters:
@@ -121,6 +130,8 @@ class FleetEngine:
         Returns the number of verbs + master calls executed."""
         sched = self.sched
         sched.begin_tick()
+        _pc = time.perf_counter
+        t_coord0 = _pc()
         by_kind: Dict[str, List[Tuple[int, Any, int, Any]]] = {}
         master_runs: List[Tuple[int, Any]] = []
         lanes = 0
@@ -161,10 +172,15 @@ class FleetEngine:
             else:
                 live_by_kind[kind] = [it for it in items
                                       if not (0 <= it[3].epoch != epoch)]
+        coord = _pc() - t_coord0
+        sweep = scatter = 0.0
         fused_res: Dict[str, list] = {}
         if use_fused and any(live_by_kind.get(k)
                              for k in ("read", "write", "cas", "faa")):
             fused_res = self._exec_fused(live_by_kind)
+            d_coord, d_sweep = self._fused_tp
+            coord += d_coord
+            sweep += d_sweep
             self._c_fused.value += 1
         elif lanes and self.fused:
             self._c_fallback.value += 1
@@ -176,7 +192,10 @@ class FleetEngine:
             if kind in fused_res:
                 results = fused_res[kind]
             else:
+                t0 = _pc()
                 results = self._exec_kind(kind, live) if live else []
+                sweep += _pc() - t0
+            t0 = _pc()
             res_by_id = {id(it): r for it, r in zip(live, results)}
             for it in items:
                 cid, run, idx, _verb = it
@@ -184,9 +203,11 @@ class FleetEngine:
                 run.pending -= 1
                 if run.pending == 0:
                     finished.append((cid, run))
+            scatter += _pc() - t0
         # resume generators only after every verb of the tick executed, in
         # deterministic (gather) order: master answers first (step() gives
         # master_q priority), then completed phases
+        t0 = _pc()
         for cid, run in master_runs:
             call, run.master_call = run.master_call, None
             sched._advance(cid, run, sched._master_dispatch(call))
@@ -195,7 +216,34 @@ class FleetEngine:
         obs = sched.obs
         if obs is not None:
             obs.on_fleet_tick(self, by_kind)
+        tp = self._tp
+        tp[0] += coord
+        tp[1] += sweep
+        tp[2] += scatter
+        tp[3] += _pc() - t0
+        self._tp_ticks += 1
         return executed
+
+    def tick_phase_profile(self) -> Dict[str, float]:
+        """Cumulative wall-clock breakdown of ``tick()``: coord-build
+        (lane gather + stale-epoch filter + fused coordinate arrays),
+        sweep (the pool array dispatch — ``exec_fused_tick`` or the
+        per-kind ``*_batch`` oracle), scatter (result distribution back
+        onto the runs), bookkeeping (generator resumes + obs sampling).
+        Wall-clock and host-dependent — reported here, never through the
+        metrics registry (same-seed snapshots stay byte-identical).  This
+        is what makes ``roofline.py``'s ms/tick numbers explainable."""
+        names = ("coord_build", "sweep", "scatter", "bookkeeping")
+        total = sum(self._tp)
+        out: Dict[str, float] = {n: self._tp[i]
+                                 for i, n in enumerate(names)}
+        for i, n in enumerate(names):
+            out[n + "_frac"] = self._tp[i] / total if total > 0 else 0.0
+        out["total_s"] = total
+        out["ticks"] = float(self._tp_ticks)
+        out["us_per_tick"] = (1e6 * total / self._tp_ticks
+                              if self._tp_ticks else 0.0)
+        return out
 
     def _exec_kind(self, kind: str, items) -> list:  # lint: allow-epoch (tick() drops stale-epoch verbs before dispatch)
         pool = self.sched.pool
@@ -210,7 +258,10 @@ class FleetEngine:
                 [r.record.op_id for (_c, r, _i, _v) in items],
                 [r.phase_no for (_c, r, _i, _v) in items],
                 [tr.intern(r.phase_label) for (_c, r, _i, _v) in items],
-                [v.epoch for v in verbs])
+                [v.epoch for v in verbs],
+                [tr.intern(r.phase_cause) if r.phase_cause else -1
+                 for (_c, r, _i, _v) in items],
+                [1 if r.phase_bg else 0 for (_c, r, _i, _v) in items])
         if kind == "read":
             self._c_array.value += 1
             shard_set = pool.index_region_set
@@ -259,6 +310,7 @@ class FleetEngine:
         are MN-CPU RPCs, not array verbs; they stay on the per-item path.
         """
         pool = self.sched.pool
+        t_build0 = time.perf_counter()
 
         def _i64(vals, k):
             # verb coords go straight to int64 arrays (asarray in the pool
@@ -323,9 +375,13 @@ class FleetEngine:
                     _i64((v.off for v in verbs), k),
                     _u64(verbs, "delta", k))
         self._c_array.value += 1
+        t_exec0 = time.perf_counter()
         r, w, c, f = pool.exec_fused_tick(reads, writes, cass, faas)
-        return {"read": r, "write": [True if ok else None for ok in w],
-                "cas": c, "faa": f}
+        out = {"read": r, "write": [True if ok else None for ok in w],
+               "cas": c, "faa": f}
+        t_end = time.perf_counter()
+        self._fused_tp = (t_exec0 - t_build0, t_end - t_exec0)
+        return out
 
     # ------------------------------------------------------------- driving
     def run(self, max_ticks: int = 1_000_000) -> int:
@@ -390,7 +446,8 @@ class FleetEngine:
             salts = np.empty(len(q), np.uint32)
             for (be, _k), (s, m) in zip(wants, spans):
                 salts[s:s + m] = np.uint32(_cid_salt(be.cid))
-            obs.heat_keys(hash32_np(qa ^ salts, 1))
+            unsalted = qa ^ salts
+            obs.heat_keys(hash32_np(unsalted, 1), keys32=unsalted)
         if not entries_all or not q:
             return [[None] * n for (_s, n) in spans]
         ptr, found = self._race_lookup(np.array(q, np.uint32), shadow)

@@ -173,6 +173,8 @@ class _Running:
     # (repro.analysis.trace) when one is attached to the pool
     phase_no: int = 0
     phase_label: str = ""
+    phase_cause: str = ""                  # typed retry/stall cause (CAUSES)
+    phase_bg: bool = False
 
 
 class _ClientPipe:
@@ -354,6 +356,8 @@ class Scheduler:
                 run.record.rtts += 1
             run.phase_no = run.record.rtts + run.record.bg_rtts
             run.phase_label = item.label
+            run.phase_cause = item.cause
+            run.phase_bg = item.background
             if not item.verbs:   # empty phase = pure wait (1 RTT beat)
                 send_value = []
                 continue
@@ -434,7 +438,9 @@ class Scheduler:
         tr = self.pool._tracer
         if tr is not None:
             tr.set_ctx(self.tick, cid, run.record.op_id, run.phase_no,
-                       tr.intern(run.phase_label), verb.epoch)
+                       tr.intern(run.phase_label), verb.epoch,
+                       tr.intern(run.phase_cause) if run.phase_cause else -1,
+                       1 if run.phase_bg else 0)
         run.results[idx] = self._exec_verb(verb, cid)
         run.pending -= 1
         if run.pending == 0:

@@ -386,7 +386,10 @@ class FuseeCluster:
         """Registry snapshot plus a latency summary: for every op-latency
         histogram, conservative p50/p99/p999 (bucket upper edges) and the
         sample count.  Deterministic — ``json.dumps`` of this snapshot is
-        byte-identical across same-(seed, config, schedule) runs."""
+        byte-identical across same-(seed, config, schedule) runs.  When
+        the hot-key monitor is enabled (``enable_hotspot``), a
+        ``"hotspot"`` block (top-k keys, zipf-θ, imbalance, regime) rides
+        along — int-valued, so the determinism contract is unchanged."""
         snap = self.obs.snapshot()
         reg = self.scheduler.metrics
         pct: Dict[str, Dict] = {}
@@ -396,7 +399,35 @@ class FuseeCluster:
                          "p99": h.percentile(0.99),
                          "p999": h.percentile(0.999)}
         snap["percentiles"] = pct
+        if self.obs.hotspot is not None:
+            snap["hotspot"] = self.obs.hotspot.snapshot()
         return snap
+
+    def enable_hotspot(self, **kw):
+        """Turn on the streaming hot-key/skew monitor (obs/hotspot.py):
+        space-saving top-k over the heat-touch key stream, online zipf-θ,
+        EWMA shard/MN imbalance, and typed ``regime`` flight events on
+        threshold crossings.  Opt-in: the default hub carries no monitor,
+        so baseline snapshots and the attached-overhead claim are
+        unaffected.  Returns the ``HotKeyMonitor``."""
+        return self.obs.enable_hotspot(**kw)
+
+    def profile(self, *, include_bg: bool = False) -> Dict:
+        """One-call causal profile of everything recorded so far: span
+        trees (obs/spans.py) folded into the critical-path RTT-attribution
+        report (obs/profile.py).  Requires ``attach_tracer()`` — the
+        flight recorder alone has no per-verb rows.  When this cluster
+        drives a ``FleetEngine`` the wall-clock tick-phase split rides
+        along under ``"tick_phases"``."""
+        from ..obs.profile import critical_path_report
+        from ..obs.spans import spans_from_cluster
+        ss = spans_from_cluster(self)
+        report = critical_path_report(ss, include_bg=include_bg)
+        report["spans"] = ss
+        fleet = getattr(self, "_fleet", None)
+        if fleet is not None:
+            report["tick_phases"] = fleet.tick_phase_profile()
+        return report
 
     # ---------------------------------------------------------------- health
     def health(self) -> ClusterHealth:

@@ -21,8 +21,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from .flight import (EV_BEGIN, EV_FAULT, EV_MIG, EV_RECOVERY, EV_SETTLE,
-                     FIELDS, FlightRecorder)
+from .flight import (EV_BEGIN, EV_FAULT, EV_MIG, EV_RECOVERY, EV_REGIME,
+                     EV_SETTLE, FIELDS, FlightRecorder)
 
 __all__ = ["flight_to_perfetto", "load_perfetto", "load_flight",
            "metrics_to_json", "load_metrics", "TICK_US"]
@@ -51,10 +51,15 @@ def _label(labels: List[str], i: int) -> str:
 
 
 def flight_to_perfetto(dump: Dict, path: Optional[str] = None, *,
-                       tick_us: float = TICK_US) -> Dict:
+                       tick_us: float = TICK_US, spans=None) -> Dict:
     """Convert a flight dump (``load_flight`` dict, or a live
     ``FlightRecorder.events()`` dict plus ``labels``) into Chrome-trace
-    JSON.  Writes to ``path`` when given; returns the trace dict."""
+    JSON.  Writes to ``path`` when given; returns the trace dict.
+
+    ``spans`` (a ``SpanSet`` from obs/spans.py) nests the causal
+    phase-level sub-spans under the op lanes — same pid/tid, ``cat``
+    "phase" — so Perfetto renders each op's protocol phases (and their
+    retry causes) inside the op slice."""
     labels = dump.get("labels", [])
     cols = {f: np.asarray(dump[f], np.int64) for f in FIELDS}
     n = len(cols["tick"])
@@ -120,6 +125,20 @@ def flight_to_perfetto(dump: Dict, path: Optional[str] = None, *,
                    "tid": 2 + region, "ts": t0 * tick_us,
                    "dur": max(horizon - t0, 1) * tick_us,
                    "args": {"region": region, "phase": "open"}})
+
+    # --- regime crossings from the hot-key monitor ---------------------
+    for i in np.nonzero(et == EV_REGIME)[0]:
+        ev.append({"name": f"regime: {_label(labels, int(cols['kind'][i]))}",
+                   "cat": "regime", "ph": "i", "s": "g",
+                   "pid": 2, "tid": 0,
+                   "ts": int(cols["tick"][i]) * tick_us,
+                   "args": {"theta_milli": int(cols["arg"][i]),
+                            "imbalance_milli": int(cols["lat"][i])}})
+
+    # --- causal phase sub-spans (opt-in: profiler attach) --------------
+    if spans is not None:
+        from .spans import spans_to_perfetto
+        ev.extend(spans_to_perfetto(spans, tick_us=tick_us))
 
     # process naming metadata
     for pid, name in ((1, "clients"), (2, "cluster")):

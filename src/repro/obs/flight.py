@@ -42,10 +42,10 @@ from .registry import Registry
 
 __all__ = ["FlightRecorder", "ClusterObs",
            "EV_BEGIN", "EV_SETTLE", "EV_FAULT", "EV_RECOVERY", "EV_MIG",
-           "EV_NAMES", "FIELDS"]
+           "EV_REGIME", "EV_NAMES", "FIELDS"]
 
-EV_BEGIN, EV_SETTLE, EV_FAULT, EV_RECOVERY, EV_MIG = range(5)
-EV_NAMES = ("begin", "settle", "fault", "recovery", "migration")
+EV_BEGIN, EV_SETTLE, EV_FAULT, EV_RECOVERY, EV_MIG, EV_REGIME = range(6)
+EV_NAMES = ("begin", "settle", "fault", "recovery", "migration", "regime")
 
 # ring columns (int64):
 #   tick    scheduler tick of the event
@@ -161,6 +161,11 @@ class ClusterObs:
         self._c_begun = self.registry.counter("op.begun")
         self._shard_cache: Dict[int, int] = {}
         self._hists: Dict[str, object] = {}
+        # streaming hot-key/skew monitor (obs/hotspot.py): opt-in via
+        # enable_hotspot() — the attached-hub overhead claim measures the
+        # hub alone; the "profiled" bench mode measures hub + monitor
+        self.hotspot = None
+        self._hot_handles = None
 
     # ------------------------------------------------------- hot path ----
     def _intern(self, label: str) -> int:
@@ -194,20 +199,31 @@ class ClusterObs:
     def fault(self, action: str, target: int, tick: int):
         self._pend.append((tick, EV_FAULT, -1, -1, self._intern(action),
                            -1, target, 0, 0, -1))
+        if len(self._pend) >= self.flush_every:
+            self.flush()
 
     def recovery(self, what: str, tick: int, *, cid: int = -1,
                  arg: int = -1, rtts: int = 0):
         self._pend.append((tick, EV_RECOVERY, cid, -1, self._intern(what),
                            -1, arg, int(rtts), 0, -1))
+        if len(self._pend) >= self.flush_every:
+            self.flush()
 
     def migration(self, phase: str, region: int, tick: int):
         self._pend.append((tick, EV_MIG, -1, -1, self._intern(phase),
                            -1, region, 0, 0, -1))
+        if len(self._pend) >= self.flush_every:
+            self.flush()
 
-    def heat_keys(self, buckets: np.ndarray):
+    def heat_keys(self, buckets: np.ndarray, keys32=None):
         """Vectorized heat update — ``buckets`` are RACE first-choice
-        bucket hashes (shadow.hash32_np(keys32, 1)); one add.at per wave."""
+        bucket hashes (shadow.hash32_np(keys32, 1)); one add.at per wave.
+        ``keys32`` (the UNhashed fold32 keys the buckets were derived
+        from) additionally feeds the hot-key monitor when one is
+        enabled — same wave, one extra batched sketch update."""
         self.heat.update(buckets)
+        if self.hotspot is not None and keys32 is not None:
+            self.hotspot.observe_keys(keys32)
 
     def heat_touch(self, bucket: int):
         self.heat.touch(bucket)
@@ -241,20 +257,24 @@ class ClusterObs:
             # local import: the obs package carries no module-level core
             # dependency; the bucket family must match the RACE index's
             from ..core.shadow import hash32_np
-            self.heat.update(hash32_np(np.asarray(hp, np.uint32), 1))
+            hpa = np.asarray(hp, np.uint32)
+            self.heat.update(hash32_np(hpa, 1))
+            if self.hotspot is not None:
+                self.hotspot.observe_keys(hpa)
         pend = self._pend
-        if not pend:
-            return
-        self._pend = []
-        rows = np.asarray(pend, np.int64)
-        self.flight.push_rows(rows)
-        et = rows[:, 1]
-        self._c_begun.value += int((et == EV_BEGIN).sum())
-        s = rows[et == EV_SETTLE]
-        if len(s):
-            self._observe_settles(s)
+        if pend:
+            self._pend = []
+            rows = np.asarray(pend, np.int64)
+            self.flight.push_rows(rows)
+            et = rows[:, 1]
+            self._c_begun.value += int((et == EV_BEGIN).sum())
+            s = rows[et == EV_SETTLE]
+            if len(s):
+                self._observe_settles(s)
+        if self.hotspot is not None and (hp or pend):
+            self._hotspot_tick()
 
-    def _observe_settles(self, s: np.ndarray):
+    def _observe_settles(self, s: np.ndarray):   # lint: allow-obs-loop (dim walk is bounded by live kinds/shards/MNs per flush, not ops)
         kinds, keys = s[:, 4], s[:, 5]
         lat, rtts = s[:, 7], s[:, 8]
         self._c_settled.value += len(s)
@@ -283,6 +303,8 @@ class ClusterObs:
                            "ticks").observe_many(lat[sel])
                 self._hist(f"op.lat_rtts.{dim}.{name}",
                            "rtts").observe_many(rtts[sel])
+        if self.hotspot is not None:
+            self.hotspot.observe_load(shards, mns)
 
     # ------------------------------------------------- per-MN sampling ---
     def on_fleet_tick(self, fleet, by_kind: Dict[str, list]):
@@ -324,6 +346,45 @@ class ClusterObs:
             bytes_w, verbs, qd, cpu - pc, util])
         self._mn_series.append_rows(rows)
 
+    # ------------------------------------------------ hot-key monitor ----
+    def enable_hotspot(self, **kw):
+        """Attach the streaming hot-key/skew monitor (obs/hotspot.py).
+        Idempotent; keyword args pass through to ``HotKeyMonitor``.
+        Surfaces ``hot.*`` gauges in the registry (fixed-point milli ints
+        — deterministic, same-seed snapshots stay byte-identical) and
+        emits typed ``regime`` rows into the flight ring on threshold
+        crossings."""
+        if self.hotspot is not None:
+            return self.hotspot
+        from .hotspot import HotKeyMonitor   # local: opt-in estimator
+        self.hotspot = HotKeyMonitor(**kw)
+        reg = self.registry
+        self._hot_handles = {
+            "theta": reg.gauge("hot.theta_milli"),
+            "imb": reg.gauge("hot.imbalance_milli"),
+            "regime": reg.gauge("hot.regime"),
+            "flips": reg.counter("hot.regime_flips"),
+        }
+        return self.hotspot
+
+    def _hotspot_tick(self):
+        """Refresh the monitor's derived gauges; record regime crossings
+        as EV_REGIME flight rows (ring-direct — flush() already drained
+        the tuple buffer when this runs)."""
+        hs = self.hotspot
+        ev = hs.evaluate()
+        h = self._hot_handles
+        h["theta"].set(int(round(hs.theta * 1000)))
+        h["imb"].set(int(round(max(hs.shard_imbalance,
+                                   hs.mn_imbalance) * 1000)))
+        h["regime"].set(0 if hs.regime == "uniform" else 1)
+        if ev is not None:
+            h["flips"].value += 1
+            self.flight.push_rows(np.asarray(
+                [(self.sched.tick, EV_REGIME, -1, -1,
+                  self._intern(ev["regime"]), -1, ev["theta_milli"],
+                  ev["imbalance_milli"], 0, -1)], np.int64))
+
     # ----------------------------------------------------------- dumps ---
     def dump(self, reason: str, *, force: bool = False) -> Optional[str]:
         """Dump the flight ring once per ``reason`` class (armed only when
@@ -343,6 +404,13 @@ class ClusterObs:
 
     def labels(self) -> List[str]:
         return list(self._labels)
+
+    def flight_events(self) -> Dict[str, np.ndarray]:
+        """The flight ring's retained events, **flushing first** — the
+        safe accessor for profilers/exporters (reading ``.flight.events()``
+        directly can miss the buffered tail between flush cadences)."""
+        self.flush()
+        return self.flight.events()
 
     def snapshot(self) -> Dict:
         self.flush()

@@ -26,8 +26,9 @@ from repro.core.race import bucket_pair
 def _ev(rows):
     """Build a detect_events-shaped column dict from row dicts."""
     defaults = dict(seq=0, tick=0, cid=0, op_id=0, phase=0, label=0,
-                    verb=WRITE, region=0, replica=0, off=0, n=1,
-                    epoch_issue=0, epoch_exec=0, ok=1, arg=0, val=0, old=0)
+                    cause=0, bg=0, verb=WRITE, region=0, replica=0, off=0,
+                    n=1, epoch_issue=0, epoch_exec=0, ok=1, arg=0, val=0,
+                    old=0)
     cols = {f: np.asarray([int(r.get(f, defaults[f])) for r in rows],
                           np.int64) for f in FIELDS}
     if "seq" not in rows[0]:

@@ -1,0 +1,475 @@
+"""Causal op profiler + hot-key monitor tests (repro.obs.spans /
+profile / hotspot): span-tree reconstruction against the verb ring, the
+RTT-conservation guarantee under faults / cutovers / wrapped rings,
+same-seed bit-identical profiles, the critical-path fold, the streaming
+top-k / zipf-θ / regime machinery, and the obs-hub flush hardening."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import CRASHED, OK, DMConfig, FaultPlan, FuseeCluster, Op
+from repro.obs import (EV_REGIME, FLAG_CRASHED, FLAG_OPEN, FLAG_PARTIAL,
+                       HotKeyMonitor, SpaceSaving, build_spans,
+                       critical_path_report, flight_to_perfetto,
+                       format_report, spans_from_cluster, zipf_theta)
+
+
+# ----------------------------------------------------------------- helpers
+def _drive(cl, n_clients, ops, *, batch=64):
+    """Submit (cid, Op) pairs through per-client stores on fleet ticks."""
+    fleet = cl.fleet()
+    stores = {c: cl.store(c, max_inflight=0) for c in range(n_clients)}
+    from repro.core import ClientCrashed
+    for i, (c, op) in enumerate(ops):
+        try:
+            stores[c].submit(op)
+        except ClientCrashed:
+            pass
+        if i % batch == batch - 1:
+            fleet.run()
+    fleet.run()
+    if cl.migrator.busy:
+        cl.migrator.drive()
+        fleet.run()
+    return fleet
+
+
+def _zipf_ops(cl, n_clients, n_keys, n_ops, *, theta=0.99, preload=True):
+    ops = []
+    if preload:
+        ops += [(k % n_clients, Op.insert(k, [k])) for k in range(n_keys)]
+    wl = cl.rng.stream("workload")
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    p = ranks ** (-theta)
+    p /= p.sum()
+    keys = wl.choice(n_keys, size=n_ops, p=p)
+    for i, k in enumerate(keys):
+        op = Op.update(int(k), [i]) if i % 2 else Op.get(int(k))
+        ops.append((i % n_clients, op))
+    return ops
+
+
+def _assert_conserved(ss):
+    """The exact per-op identity, checked op by op (not just in sum)."""
+    o = ss.ops
+    settled = o["rtts"] >= 0
+    assert (o["fg_spans"][settled] + o["untraced"][settled]
+            == o["rtts"][settled]).all()
+    assert (o["untraced"][settled] >= 0).all(), "over-attribution"
+
+
+# -------------------------------------------------- conservation under load
+def test_rtt_conservation_ycsba_storm_256_clients():
+    """The acceptance property: a seeded 256-client YCSB-A-shaped run
+    through a crash/recover/add-MN storm conserves RTTs exactly — every
+    settled op's foreground spans + untraced residual == its measured
+    total, with zero over-attribution."""
+    n_clients, n_keys = 256, 512
+    cl = FuseeCluster(DMConfig(num_mns=5, replication=3, index_shards=4,
+                               region_words=1 << 15, regions_per_mn=16),
+                      num_clients=n_clients, seed=42)
+    cl.attach_tracer(capacity=1 << 18)
+    plan = FaultPlan.storm(cl.rng.stream("faults"),
+                           clients=range(n_clients), mns=5,
+                           replication=3, n_client_crashes=2,
+                           n_mn_crashes=1, n_add_mns=1, remove_added=False,
+                           first_op=100, spacing=120, recover_delay=10)
+    cl.inject(plan)
+    _drive(cl, n_clients, _zipf_ops(cl, n_clients, n_keys, 1500))
+    prof = cl.profile()
+    c = prof["conservation"]
+    assert c["ok"], c
+    assert c["violations"] == 0
+    assert c["attributed_rtts"] + c["untraced_rtts"] == c["total_rtts"]
+    assert c["ops"] > 1000
+    _assert_conserved(prof["spans"])
+    # the storm produced typed retry causes, not just clean phases
+    causes = {r["cause"] for r in prof["rows"]}
+    assert causes - {""}, "no retry causes attributed under a storm"
+
+
+def test_mid_flight_crash_flags_not_misattributed():
+    """Ops in flight when their client crash-stops settle CRASHED (flag
+    carried on the op row) or stay open (FLAG_OPEN, excluded from
+    conservation); either way the settled population still conserves."""
+    n_clients = 4
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=3),
+                      num_clients=n_clients, seed=13)
+    cl.attach_tracer()
+    cl.inject(FaultPlan().crash_mn(2, after_ops=30)
+              .crash_client(0, after_ops=40))
+    ops = [(i % n_clients, Op.put(i, [i])) for i in range(120)]
+    _drive(cl, n_clients, ops, batch=16)
+    ss = spans_from_cluster(cl)
+    _assert_conserved(ss)
+    o = ss.ops
+    crashed = (o["flags"] & FLAG_CRASHED) > 0
+    assert crashed.any(), "client crash produced no CRASHED ops"
+    # crashed ops settled: they participate in (and pass) conservation
+    assert (o["rtts"][crashed] >= 0).all()
+    rep = critical_path_report(ss)
+    assert rep["conservation"]["ok"], rep["conservation"]
+
+
+def test_retries_across_add_mn_cutover_conserve():
+    """A migration window mid-run: dual-write spans and stale-epoch /
+    cas-lost retries must fold into the report without breaking the
+    conservation identity."""
+    n_clients = 8
+    cl = FuseeCluster(DMConfig(num_mns=2, replication=2, index_shards=8,
+                               region_words=1 << 15, regions_per_mn=8),
+                      num_clients=n_clients, seed=3)
+    cl.attach_tracer(capacity=1 << 17)
+    fleet = cl.fleet()
+    sched = cl.scheduler
+    backends = [cl.store(c, max_inflight=0).backend
+                for c in range(n_clients)]
+    k, added = 0, False
+    while k < 300 or cl.migrator.busy or sched.has_work():
+        for c in range(n_clients):
+            if k < 300 and sched.inflight(c) < 4:
+                backends[c].submit_many([Op.put(k, [k])])
+                k += 1
+        if k >= 100 and not added:
+            cl.add_mn(wait=False)
+            added = True
+        fleet.tick()
+    ss = spans_from_cluster(cl)
+    _assert_conserved(ss)
+    rep = critical_path_report(ss)
+    assert rep["conservation"]["ok"], rep["conservation"]
+    labels = {(r["phase"], r["cause"]) for r in rep["rows"]}
+    assert any(c == "mig_dual_write" for _p, c in labels), \
+        "cutover window left no dual-write attribution"
+
+
+def test_wrapped_verb_ring_partial_but_flagged():
+    """A verb ring too small for the run: span trees are partial, and the
+    profiler says so (FLAG_PARTIAL, partial_ops) instead of silently
+    mis-attributing — untraced residuals stay exact and non-negative."""
+    n_clients = 4
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=3),
+                      num_clients=n_clients, seed=17)
+    tr = cl.attach_tracer(capacity=256)          # will wrap many times
+    ops = [(i % n_clients, Op.put(i, [i])) for i in range(200)]
+    ops += [(i % n_clients, Op.get(i % 200)) for i in range(200)]
+    _drive(cl, n_clients, ops, batch=16)
+    assert tr.dropped > 0
+    ss = spans_from_cluster(cl)
+    assert ss.trace_dropped > 0
+    _assert_conserved(ss)
+    o = ss.ops
+    partial = (o["flags"] & FLAG_PARTIAL) > 0
+    assert partial.any(), "wrapped ring produced no FLAG_PARTIAL ops"
+    rep = critical_path_report(ss)
+    assert rep["conservation"]["partial_ops"] == int(partial.sum())
+    assert rep["conservation"]["ok"], rep["conservation"]
+    assert rep["totals"]["trace_dropped"] == ss.trace_dropped
+
+
+def test_same_seed_profiles_bit_identical():
+    def one():
+        cl = FuseeCluster(DMConfig(num_mns=4, replication=3, index_shards=4),
+                          num_clients=8, seed=29)
+        cl.attach_tracer(capacity=1 << 16)
+        cl.inject(FaultPlan().crash_mn(3, after_ops=60))
+        _drive(cl, 8, _zipf_ops(cl, 8, 128, 400))
+        prof = cl.profile()
+        prof.pop("spans")                       # arrays: compared via rows
+        prof.pop("tick_phases", None)           # wall clock: never compared
+        return json.dumps(prof, sort_keys=True)
+    assert one() == one()
+
+
+# ------------------------------------------------------------- span units
+def test_build_spans_empty_trace_all_untraced():
+    """No tracer rows at all: every settled op is one untraced residual;
+    conservation still holds by construction."""
+    cl = FuseeCluster(DMConfig(num_mns=3, replication=2), num_clients=2,
+                      seed=1)
+    kv = cl.store(0)
+    for i in range(10):
+        kv.put(i, [i])
+    kv.drain()
+    obs = cl.obs
+    ev = obs.flight_events()
+    ss = build_spans({f: np.zeros(0, np.int64)
+                      for f in ("seq", "tick", "cid", "op_id", "phase",
+                                "label", "cause", "bg", "ok")},
+                     [], ev, obs.labels())
+    assert ss.n_spans == 0 and ss.n_ops == 10
+    _assert_conserved(ss)
+    assert (ss.ops["untraced"] == ss.ops["rtts"]).all()
+    rep = critical_path_report(ss)
+    assert rep["conservation"]["ok"]
+    assert all(r["phase"] == "(untraced)" for r in rep["rows"])
+
+
+def test_open_ops_flagged_and_excluded():
+    cl = FuseeCluster(DMConfig(num_mns=3, replication=2), num_clients=2,
+                      seed=2)
+    cl.attach_tracer()
+    kv = cl.store(0)
+    for i in range(6):
+        kv.put(i, [i])
+    kv.drain()
+    # leave one op genuinely in flight (submitted, never drained)
+    cl.store(1).submit(Op.put(99, [99]))
+    for _ in range(2):                          # a couple of beats only
+        cl.scheduler.step(1)
+    ss = spans_from_cluster(cl)
+    o = ss.ops
+    open_ops = (o["flags"] & FLAG_OPEN) > 0
+    assert open_ops.sum() == 1
+    assert (o["rtts"][open_ops] == -1).all()
+    rep = critical_path_report(ss)
+    assert rep["totals"]["open_ops"] == 1
+    assert rep["conservation"]["ops"] == int((~open_ops).sum())
+    tree = ss.op_tree(1, int(o["op_id"][open_ops][0]))
+    assert tree is not None and tree["rtts"] == -1
+
+
+def test_op_tree_shape_and_format_report():
+    cl = FuseeCluster(DMConfig(num_mns=3, replication=2), num_clients=2,
+                      seed=5)
+    cl.attach_tracer()
+    kv = cl.store(0)
+    kv.insert(7, [7])
+    kv.get(7)
+    kv.drain()
+    ss = spans_from_cluster(cl)
+    o = ss.ops
+    row = int(np.flatnonzero(o["rtts"] >= 0)[0])
+    tree = ss.op_tree(int(o["cid"][row]), int(o["op_id"][row]))
+    assert tree["spans"], "settled op reconstructed with no spans"
+    phases = [s["phase"] for s in tree["spans"]]
+    assert phases == sorted(phases), "spans not in phase order"
+    assert all(s["verbs"] >= 1 for s in tree["spans"])
+    txt = format_report(critical_path_report(ss), top=3)
+    assert "conservation: OK" in txt
+    assert txt.count("\n") <= 3 + 2 + 1        # header + rule + rows + tail
+
+
+def test_spans_nest_in_perfetto_export(tmp_path):
+    cl = FuseeCluster(DMConfig(num_mns=3, replication=2), num_clients=2,
+                      seed=8)
+    cl.attach_tracer()
+    kv = cl.store(0)
+    for i in range(12):
+        kv.put(i, [i])
+    kv.drain()
+    ss = spans_from_cluster(cl)
+    obs = cl.obs
+    trace = flight_to_perfetto({"labels": obs.labels(),
+                                **obs.flight_events(),
+                                "dropped": obs.flight.dropped},
+                               str(tmp_path / "t.json"), spans=ss)
+    evs = trace["traceEvents"]
+    phase_spans = [e for e in evs if e.get("cat") == "phase"
+                   and e.get("ph") == "X"]
+    op_spans = {(e["tid"], e["args"]["op_id"]): e for e in evs
+                if e.get("cat") == "op" and "op_id" in e.get("args", {})}
+    assert phase_spans
+    for e in phase_spans:
+        parent = op_spans.get((e["tid"], e["args"]["op_id"]))
+        assert parent is not None
+        # nested: strictly inside the parent slice (time containment)
+        assert parent["ts"] <= e["ts"]
+        assert e["ts"] + e["dur"] <= parent["ts"] + parent["dur"] + 1e-9
+
+
+# --------------------------------------------------------------- hotspot
+def test_space_saving_exact_under_capacity():
+    s = SpaceSaving(capacity=16)
+    keys = [1] * 5 + [2] * 3 + [3] * 2 + [4]
+    s.update(np.array(keys))
+    s.update(np.array([1, 1, 5]))
+    top = s.top(3)
+    assert top[0] == (1, 7, 0)
+    assert top[1] == (2, 3, 0)
+    assert s.n_seen == len(keys) + 3
+
+
+def test_space_saving_eviction_error_bound():
+    s = SpaceSaving(capacity=4)
+    rng = np.random.default_rng(0)
+    true = {k: 0 for k in range(64)}
+    # heavy head + noise tail, streamed in batches like the flush cadence
+    for _ in range(30):
+        batch = np.concatenate([np.repeat([0, 1], 10),
+                                rng.integers(2, 64, size=8)])
+        for k in batch:
+            true[int(k)] += 1
+        s.update(batch)
+    top = dict((k, c) for k, c, _e in s.top(2))
+    assert set(top) == {0, 1}                   # heavy hitters survive
+    for k, c, e in s.top():
+        assert true[k] <= c <= true[k] + e      # the space-saving bound
+
+
+def test_space_saving_deterministic():
+    def run():
+        s = SpaceSaving(capacity=8)
+        rng = np.random.default_rng(7)
+        for _ in range(20):
+            s.update(rng.integers(0, 40, size=32))
+        return s.top()
+    assert run() == run()
+
+
+def test_zipf_theta_estimator_contract():
+    ranks = np.arange(1, 129, dtype=np.float64)
+    counts = np.round(1e6 * ranks ** -0.99)
+    assert abs(zipf_theta(counts) - 0.99) < 0.05
+    assert zipf_theta(np.full(128, 50.0)) == pytest.approx(0.0, abs=0.05)
+    assert zipf_theta([9, 5, 3]) == 0.0          # unsaturated head: no fit
+    assert zipf_theta(np.zeros(20)) == 0.0
+
+
+def test_hotkey_monitor_regime_hysteresis():
+    m = HotKeyMonitor(top_k=8, capacity=32, theta_hi=0.6,
+                      imb_hi=2.0, imb_lo=1.4)
+    assert m.evaluate() is None and m.regime == "uniform"
+    # skewed stream -> one transition, then stable (no flapping)
+    rng = np.random.default_rng(1)
+    ranks = np.arange(1, 65, dtype=np.float64)
+    p = ranks ** -1.2
+    p /= p.sum()
+    ev = None
+    for _ in range(12):
+        m.observe_keys(rng.choice(64, size=256, p=p))
+        e = m.evaluate()
+        ev = ev or e
+    assert ev is not None and ev["regime"] == "skewed"
+    assert m.regime == "skewed" and m.flips == 1
+    assert m.evaluate() is None                  # no repeat event
+    snap = m.snapshot()
+    assert snap["regime"] == "skewed" and snap["regime_flips"] == 1
+    json.dumps(snap)                             # JSON-pure
+
+
+def test_hotkey_monitor_imbalance_ewma():
+    m = HotKeyMonitor(alpha=0.5)
+    for _ in range(6):
+        m.observe_load(np.array([0, 0, 0, 1]), np.array([2, 2, 2, 2]))
+    assert m.shard_imbalance > 1.4              # 3:1 shard split
+    assert m.mn_imbalance == 1.0                # single live MN dim
+    m2 = HotKeyMonitor()
+    assert m2.shard_imbalance == 1.0            # no data: balanced
+
+
+def test_planted_zipf_top32_recovered_within_2k_ticks():
+    """The acceptance bound: >=90% of the true top-32 keys of a planted
+    zipf(0.99) stream are in the monitor's top-32 within 2k ticks."""
+    n_clients, n_keys = 16, 4096
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=3, index_shards=4,
+                               region_words=1 << 16, regions_per_mn=16),
+                      num_clients=n_clients, seed=23)
+    cl.enable_hotspot()
+    fleet = cl.fleet()
+    sched = cl.scheduler
+    for k in range(64):                          # small warm set
+        sched.submit(k % n_clients, "insert", k, [k])
+    fleet.run()
+    wl = cl.rng.stream("workload")
+    ranks = np.arange(1, n_keys + 1, dtype=np.float64)
+    p = ranks ** (-0.99)
+    p /= p.sum()
+    tick0 = sched.tick
+    while sched.tick - tick0 < 2000:
+        keys = wl.choice(n_keys, size=n_clients, p=p)
+        for c, k in enumerate(keys):
+            sched.submit(c, "search", int(k), None)
+        fleet.run()
+    cl.obs.flush()
+    got = {k for k, _c, _e in cl.obs.hotspot.sketch.top(32)}
+    true_top = set(range(32))                   # fold32(k) == k for small k
+    recovered = len(got & true_top) / 32
+    assert recovered >= 0.90, f"only {recovered:.0%} of top-32 recovered"
+    # head-only θ under merge-floored tail counts underestimates the
+    # planted 0.99, but must still be far from a uniform stream's ~0
+    assert cl.metrics()["hotspot"]["theta_milli"] > 350
+
+
+def test_regime_event_lands_in_flight_ring():
+    n_clients = 8
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=3),
+                      num_clients=n_clients, seed=31)
+    cl.enable_hotspot(theta_hi=0.3, imb_hi=1.5)  # eager thresholds
+    _drive(cl, n_clients, _zipf_ops(cl, n_clients, 128, 600, theta=1.2))
+    ev = cl.obs.flight_events()
+    regimes = ev["etype"] == EV_REGIME
+    assert regimes.any(), "no regime event recorded"
+    labels = cl.obs.labels()
+    kinds = {labels[int(k)] for k in ev["kind"][regimes]}
+    assert "skewed" in kinds
+    m = cl.metrics()
+    assert m["gauges"]["hot.regime"] == 1
+    assert m["counters"]["hot.regime_flips"] >= 1
+    # exported as instants on the cluster lane
+    trace = flight_to_perfetto({"labels": labels, **ev, "dropped": 0})
+    regs = [e for e in trace["traceEvents"] if e.get("cat") == "regime"]
+    assert regs and all(e["ph"] == "i" for e in regs)
+    assert all("theta_milli" in e["args"] for e in regs)
+
+
+def test_hotspot_off_keeps_snapshots_identical():
+    """The monitor is opt-in: a run with it never enabled produces the
+    same metrics JSON as before the feature existed (no hot.* keys)."""
+    cl = FuseeCluster(DMConfig(num_mns=4, replication=3), num_clients=3,
+                      seed=11)
+    kv = cl.store(0)
+    for i in range(30):
+        kv.put(f"k{i}", f"v{i}")
+    kv.drain()
+    m = cl.metrics()
+    assert "hotspot" not in m
+    assert not any(k.startswith("hot.") for k in m["counters"])
+    assert not any(k.startswith("hot.") for k in m["gauges"])
+
+
+# ------------------------------------------------- obs-hub flush hardening
+def test_pending_heat_and_events_survive_detach():
+    """The flush-hardening regression: scalar heat touches and op events
+    buffered between flush cadences must land in the sketch / ring when
+    the hub detaches or a profile is read — never silently dropped."""
+    cl = FuseeCluster(DMConfig(num_mns=3, replication=2), num_clients=2,
+                      seed=4)
+    obs = cl.obs
+    for i in range(10):                          # < flush_every: buffered
+        obs.heat_key64(i)
+    assert obs._heat_pend
+    cl.enable_hotspot()
+    cl.detach_obs()                              # must drain, not drop
+    assert not obs._heat_pend
+    assert sum(cl.metrics()["heat"]["cache.heat"]) >= 10
+    assert obs.hotspot.sketch.n_seen == 10
+
+
+def test_cluster_events_flush_at_threshold():
+    """fault/recovery/migration appends respect the flush cadence: the
+    tuple buffer never grows beyond flush_every rows."""
+    cl = FuseeCluster(DMConfig(num_mns=3, replication=2), num_clients=2,
+                      seed=6)
+    obs = cl.obs
+    obs.flush()
+    for i in range(obs.flush_every + 5):
+        obs.fault("synthetic", i, tick=i)
+    assert len(obs._pend) < obs.flush_every
+    ev = obs.flight_events()
+    assert (ev["etype"] == 2).sum() == obs.flush_every + 5  # EV_FAULT
+
+
+def test_flight_events_accessor_sees_buffered_tail():
+    cl = FuseeCluster(DMConfig(num_mns=3, replication=2), num_clients=2,
+                      seed=9)
+    kv = cl.store(0)
+    for i in range(5):
+        kv.put(i, [i])
+    kv.drain()
+    obs = cl.obs
+    assert obs._pend                             # tail still buffered
+    raw = obs.flight.events()["etype"]
+    via = obs.flight_events()["etype"]
+    assert len(via) > len(raw)                   # accessor flushed first
